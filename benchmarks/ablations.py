@@ -1,0 +1,62 @@
+"""Paper Figures 6-8: the three ablation studies.
+
+- Fig 6 (Decaying Mask): decay recipe with vs without its dense warmup phase
+  (controlled task; the effect is recipe-structural).
+- Fig 7 (phase length): STEP with fixed switch points across training (LM).
+- Fig 8 (why freeze v): STEP vs STEP-with-live-variance in phase 2 (LM).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, train_lm_recipe, train_mlp_recipe
+
+
+def fig6_decay_dense_phase(steps=400) -> dict:
+    out = {}
+    for label, dense_until in (("with_dense", int(0.2 * steps)), ("no_dense", 0)):
+        r = train_mlp_recipe("decay", steps=steps, seed=0, dense_until=dense_until)
+        out[label] = r["sparse_eval_loss"]
+        emit(
+            f"ablation_decay/{label}",
+            r["us_per_step"],
+            f"sparse_eval_loss={r['sparse_eval_loss']:.4f}",
+        )
+    return out
+
+
+def fig7_phase_length(steps=120) -> dict:
+    out = {}
+    for frac in (0.1, 0.5, 0.8):
+        r = train_lm_recipe("step", steps=steps, seed=0, switch_at=int(frac * steps))
+        out[frac] = r["sparse_eval_loss"]
+        emit(
+            f"ablation_phase_length/{frac:.2f}",
+            r["us_per_step"],
+            f"sparse_eval_loss={r['sparse_eval_loss']:.4f}",
+        )
+    return out
+
+
+def fig8_frozen_variance(steps=120) -> dict:
+    out = {}
+    for label, live in (("frozen_v", False), ("live_v", True)):
+        r = train_lm_recipe(
+            "step", steps=steps, seed=0, switch_at=int(0.25 * steps),
+            update_v_in_phase2=live,
+        )
+        out[label] = r["sparse_eval_loss"]
+        emit(
+            f"ablation_variance/{label}",
+            r["us_per_step"],
+            f"sparse_eval_loss={r['sparse_eval_loss']:.4f}",
+        )
+    return out
+
+
+def run() -> None:
+    fig6_decay_dense_phase()
+    fig7_phase_length()
+    fig8_frozen_variance()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Paper Table 1: switching-point quality — Eq.(10) vs Eq.(11) vs AutoSwitch.
+
+Profiles ||v_t||_2, ||v_t||_1 and ||v_{t+1}-v_t||_1 along a dense-Adam
+trajectory (exactly the paper's protocol), lets each criterion pick its t0,
+then scores each by the average variance change over the following window:
+score(t0) = W^{-1} * sum_{t=t0..t0+W} ||v_{t+1} - v_t||_1 (lower = better
+preconditioning). The paper uses W=1000 on full tasks; we scale W to the
+short CPU trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as core
+from benchmarks.common import emit
+from repro.data import SyntheticTask
+from repro.optim.adam import adam
+from repro.optim.base import apply_updates
+
+
+def profile_trajectory(steps=600, seed=0, b2=0.99):
+    task = SyntheticTask(seed=seed)
+    opt = adam(3e-3, b2=b2)
+    params = task.student_init(jax.random.PRNGKey(seed))
+    state = opt.init(params)
+    l2, l1, dl1, zs = [], [], [], []
+    d = sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+    @jax.jit
+    def one(params, state, x, y):
+        g = jax.grad(lambda p: task.loss(p, x, y))(params)
+        v_old = state.v
+        u, state = opt.update(g, state, params)
+        params = apply_updates(params, u)
+        diff = sum(
+            jnp.sum(jnp.abs(a - b))
+            for a, b in zip(
+                jax.tree_util.tree_leaves(state.v), jax.tree_util.tree_leaves(v_old)
+            )
+        )
+        n2 = jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree_util.tree_leaves(state.v)))
+        n1 = sum(jnp.sum(jnp.abs(x)) for x in jax.tree_util.tree_leaves(state.v))
+        return params, state, diff, n2, n1
+
+    for t in range(steps):
+        x, y = task.batch(t, 64)
+        params, state, diff, n2, n1 = one(params, state, x, y)
+        l2.append(float(n2)); l1.append(float(n1)); dl1.append(float(diff))
+        zs.append(float(diff) / d)
+    return np.array(l2), np.array(l1), np.array(dl1), np.array(zs)
+
+
+def score(dl1: np.ndarray, t0: int, window: int = 100) -> float:
+    end = min(len(dl1), t0 + window)
+    if end <= t0:
+        return float("nan")
+    return float(dl1[t0:end].mean())
+
+
+def run(steps=600, b2=0.99) -> dict:
+    t_start = time.perf_counter()
+    l2, l1, dl1, zs = profile_trajectory(steps=steps, b2=b2)
+    us = (time.perf_counter() - t_start) / steps * 1e6
+
+    t_eq10 = core.criterion_relative_norm(l2)
+    t_eq11 = core.criterion_staleness(l1, beta2=b2)
+    asw_cfg = core.AutoSwitchConfig(beta2=b2, eps=np.median(zs[-50:]) * 1.5)
+    t_as = core.criterion_autoswitch_offline(zs, asw_cfg)
+
+    out = {}
+    for name, t0 in [("eq10_relative_norm", t_eq10),
+                     ("eq11_staleness", t_eq11),
+                     ("autoswitch", t_as)]:
+        s = score(dl1, t0)
+        out[name] = (t0, s)
+        emit(f"autoswitch/{name}", us, f"t0={t0};post_switch_drift={s:.5f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

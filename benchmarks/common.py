@@ -1,0 +1,186 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as core
+from repro.data import DataIterator, SyntheticLMDataset, SyntheticTask
+from repro.train import Trainer, TrainerConfig
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-time per call in microseconds (jit-compiled fns)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def train_mlp_recipe(
+    kind: str,
+    *,
+    n: int = 2,
+    m: int = 4,
+    steps: int = 400,
+    seed: int = 0,
+    lr: float = 3e-3,
+    b2: float = 0.99,
+    optimizer: str = "step",  # "step" (2-phase adam) | "adam" | "sgd"
+    layer_cfg: core.SparsityConfig | None = None,
+    switch_at: int | None = None,
+    update_v_in_phase2: bool = False,
+    t_min_frac: float = 0.1,
+    t_max_frac: float = 0.5,
+    task: SyntheticTask | None = None,
+    **recipe_kw,
+) -> dict:
+    """Train the teacher-student task with one recipe; return metrics.
+
+    This is the controlled setting used for every paper-figure analogue: the
+    teacher is *exactly* n:m-sparse, so dense accuracy is reachable under the
+    mask and any gap is an optimization (not capacity) effect — the paper's
+    regime.
+    """
+    task = task or SyntheticTask(seed=seed, n=n, m=m)
+    scfg = core.StepConfig(
+        learning_rate=lr,
+        b2=b2,
+        autoswitch=core.AutoSwitchConfig(
+            eps=5e-5,
+            window=min(100, int(round(1 / (1 - b2)))),
+            t_min=int(t_min_frac * steps),
+            t_max=int(t_max_frac * steps),
+        ),
+        switch_at=switch_at,
+        update_v_in_phase2=update_v_in_phase2,
+    )
+    if optimizer == "adam":
+        # plain Adam = STEP that never switches
+        scfg = core.StepConfig(learning_rate=lr, b2=b2, switch_at=10**9)
+    defaults = dict(
+        prune_at=int(0.3 * steps),
+        dense_until=int(0.2 * steps),
+        decay_interval=max(1, int(0.1 * steps)),
+    )
+    defaults.update(recipe_kw)
+    recipe = core.make_recipe(
+        kind,
+        layer_cfg or core.SparsityConfig(default=core.NMSparsity(n, m)),
+        **defaults,
+    )
+
+    def loss_fn(p, batch):
+        x, y = batch
+        l = task.loss(p, x, y)
+        return l, {}
+
+    jax.clear_caches()  # long benchmark processes exhaust XLA's dylib space
+    data = DataIterator(batch_fn=task.batch, batch_size=64, prefetch=0)
+    tr = Trainer(
+        loss_fn, recipe, scfg, data,
+        TrainerConfig(total_steps=steps, log_every=0, ckpt_every=0),
+    )
+    t0 = time.perf_counter()
+    state, _ = tr.run(task.student_init(jax.random.PRNGKey(seed)), seed=seed)
+    wall = time.perf_counter() - t0
+    xe, ye = task.batch(10**6, 2048)
+    sparse_loss = float(task.loss(recipe.export_sparse(state.params), xe, ye))
+    dense_loss = float(task.loss(state.params, xe, ye))
+    return {
+        "kind": kind,
+        "sparse_eval_loss": sparse_loss,
+        "dense_eval_loss": dense_loss,
+        "phase2": bool(getattr(state.opt, "phase2", False)),
+        "t0": int(getattr(state.opt, "t0", 0)),
+        "wall_s": wall,
+        "us_per_step": wall / steps * 1e6,
+        "state": state,
+        "recipe": recipe,
+        "task": task,
+    }
+
+
+def train_lm_recipe(
+    kind: str,
+    *,
+    n: int = 2,
+    m: int = 4,
+    steps: int = 120,
+    seed: int = 0,
+    layer_cfg: core.SparsityConfig | None = None,
+    switch_at: int | None = None,
+    update_v_in_phase2: bool = False,
+    **recipe_kw,
+) -> dict:
+    """GPT-2-family LM on the synthetic Markov corpus — the paper's actual
+    regime (attention model + Adam + noisy gradients), used for the
+    aggressive-ratio sweep, layer-wise table, and phase ablations."""
+    from repro.configs import get_config
+    from repro.models.model import TransformerLM
+
+    cfg = get_config("gpt2-paper", smoke=True)
+    model = TransformerLM(cfg)
+    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=32, seed=42, n_states=16)
+
+    def loss_fn(p, batch):
+        return model.loss(p, batch, chunk=16)
+
+    defaults = dict(
+        prune_at=int(0.3 * steps),
+        dense_until=int(0.2 * steps),
+        decay_interval=max(1, int(0.1 * steps)),
+    )
+    defaults.update(recipe_kw)
+    recipe = core.make_recipe(
+        kind, layer_cfg or core.SparsityConfig(default=core.NMSparsity(n, m)),
+        **defaults,
+    )
+    scfg = core.StepConfig(
+        learning_rate=3e-3,
+        b2=0.98,
+        autoswitch=core.AutoSwitchConfig(
+            eps=2e-5, window=25, t_min=int(0.15 * steps), t_max=int(0.5 * steps)
+        ),
+        switch_at=switch_at,
+        update_v_in_phase2=update_v_in_phase2,
+    )
+    import jax as _jax
+
+    _jax.clear_caches()  # long benchmark processes exhaust XLA's dylib space
+    data = DataIterator(batch_fn=ds.batch, batch_size=8, prefetch=0)
+    tr = Trainer(loss_fn, recipe, scfg, data,
+                 TrainerConfig(total_steps=steps, log_every=0, ckpt_every=0))
+
+    t0 = time.perf_counter()
+    state, _ = tr.run(model.init(_jax.random.PRNGKey(seed)), seed=seed)
+    wall = time.perf_counter() - t0
+    eval_batch = ds.batch(99_999, 16)
+    loss, _ = model.loss(recipe.export_sparse(state.params), eval_batch, chunk=16)
+    return {
+        "kind": kind,
+        "sparse_eval_loss": float(loss),
+        "phase2": bool(getattr(state.opt, "phase2", False)),
+        "t0": int(getattr(state.opt, "t0", 0)),
+        "us_per_step": wall / steps * 1e6,
+        "state": state,
+        "recipe": recipe,
+    }

@@ -1,0 +1,198 @@
+"""§Perf hillclimb harness: lower a cell under a named variant, re-analyze.
+
+Each variant is a dict of knobs consumed by the dryrun lowering functions:
+  fsdp        — ZeRO-3 weight sharding on the data axis (vs replicated+TP)
+  seq_shard   — sequence-parallel residual stream
+  ep_shard    — EP sharding constraint on the MoE dispatch buffer
+  remat       — activation checkpointing of the scan body
+  serve_compressed — model the N:M-compressed weight stream (decode memory
+                     term; numerics unchanged, accounting analytic)
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell starcoder2-3b:train_4k \
+      --variant baseline --variant no_fsdp ...
+Results append to perf_log.json for EXPERIMENTS.md §Perf.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.core as core
+from repro.configs import get_config, SHAPES
+from repro.launch import dryrun as D
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16, make_production_mesh
+from repro.models import model as M
+from repro.utils import hlo_cost as HC
+from repro.utils import hlo_analysis as H
+
+PERF_LOG = os.path.join(os.path.dirname(__file__), "..", "perf_log.json")
+
+
+def _ep_constraint(mesh):
+    from repro.distributed.sharding import _dp
+
+    dp = _dp(mesh)
+
+    def fn(x):
+        if x.ndim == 2:  # (T, d) tokens: dp-sharded, replicated over model
+            spec = P(dp, None)
+        else:  # (E, C, d) buffers: experts over model (EP)
+            spec = P("model", *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return fn
+
+
+def lower_variant(arch: str, shape_name: str, mesh, knobs: dict):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return _lower_train_variant(cfg, shape, mesh, knobs)
+    if shape.kind == "decode":
+        return D.lower_decode(cfg, shape, mesh, fsdp=knobs.get("fsdp", False),
+                              kv_shard=knobs.get("kv_shard", "seq"))
+    return D.lower_prefill(cfg, shape, mesh, seq_shard=knobs.get("seq_shard", True),
+                           fsdp=knobs.get("fsdp", True))
+
+
+def _lower_train_variant(cfg, shape, mesh, knobs):
+    from repro.core.step_optimizer import StepConfig, step_optimizer
+    from repro.train.loop import make_train_step
+    from repro.distributed.sharding import (
+        batch_pspecs, shardings_for, state_pspecs,
+    )
+
+    recipe = D.make_recipe(cfg, *knobs.get("nm", (2, 4)))
+    step_cfg = StepConfig(learning_rate=1e-4)
+    opt = step_optimizer(step_cfg)
+    bc = (
+        D._block_constraint(mesh, seq_axis=knobs.get("seq_shard", True))
+        if knobs.get("block_constraint", True)
+        else None
+    )
+    ep = _ep_constraint(mesh) if knobs.get("ep_shard", False) else None
+    lc = None
+    if knobs.get("shard_logits", False):
+        from repro.distributed.sharding import _dp
+
+        dpax = _dp(mesh)
+
+        def lc(x):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dpax, None, "model"))
+            )
+
+    def loss(p, batch):
+        return M.loss_fn(
+            p, cfg, batch,
+            remat=knobs.get("remat", True),
+            block_constraint=bc,
+            ep_constraint=ep,
+            logits_constraint=lc,
+        )
+
+    step = make_train_step(loss, recipe, opt, grad_clip=1.0)
+    state_abs = D.abstract_train_state(cfg, recipe, step_cfg)
+    specs = D.input_specs(cfg, shape)
+    state_sh = shardings_for(
+        mesh, state_abs, state_pspecs(mesh, state_abs, fsdp=knobs.get("fsdp", True))
+    )
+    batch_sh = shardings_for(mesh, specs["batch"], batch_pspecs(mesh, specs["batch"]))
+    fn = jax.jit(step, in_shardings=(state_sh, batch_sh), donate_argnums=0)
+    return fn.lower(state_abs, specs["batch"])
+
+
+VARIANTS = {
+    "baseline": {},
+    "gather_moe": {},          # moe gather-only dispatch (code change, rerun)
+    "shard_logits": {"shard_logits": True},
+    "shard_logits_no_fsdp": {"shard_logits": True, "fsdp": False},
+    "kv_seq_shard": {"kv_shard": "seq"},
+    "kv_feature_shard": {"kv_shard": "feature"},
+    "gather_moe_ep": {"ep_shard": True},
+    "no_constraint": {"block_constraint": False},
+    "no_constraint_no_fsdp": {"block_constraint": False, "fsdp": False},
+    "no_fsdp": {"fsdp": False},
+    "no_seq_shard": {"seq_shard": False},
+    "no_remat": {"remat": False},
+    "ep_shard": {"ep_shard": True},
+    "ep_shard_no_fsdp": {"ep_shard": True, "fsdp": False},
+    "no_fsdp_no_seq": {"fsdp": False, "seq_shard": False},
+    "decode_fsdp": {"fsdp": True},  # decode: FSDP'd weights (gather per step)
+}
+
+
+def run_variant(arch: str, shape_name: str, variant: str, multi_pod=False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    knobs = VARIANTS[variant]
+    t0 = time.time()
+    with mesh:
+        lowered = lower_variant(arch, shape_name, mesh, knobs)
+        compiled = lowered.compile()
+    text = compiled.as_text()
+    walk = HC.analyze(text)
+    mem = H.memory_analysis_dict(compiled)
+    per_dev_resident = (
+        mem.get("argument_size_in_bytes", 0)
+        + mem.get("temp_size_in_bytes", 0)
+        - mem.get("alias_size_in_bytes", 0)
+    )
+    out = {
+        "cell": f"{arch}|{shape_name}",
+        "variant": variant,
+        "knobs": knobs,
+        "compile_s": round(time.time() - t0, 1),
+        "flops_dev": walk["flops"],
+        "collective_bytes_dev": walk["collective_total"],
+        "collective_per_kind": walk["collective_bytes"],
+        "resident_bytes_dev": per_dev_resident,
+        "compute_term_s": walk["flops"] / PEAK_FLOPS_BF16,
+        "collective_term_s": walk["collective_total"] / ICI_BW_PER_LINK,
+    }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", action="append", default=None)
+    ap.add_argument("--note", default="")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    variants = args.variant or ["baseline"]
+    log = []
+    if os.path.exists(PERF_LOG):
+        log = json.load(open(PERF_LOG))
+    for v in variants:
+        print(f"[hillclimb] {args.cell} variant={v} ...", flush=True)
+        try:
+            rep = run_variant(arch, shape, v)
+            rep["note"] = args.note
+            print(
+                f"  flops/dev={rep['flops_dev']:.3e} "
+                f"coll/dev={rep['collective_bytes_dev']/1e9:.2f}GB "
+                f"resident={rep['resident_bytes_dev']/1e9:.2f}GB "
+                f"compute_t={rep['compute_term_s']:.3f}s "
+                f"coll_t={rep['collective_term_s']:.3f}s",
+                flush=True,
+            )
+        except Exception as e:
+            rep = {"cell": args.cell, "variant": v, "error": f"{type(e).__name__}: {e}"}
+            print(f"  ERROR {rep['error'][:200]}", flush=True)
+        log.append(rep)
+        json.dump(log, open(PERF_LOG, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

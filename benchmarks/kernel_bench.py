@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks: nm_mask / nm_spmm vs jnp reference.
+
+CPU wall-times of the jitted *reference* paths (the production CPU path),
+plus interpret-mode correctness deltas for the Pallas kernels (TPU-target
+timing is structural — see §Roofline; interpret mode timing is meaningless
+and not reported as perf).
+
+Derived column reports the analytic HBM-traffic ratio of the compressed
+serving matmul — the quantity the TPU kernel exists to win (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import masking
+from repro.kernels import ref
+from repro.kernels.nm_mask import nm_mask_apply_pallas
+from repro.kernels.nm_spmm import nm_spmm_pallas
+
+
+def bench_mask(shapes=((1024, 1024), (4096, 1024)), nm=((2, 4), (1, 8))):
+    for shape in shapes:
+        for n, m in nm:
+            w = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+            f = jax.jit(functools.partial(masking.nm_mask_and_apply, n=n, m=m))
+            us = time_fn(f, w)
+            # correctness of the Pallas kernel against this reference
+            masked, mask = nm_mask_apply_pallas(w, n, m, interpret=True)
+            ok = bool(jnp.array_equal(mask, masking.nm_mask(w, n, m, 0)))
+            emit(
+                f"kernel_nm_mask/{shape[0]}x{shape[1]}/{n}:{m}",
+                us,
+                f"pallas_match={ok}",
+            )
+
+
+def bench_spmm(cases=((64, 2048, 2048), (8, 4096, 4096))):
+    for b, k, o in cases:
+        for n, m in ((2, 4), (1, 4)):
+            x = jax.random.normal(jax.random.PRNGKey(0), (b, k), jnp.float32)
+            w = jax.random.normal(jax.random.PRNGKey(1), (k, o), jnp.float32)
+            v, i = ref.nm_compress(w, n, m, 0)
+            fr = jax.jit(functools.partial(ref.nm_spmm_ref, n=n, m=m))
+            us = time_fn(fr, x, v, i)
+            y = nm_spmm_pallas(x[:8], v, i, n, m, interpret=True)
+            err = float(jnp.max(jnp.abs(y - ref.nm_spmm_ref(x[:8], v, i, n, m))))
+            # HBM weight-traffic ratio on TPU: (n/m * bits + n/m * 8) / bits
+            bits = 16
+            traffic = (n / m) * (bits + 8) / bits
+            emit(
+                f"kernel_nm_spmm/{b}x{k}x{o}/{n}:{m}",
+                us,
+                f"pallas_err={err:.1e};tpu_weight_traffic_ratio={traffic:.3f}",
+            )
+
+
+def run() -> None:
+    bench_mask()
+    bench_spmm()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Table 4: layer-wise mixed N:M (DominoSearch) with and without STEP.
+
+Per-layer N (shared M=8) assigned by the greedy-energy DominoSearch
+approximation to meet a global density budget; "DS" trains it with plain
+STE×Adam, "DS+STEP" adds the precondition phase. LM task (paper regime).
+"""
+from __future__ import annotations
+
+import jax
+
+import repro.core as core
+from benchmarks.common import emit, train_lm_recipe
+from repro.configs import get_config
+from repro.models.model import TransformerLM
+
+
+def run(steps=120) -> dict:
+    out = {}
+    cfg = get_config("gpt2-paper", smoke=True)
+    params0 = TransformerLM(cfg).init(jax.random.PRNGKey(0))
+    base = core.SparsityConfig(default=core.NMSparsity(2, 8))
+    for density in (0.5, 0.25):
+        domino_cfg = core.domino_search(params0, base, m=8, target_density=density)
+        for label, kind in (("ds", "ste"), ("ds_step", "step")):
+            r = train_lm_recipe(kind, steps=steps, seed=0, layer_cfg=domino_cfg)
+            out[(label, density)] = r["sparse_eval_loss"]
+            emit(
+                f"layerwise/{label}/density_{density}",
+                r["us_per_step"],
+                f"sparse_eval_loss={r['sparse_eval_loss']:.4f}",
+            )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,183 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the dry-run.
+
+Sources (per EXPERIMENTS.md §Roofline):
+- compute term:   per-device HLO FLOPs from the trip-count-corrected HLO walk
+                  (utils/hlo_cost.py; XLA's own cost_analysis counts while
+                  bodies once — verified and documented) / 197 TFLOP/s bf16.
+- collective term: per-device collective payload bytes from the same walk
+                  / 50 GB/s ICI link bandwidth.
+- memory term:    analytic HBM-traffic model (formulas below) / 819 GB/s.
+                  CPU-backend HLO is unfused, so summing per-op bytes would
+                  overcount 5-10x vs TPU reality; the analytic model is the
+                  honest estimate and is cross-checked against the compiled
+                  memory_analysis() residency numbers.
+
+Memory-traffic model (per device, per step):
+  train:   3x weight stream (fwd, remat-fwd, bwd: bf16) + optimizer update
+           stream (read g,m,v,precond + write w,m: f32) + 2x mask stream
+           (read w, write mask+masked in phase 2) + activation checkpoints
+           (2x residual stream per layer boundary, bf16)
+  prefill: 1x weight stream + KV-cache write + 2x residual per layer
+  decode:  1x weight stream + full KV-cache read + O(d_model) vectors
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, get_config, SHAPES
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+from repro.models.model import (
+    active_param_count,
+    frontend_dim,
+    layer_plan,
+    model_flops_per_token,
+    param_count,
+)
+
+REPORT = os.path.join(os.path.dirname(__file__), "..", "dryrun_report.json")
+
+
+def _mesh_dp_tp(multi_pod: bool):
+    return (32 if multi_pod else 16), 16
+
+
+def memory_traffic_bytes(arch: str, shape_name: str, multi_pod: bool) -> float:
+    """Analytic per-device HBM traffic for one step (see module docstring)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = 512 if multi_pod else 256
+    dp, tp = _mesh_dp_tp(multi_pod)
+    n = param_count(cfg)
+    p_local = n / chips  # FSDP+TP: weights fully sharded
+    d = cfg.d_model
+    toks_local = shape.seq_len * shape.global_batch / dp
+    n_layers = cfg.n_layers
+
+    if shape.kind == "train":
+        w_stream = 3 * 2 * p_local  # fwd + remat-fwd + bwd, bf16
+        opt_stream = p_local * (4 * 4 + 2 * 4)  # r: g,m,v,P*; w: m,w (f32)
+        mask_stream = 2 * 2 * p_local  # read w, write masked (bf16, phase 2)
+        act_stream = 2 * 2 * toks_local * d / tp * n_layers  # seq-sharded resid
+        return w_stream + opt_stream + mask_stream + act_stream
+    if shape.kind == "prefill":
+        w_stream = 2 * p_local
+        kv = _kv_bytes_per_token(cfg) * toks_local / tp
+        act_stream = 2 * 2 * toks_local * d / tp * n_layers
+        return w_stream + kv + act_stream
+    # decode: weights resident per step (TP-sharded, no FSDP) + cache read
+    p_serve = n / tp * 2  # bf16, TP-16 only
+    kv_read = _kv_bytes_per_token(cfg) * shape.seq_len * shape.global_batch / chips
+    return p_serve + kv_read
+
+
+def _kv_bytes_per_token(cfg) -> float:
+    """Decode-cache bytes per cached token (whole model)."""
+    plan = layer_plan(cfg)
+    kinds = list(plan.head) + list(plan.period) * plan.n_body + list(plan.tail)
+    total = 0.0
+    for k in kinds:
+        base = k.split(":")[0]
+        if base == "attn":
+            if cfg.mla is not None:
+                total += (cfg.mla.kv_lora + cfg.mla.rope_head_dim) * 2
+            else:
+                total += 2 * cfg.n_kv * cfg.hd * 2
+        elif base == "rec":
+            total += 0.0  # O(1) state, not per-token
+        elif base == "ssm":
+            total += 0.0
+    return total
+
+
+def roofline_row(key: str, rep: dict) -> Optional[dict]:
+    if rep.get("status") != "ok":
+        return None
+    arch, shape_name, mesh = key.split("|")
+    multi_pod = mesh == "mp"
+    chips = rep["chips"]
+    flops_dev = rep["flops"]  # per-device (SPMD module)
+    coll_dev = rep["collectives"]["total_bytes"]
+    mem_dev = memory_traffic_bytes(arch, shape_name, multi_pod)
+
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = mem_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW_PER_LINK
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    tokens = shape.seq_len * shape.global_batch if shape.kind != "decode" else shape.global_batch
+    if shape.kind == "train":
+        model_fl = model_flops_per_token(cfg, shape.seq_len) * tokens
+    else:
+        # inference: 2·N_active (+ attention reads for decode, folded into mem)
+        model_fl = 2 * active_param_count(cfg) * tokens
+        if shape.kind == "prefill":
+            model_fl = model_flops_per_token(cfg, shape.seq_len) / 3 * tokens
+    hlo_total = flops_dev * chips
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory), ("collective", t_coll)],
+        key=lambda kv: kv[1],
+    )[0]
+    bound = max(t_compute, t_memory, t_coll)
+    return {
+        "key": key,
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": rep["mesh"],
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_fl,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": model_fl / hlo_total if hlo_total else 0.0,
+        "roofline_fraction": t_compute / bound if bound else 0.0,
+    }
+
+
+def build_table(report_path: str = REPORT, mesh: str = "sp") -> list[dict]:
+    with open(report_path) as f:
+        report = json.load(f)
+    rows = []
+    for key, rep in sorted(report.items()):
+        if not key.endswith(f"|{mesh}"):
+            continue
+        row = roofline_row(key, rep)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL/HLO | roofline frac |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> None:
+    from benchmarks.common import emit
+
+    rows = build_table()
+    for r in rows:
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"dominant={r['dominant']};useful={r['useful_ratio']:.2f};frac={r['roofline_fraction']:.2f}",
+        )
+    print()
+    print(markdown_table(rows))
+
+
+if __name__ == "__main__":
+    run()

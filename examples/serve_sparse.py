@@ -1,0 +1,15 @@
+"""Batched sparse serving demo: export Π_T ⊙ w_T, compress, decode.
+
+    PYTHONPATH=src python examples/serve_sparse.py
+    PYTHONPATH=src python examples/serve_sparse.py --ckpt-dir /tmp/train_lm_ck
+
+Shows the deployment path: final-mask export (Algorithm 1 line 23-24),
+N:M weight compression (the HBM-bandwidth win the nm_spmm Pallas kernel
+realizes on TPU), and a batched KV-cache greedy-decode loop.
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["--arch", "gpt2-paper", "--batch", "4", "--gen", "16"])

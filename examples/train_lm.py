@@ -1,0 +1,19 @@
+"""End-to-end LM training driver (paper §6 task 4 analogue).
+
+    # CPU-scale smoke (default):
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+    # the real ~124M GPT-2-class run (TPU-scale; same code path):
+    PYTHONPATH=src python examples/train_lm.py --no-smoke --steps 300 \
+        --batch 32 --seq 512 --ckpt-dir /tmp/gpt2_step
+
+Wraps the production launcher (repro.launch.train): STEP recipe on the
+GPT-2-family config, synthetic corpus, AutoSwitch, checkpoint/auto-resume.
+Kill it mid-run and re-invoke with the same --ckpt-dir: it resumes exactly.
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["--arch", "gpt2-paper", "--steps", "200", "--ckpt-dir", "/tmp/train_lm_ck"])

@@ -1,0 +1,14 @@
+"""repro: a JAX training/inference framework with first-class N:M structured
+sparsity, reproducing and extending *STEP: Learning N:M Structured Sparsity
+Masks from Scratch with Precondition* (Lu et al., ICML 2023).
+
+Public API highlights
+---------------------
+- ``repro.core``: N:M masking math, STE/SR-STE, the STEP two-phase optimizer
+  and the AutoSwitch subroutine.
+- ``repro.models``: the architecture zoo (dense GQA / MLA / MoE / SSM / hybrid).
+- ``repro.configs``: assigned architecture configs (``get_config(name)``).
+- ``repro.launch``: production mesh, multi-pod dry-run, train/serve drivers.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpointer import Checkpointer, save_pytree, load_pytree

@@ -1,0 +1,51 @@
+"""Architecture registry: ``get_config(name)`` / ``list_archs()``.
+
+One module per assigned architecture (exact public-literature config), plus
+the paper's own GPT-2-style model for the reproduction benchmarks.
+``get_config(name, smoke=True)`` returns the reduced same-family variant.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, ShapeSpec, SHAPES, reduced
+
+from repro.configs.starcoder2_3b import CONFIG as _starcoder2
+from repro.configs.qwen15_110b import CONFIG as _qwen15
+from repro.configs.minitron_4b import CONFIG as _minitron
+from repro.configs.command_r_plus_104b import CONFIG as _command_r
+from repro.configs.deepseek_v2_lite_16b import CONFIG as _deepseek
+from repro.configs.dbrx_132b import CONFIG as _dbrx
+from repro.configs.mamba2_27b import CONFIG as _mamba2
+from repro.configs.musicgen_large import CONFIG as _musicgen
+from repro.configs.qwen2_vl_2b import CONFIG as _qwen2vl
+from repro.configs.recurrentgemma_9b import CONFIG as _rgemma
+from repro.configs.gpt2_paper import CONFIG as _gpt2
+
+_REGISTRY: dict[str, ArchConfig] = {
+    c.name: c
+    for c in (
+        _starcoder2,
+        _qwen15,
+        _minitron,
+        _command_r,
+        _deepseek,
+        _dbrx,
+        _mamba2,
+        _musicgen,
+        _qwen2vl,
+        _rgemma,
+        _gpt2,
+    )
+}
+
+ASSIGNED_ARCHS = tuple(n for n in _REGISTRY if n != "gpt2-paper")
+
+
+def list_archs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {list_archs()}")
+    cfg = _REGISTRY[name]
+    return reduced(cfg) if smoke else cfg

@@ -1,0 +1,119 @@
+"""Architecture & shape configuration dataclasses.
+
+Every assigned architecture is a frozen :class:`ArchConfig`; the four
+assigned input shapes are :data:`SHAPES`. ``reduced()`` produces the
+small-family smoke variant (same code paths, tiny dims) exercised by the
+CPU tests; the full config is only ever lowered via the dry-run
+(ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.models.moe import MoEConfig
+from repro.models.ssm import SSMConfig
+from repro.models.recurrent import RGLRUConfig
+from repro.models.mla import MLAConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    qkv_bias: bool = False
+    o_bias: bool = False
+    mlp: str = "swiglu"  # swiglu | gelu
+    norm: str = "rms"  # rms | ln
+    rope: str = "rope"  # rope | mrope | none
+    rope_theta: float = 10000.0
+    local_window: Optional[int] = None  # sliding-window attention
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # hybrid layer pattern, e.g. ("rec", "rec", "attn"); None = all-attn
+    # (or all-ssm when family == "ssm")
+    layer_pattern: Optional[Sequence[str]] = None
+    frontend: str = "none"  # none | audio_stub | vision_stub
+    sub_quadratic: bool = False  # eligible for the long_500k cell
+    param_dtype: str = "bfloat16"
+    source: str = ""  # provenance note
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def block_kinds(self) -> list[str]:
+        """Per-layer block kinds, length n_layers."""
+        if self.layer_pattern is None:
+            base = "ssm" if self.family == "ssm" else "attn"
+            return [base] * self.n_layers
+        pat = list(self.layer_pattern)
+        out = [pat[i % len(pat)] for i in range(self.n_layers)]
+        return out
+
+    def shapes(self) -> list[ShapeSpec]:
+        """The assigned shape cells for this arch (long_500k gated on
+        sub-quadratic support — see DESIGN.md §4)."""
+        out = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+        if self.sub_quadratic:
+            out.append(SHAPES["long_500k"])
+        return out
+
+
+def reduced(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """A tiny same-family variant for CPU smoke tests."""
+    n_kv = min(cfg.n_kv, 2)
+    n_heads = max(4, n_kv * 2)
+    base = dict(
+        n_layers=min(cfg.n_layers, 4 if cfg.layer_pattern is None else 2 * len(cfg.layer_pattern)),
+        d_model=64,
+        n_heads=n_heads,
+        n_kv=n_kv,
+        d_ff=128,
+        vocab=256,
+        head_dim=16,
+    )
+    if cfg.moe is not None:
+        base["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=2, d_ff_expert=32,
+            n_shared=min(cfg.moe.n_shared, 1),
+            capacity_factor=8.0,  # no token dropping in the tiny smoke models
+        )
+    if cfg.mla is not None:
+        base["mla"] = MLAConfig(kv_lora=32, rope_head_dim=8, nope_head_dim=16, v_head_dim=16)
+        base["head_dim"] = None
+    if cfg.ssm is not None:
+        base["ssm"] = SSMConfig(d_state=16, head_dim=8, expand=2,
+                                n_groups=1, conv_width=4, chunk=8)
+    if cfg.rglru is not None:
+        base["rglru"] = RGLRUConfig(lru_width=64, conv_width=4)
+    if cfg.local_window is not None:
+        base["local_window"] = 16
+    base.update(overrides)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **base)

@@ -1,0 +1,24 @@
+"""Command R+ 104B [hf:CohereForAI/c4ai-command-r-plus; unverified].
+
+64L, d_model 12288, 96 heads (GQA kv=8), d_ff 33792, vocab 256000; SwiGLU,
+LayerNorm, RoPE, no biases, tied embeddings (Cohere convention).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv=8,
+    d_ff=33792,
+    vocab=256000,
+    head_dim=128,
+    mlp="swiglu",
+    norm="ln",
+    rope="rope",
+    rope_theta=75e4,
+    tie_embeddings=True,
+    source="hf:CohereForAI/c4ai-command-r-plus; unverified",
+)

@@ -1,0 +1,25 @@
+"""DBRX 132B [hf:databricks/dbrx-base; unverified]: fine-grained MoE.
+
+40L, d_model 6144, 48 heads (GQA kv=8), 16 experts top-4 with expert d_ff
+10752, vocab 100352; SwiGLU experts, RoPE (theta 5e5), LayerNorm.
+"""
+from repro.configs.base import ArchConfig
+from repro.models.moe import MoEConfig
+
+CONFIG = ArchConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv=8,
+    d_ff=10752,
+    vocab=100352,
+    head_dim=128,
+    mlp="swiglu",
+    norm="ln",
+    rope="rope",
+    rope_theta=5e5,
+    moe=MoEConfig(n_experts=16, top_k=4, d_ff_expert=10752, n_shared=0),
+    source="hf:databricks/dbrx-base; unverified",
+)

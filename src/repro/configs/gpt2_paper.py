@@ -1,0 +1,29 @@
+"""The paper's own model family: a GPT-2-style decoder (Radford et al. 2019).
+
+The paper fine-tunes GPT-2 (124M) on WikiText-2/-103 with 2:4 sparsity on
+all Conv1D modules (= our attention/MLP matmuls). This config is the
+end-to-end driver's ~100M-class model and the reproduction benchmarks'
+backbone. GPT-2: 12L, d_model 768, 12 MHA heads, d_ff 3072, GeLU, LayerNorm,
+learned positions (we use RoPE; recorded deviation), vocab 50257 → padded to
+50304 for M-divisibility.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gpt2-paper",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv=12,
+    d_ff=3072,
+    vocab=50304,
+    head_dim=64,
+    qkv_bias=True,
+    o_bias=True,
+    mlp="gelu",
+    norm="ln",
+    rope="rope",
+    tie_embeddings=True,
+    source="Radford et al. 2019 (paper §6 task 4)",
+)

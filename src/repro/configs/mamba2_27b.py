@@ -1,0 +1,26 @@
+"""Mamba2-2.7B [arXiv:2405.21060; unverified]: attention-free SSD LM.
+
+64L, d_model 2560, ssm_state 128, head_dim 64 (=> 80 heads at expand 2),
+vocab 50280; no attention, no MLP (the Mamba-2 mixer is the whole block);
+tied embeddings. Sub-quadratic => runs the long_500k cell.
+"""
+from repro.configs.base import ArchConfig
+from repro.models.ssm import SSMConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=1,  # unused (attention-free)
+    n_kv=1,
+    d_ff=0,
+    vocab=50280,
+    mlp="swiglu",  # unused
+    norm="rms",
+    rope="none",
+    tie_embeddings=True,
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, n_groups=1, conv_width=4, chunk=256),
+    sub_quadratic=True,
+    source="arXiv:2405.21060; unverified",
+)

@@ -1,0 +1,24 @@
+"""Minitron-4B [arXiv:2407.14679; hf]: pruned-Nemotron dense LM.
+
+32L, d_model 3072, 24 heads (GQA kv=8), d_ff 9216, vocab 256000.
+Nemotron uses squared-ReLU MLPs; the framework's closest activation is GeLU
+(recorded deviation — activation choice is orthogonal to STEP).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minitron-4b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv=8,
+    d_ff=9216,
+    vocab=256000,
+    head_dim=128,
+    mlp="gelu",
+    norm="ln",
+    rope="rope",
+    rope_theta=1e4,
+    source="arXiv:2407.14679; hf",
+)

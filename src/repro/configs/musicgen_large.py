@@ -1,0 +1,28 @@
+"""MusicGen-large backbone [arXiv:2306.05284; hf]: decoder-only over EnCodec
+tokens.
+
+48L, d_model 2048, 32 heads (MHA — kv=32), d_ff 8192, vocab 2048 (EnCodec
+codebook). The EnCodec frontend is a STUB: ``input_specs()`` feeds
+precomputed frame embeddings (audio_stub, 512-d) per the assignment; labels
+remain codebook token ids. MusicGen uses sinusoidal positions + GeLU + LN;
+we keep GeLU/LN and substitute RoPE for sinusoidal positions (recorded
+deviation — positional encoding choice is orthogonal to STEP).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv=32,
+    d_ff=8192,
+    vocab=2048,
+    head_dim=64,
+    mlp="gelu",
+    norm="ln",
+    rope="rope",
+    frontend="audio_stub",
+    source="arXiv:2306.05284; hf",
+)

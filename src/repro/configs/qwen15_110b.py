@@ -1,0 +1,24 @@
+"""Qwen1.5-110B [hf:Qwen/Qwen1.5-*; hf]: dense GQA LM with QKV bias.
+
+80L, d_model 8192, 64 heads (GQA kv=8), d_ff 49152, vocab 152064; SwiGLU,
+RMSNorm, RoPE (theta 1e6), QKV bias (the Qwen family signature).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-110b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv=8,
+    d_ff=49152,
+    vocab=152064,
+    head_dim=128,
+    qkv_bias=True,
+    mlp="swiglu",
+    norm="rms",
+    rope="rope",
+    rope_theta=1e6,
+    source="hf:Qwen/Qwen1.5-110B; hf",
+)

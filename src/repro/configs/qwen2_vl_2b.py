@@ -1,0 +1,29 @@
+"""Qwen2-VL-2B backbone [arXiv:2409.12191; hf]: VLM with M-RoPE.
+
+28L, d_model 1536, 12 heads (GQA kv=2), d_ff 8960, vocab 151936; SwiGLU,
+RMSNorm, QKV bias, M-RoPE (temporal/height/width position streams), tied
+embeddings. The ViT frontend is a STUB: ``input_specs()`` feeds precomputed
+patch embeddings (vision_stub, 1176-d = 14x14 patch x 2 frames x 3 ch) with
+3-D positions; dynamic resolution enters only through the position streams.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv=2,
+    d_ff=8960,
+    vocab=151936,
+    head_dim=128,
+    qkv_bias=True,
+    mlp="swiglu",
+    norm="rms",
+    rope="mrope",
+    rope_theta=1e6,
+    tie_embeddings=True,
+    frontend="vision_stub",
+    source="arXiv:2409.12191; hf",
+)

@@ -1,0 +1,32 @@
+"""RecurrentGemma-9B [arXiv:2402.19427; unverified]: Griffin hybrid.
+
+38L with pattern (RG-LRU, RG-LRU, local-attention) — 12 full periods + 2
+trailing recurrent layers; d_model 4096, 16 heads MQA (kv=1, head_dim 256),
+d_ff 12288, vocab 256000, local attention window 2048, lru_width 4096; GeLU
+MLP, RMSNorm, tied embeddings. Sub-quadratic (bounded KV + recurrent state)
+=> runs the long_500k cell.
+"""
+from repro.configs.base import ArchConfig
+from repro.models.recurrent import RGLRUConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv=1,
+    d_ff=12288,
+    vocab=256000,
+    head_dim=256,
+    mlp="gelu",
+    norm="rms",
+    rope="rope",
+    rope_theta=1e4,
+    local_window=2048,
+    tie_embeddings=True,
+    rglru=RGLRUConfig(lru_width=4096, conv_width=4),
+    layer_pattern=("rec", "rec", "attn"),
+    sub_quadratic=True,
+    source="arXiv:2402.19427; unverified",
+)

@@ -1,0 +1,25 @@
+"""StarCoder2-3B [arXiv:2402.19173; hf]: dense GQA code LM.
+
+30L, d_model 3072, 24 heads (GQA kv=2), d_ff 12288, vocab 49152; GQA + RoPE,
+GeLU MLP with biases, LayerNorm (per the StarCoder2 paper's config).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-3b",
+    family="dense",
+    n_layers=30,
+    d_model=3072,
+    n_heads=24,
+    n_kv=2,
+    d_ff=12288,
+    vocab=49152,
+    head_dim=128,
+    qkv_bias=True,
+    o_bias=True,
+    mlp="gelu",
+    norm="ln",
+    rope="rope",
+    rope_theta=1e5,
+    source="arXiv:2402.19173; hf",
+)

@@ -1,0 +1,29 @@
+# The paper's primary contribution: N:M structured-sparsity mask learning
+# with preconditioned Adam (STEP) + the AutoSwitch phase detector, plus all
+# baseline recipes the paper compares against.
+from repro.core.masking import (
+    NMSparsity,
+    nm_mask,
+    nm_mask_dynamic,
+    nm_mask_and_apply,
+    nm_compress,
+    nm_decompress,
+    straight_through_mask,
+    masked_no_ste,
+    sr_ste_grad_term,
+    sparsity_fraction,
+)
+from repro.core.sparsity_config import SparsityConfig, maskable_map, sparsity_report
+from repro.core.autoswitch import (
+    AutoSwitchConfig,
+    AutoSwitchState,
+    init_autoswitch,
+    autoswitch_step,
+    variance_change_sample,
+    criterion_relative_norm,
+    criterion_staleness,
+    criterion_autoswitch_offline,
+)
+from repro.core.step_optimizer import StepConfig, StepState, step_optimizer
+from repro.core.recipes import Recipe, RecipeState, make_recipe, RECIPES
+from repro.core.domino import domino_search, assigned_ratios

@@ -1,0 +1,169 @@
+"""AutoSwitch (paper Algorithm 2): automatic detection of the switching point
+between the precondition phase and the mask-learning phase.
+
+Per step the subroutine samples the per-coordinate variance change
+
+    Option I :  Z_t = d^{-1} ||v_t - v_{t-1}||_1           (arithmetic mean)
+    Option II:  Z_t = exp(d^{-1} ||log|v_t - v_{t-1}|||_1)  (geometric mean)
+
+keeps a sliding window of the last ``T_w = floor(1/(1-beta2))`` samples, and
+fires once the window mean drops below Adam's own ``eps`` (no new
+hyperparameter — the paper's key point). Optional clipping bounds
+``[T_min, T_max]`` (default ``[0.1 T, 0.5 T]``, Geweke-style) regularize the
+decision under tight training budgets.
+
+Everything here is jit-compatible: the state is a fixed-size ring buffer and
+the decision is a traced boolean, so AutoSwitch lives *inside* the train step
+with zero host round-trips.
+
+The incremental identity used to avoid storing v_{t-1}:
+    v_t - v_{t-1} = (1 - beta2) * (g_{t-1}^2 - v_{t-1})
+so Z_t is computed from the gradient and the *pre-update* variance of the
+same step, costing one elementwise pass and a reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoSwitchConfig:
+    beta2: float = 0.999
+    eps: float = 1e-8  # threshold = Adam's eps (paper: reuse, don't tune)
+    option: str = "I"  # "I" arithmetic | "II" geometric
+    window: Optional[int] = None  # override T_w (default floor(1/(1-beta2)))
+    t_min: Optional[int] = None  # optional clipping (paper: 0.1 * T)
+    t_max: Optional[int] = None  # optional clipping (paper: 0.5 * T)
+
+    @property
+    def t_w(self) -> int:
+        if self.window is not None:
+            return int(self.window)
+        # floor((1-beta2)^-1); round first to absorb fp error (1/(1-0.999)
+        # is 999.9999... in float64 but the paper's T_w is 1000)
+        return max(1, int(round(1.0 / (1.0 - self.beta2), 6)))
+
+
+class AutoSwitchState(NamedTuple):
+    window: jnp.ndarray  # (T_w,) ring buffer of Z_t samples
+    count: jnp.ndarray  # int32: number of samples recorded so far
+
+
+def init_autoswitch(cfg: AutoSwitchConfig) -> AutoSwitchState:
+    return AutoSwitchState(
+        window=jnp.zeros((cfg.t_w,), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def variance_change_sample(
+    grads: Any, v: Any, cfg: AutoSwitchConfig, d: Optional[int] = None
+) -> jnp.ndarray:
+    """Compute Z_t from this step's gradients and the pre-update variance.
+
+    ``|v_{t+1} - v_t| = (1-beta2) |g_t^2 - v_t|`` per coordinate; ``d`` is the
+    total coordinate count (computed from the tree if not given).
+    """
+    leaves_g = jax.tree_util.tree_leaves(grads)
+    leaves_v = jax.tree_util.tree_leaves(v)
+    if d is None:
+        d = sum(x.size for x in leaves_v)
+    d = float(d)  # param counts exceed int32 on multi-B models
+    c = 1.0 - cfg.beta2
+    if cfg.option == "I":
+        tot = sum(
+            jnp.sum(jnp.abs(jnp.square(g.astype(jnp.float32)) - vv))
+            for g, vv in zip(leaves_g, leaves_v)
+        )
+        return c * tot / d
+    elif cfg.option == "II":
+        tiny = 1e-30
+        tot = sum(
+            jnp.sum(jnp.log(c * jnp.abs(jnp.square(g.astype(jnp.float32)) - vv) + tiny))
+            for g, vv in zip(leaves_g, leaves_v)
+        )
+        return jnp.exp(tot / d)
+    raise ValueError(f"unknown AutoSwitch option {cfg.option!r}")
+
+
+def autoswitch_step(
+    state: AutoSwitchState,
+    z_t: jnp.ndarray,
+    t: jnp.ndarray,
+    cfg: AutoSwitchConfig,
+) -> tuple[AutoSwitchState, jnp.ndarray, jnp.ndarray]:
+    """Record one sample; return (new_state, z_bar, switch_now).
+
+    ``switch_now`` is a traced bool implementing Algorithm 2's return value,
+    including the optional clipping branch.
+    """
+    idx = state.count % cfg.t_w
+    window = state.window.at[idx].set(z_t.astype(jnp.float32))
+    count = state.count + 1
+    z_bar = jnp.sum(window) / cfg.t_w
+    ready = count >= cfg.t_w
+    crit = ready & (z_bar < cfg.eps)
+    if cfg.t_min is not None:
+        crit = crit & (t > cfg.t_min)
+    if cfg.t_max is not None:
+        crit = crit | (t > cfg.t_max)
+    return AutoSwitchState(window=window, count=count), z_bar, crit
+
+
+# ---------------------------------------------------------------------------
+# Baseline switching criteria (paper Eq. 10 / Eq. 11) — used by the Table 1
+# benchmark. They operate on recorded norm traces (offline), exactly as the
+# paper profiles them.
+# ---------------------------------------------------------------------------
+
+
+def criterion_relative_norm(v_norms: jnp.ndarray, threshold: float = 0.5) -> int:
+    """Agarwal et al. Eq. (10): first t with |‖v_t‖-‖v_{t-1}‖| / ‖v_{t-1}‖ < thr.
+
+    ``v_norms``: trace of ‖v_t‖₂ per step. Returns the step index (python int),
+    or ``len(trace)-1`` if never met.
+    """
+    v = jnp.asarray(v_norms)
+    rel = jnp.abs(v[1:] - v[:-1]) / jnp.maximum(v[:-1], 1e-30)
+    hits = jnp.nonzero(rel < threshold, size=1, fill_value=rel.shape[0] - 1)[0]
+    return int(hits[0]) + 1
+
+
+def criterion_staleness(
+    v_l1_norms: jnp.ndarray, beta2: float = 0.999, threshold: float = 0.96
+) -> int:
+    """Tang et al. Eq. (11): first t with ‖v_t‖₁ / ‖v_{t-k}‖₁ > thr,
+    k = floor(1/(1-beta2))."""
+    v = jnp.asarray(v_l1_norms)
+    k = max(1, int(1.0 / (1.0 - beta2)))
+    if v.shape[0] <= k:
+        return v.shape[0] - 1
+    ratio = v[k:] / jnp.maximum(v[:-k], 1e-30)
+    hits = jnp.nonzero(ratio > threshold, size=1, fill_value=ratio.shape[0] - 1)[0]
+    return int(hits[0]) + k
+
+
+def criterion_autoswitch_offline(
+    z_trace: jnp.ndarray, cfg: AutoSwitchConfig
+) -> int:
+    """Run Algorithm 2 over a recorded Z_t trace (for the Table 1 benchmark)."""
+    z = jnp.asarray(z_trace, jnp.float32)
+    t_w = cfg.t_w
+    if z.shape[0] < t_w:
+        return z.shape[0] - 1
+    # sliding-window means
+    csum = jnp.concatenate([jnp.zeros((1,)), jnp.cumsum(z)])
+    zbar = (csum[t_w:] - csum[:-t_w]) / t_w  # mean ending at step t_w-1+i
+    ok = zbar < cfg.eps
+    t_idx = jnp.arange(t_w - 1, z.shape[0])
+    if cfg.t_min is not None:
+        ok = ok & (t_idx > cfg.t_min)
+    crossed = ok
+    if cfg.t_max is not None:
+        crossed = crossed | (t_idx > cfg.t_max)
+    hits = jnp.nonzero(crossed, size=1, fill_value=crossed.shape[0] - 1)[0]
+    return int(t_idx[hits[0]])

@@ -1,0 +1,108 @@
+"""Layer-wise mixed N:M assignment (DominoSearch-style, paper Table 4).
+
+DominoSearch (Sun et al., 2021) finds per-layer N (with a shared M) meeting a
+global sparsity budget. This module implements the greedy energy variant the
+paper combines STEP with: starting from dense, repeatedly decrement the N of
+whichever layer loses the least magnitude-energy per parameter removed, until
+the global kept-parameter budget is met. STEP itself is orthogonal (it does
+not modify the ratio assignment — paper §6 Ablation I), so the output here is
+just a ``SparsityConfig.layer_patterns`` list.
+"""
+from __future__ import annotations
+
+import heapq
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masking import NMSparsity
+from repro.core.sparsity_config import SparsityConfig
+from repro.utils.tree import tree_paths
+
+
+def _energy_at_n(w: np.ndarray, n: int, m: int, axis: int) -> float:
+    """Fraction of squared-magnitude energy kept by an n:m mask along axis."""
+    wt = np.moveaxis(np.asarray(w, np.float32), axis, -1)
+    g = wt.reshape(wt.shape[:-1] + (wt.shape[-1] // m, m))
+    sq = g**2
+    part = np.sort(sq, axis=-1)[..., ::-1]  # descending
+    kept = part[..., :n].sum()
+    total = sq.sum() + 1e-30
+    return float(kept / total)
+
+
+def domino_search(
+    params: Any,
+    base: SparsityConfig,
+    m: int = 8,
+    target_density: float = 0.5,
+    min_n: int = 1,
+) -> SparsityConfig:
+    """Assign per-layer N:m patterns meeting a global kept-parameter budget.
+
+    ``target_density``: kept fraction over all *maskable* parameters
+    (e.g. 0.25 for "Mixed N:8" at 2:8-average). Returns a new SparsityConfig
+    whose ``layer_patterns`` pins each maskable leaf to its chosen N:m.
+    """
+    names = tree_paths(params)
+    leaves = jax.tree_util.tree_leaves(params)
+    layers = []  # (name, np_weight, axis, size)
+    for name, p in zip(names, leaves):
+        pat = base.pattern_for(name, tuple(p.shape))
+        if pat is None:
+            continue
+        if p.shape[pat.group_axis % p.ndim] % m != 0:
+            continue
+        layers.append((name, np.asarray(p), pat.group_axis, int(p.size)))
+    if not layers:
+        return base
+
+    total = sum(sz for *_, sz in layers)
+    budget = target_density * total
+    n_cur = {name: m for name, *_ in layers}
+    kept = float(total)
+
+    # precompute energy curves
+    energy = {
+        name: [
+            _energy_at_n(w, n, m, axis) for n in range(0, m + 1)
+        ]
+        for name, w, axis, _ in layers
+    }
+    sizes = {name: sz for name, _, _, sz in layers}
+
+    # greedy: pop the decrement with the least energy-loss per param removed
+    def cost(name: str, n_from: int) -> float:
+        d_energy = energy[name][n_from] - energy[name][n_from - 1]
+        d_params = sizes[name] / m  # params removed by one N decrement
+        return d_energy / max(d_params, 1.0)
+
+    heap = [(cost(nm, m), nm, m) for nm, *_ in layers]
+    heapq.heapify(heap)
+    while kept > budget and heap:
+        _, name, n_from = heapq.heappop(heap)
+        if n_cur[name] != n_from or n_from <= min_n:
+            continue  # stale entry
+        n_cur[name] = n_from - 1
+        kept -= sizes[name] / m
+        if n_cur[name] > min_n:
+            heapq.heappush(heap, (cost(name, n_cur[name]), name, n_cur[name]))
+
+    patterns = [
+        (f"^{re.escape(name)}$", NMSparsity(n_cur[name], m, axis))
+        for name, _, axis, _ in layers
+    ]
+    return SparsityConfig(
+        default=base.default,
+        layer_patterns=tuple(patterns),
+        extra_excludes=base.extra_excludes,
+        min_dim=base.min_dim,
+    )
+
+
+def assigned_ratios(cfg: SparsityConfig) -> dict[str, str]:
+    """Pretty per-layer table of a domino-assigned config."""
+    return {regex.strip("^$").replace("\\", ""): str(p) for regex, p in cfg.layer_patterns}

@@ -1,0 +1,116 @@
+"""Which parameters get N:M-masked, and with what pattern.
+
+Implements the paper's masking scope ("all Linear/Conv modules") generalized
+to the framework's model zoo: a leaf is maskable iff it is a >=2-D matmul
+weight with every grouped dim >= M, excluding embeddings/unembedding, norms,
+biases, MoE routers and diagonal/recurrence parameters (see DESIGN.md §4).
+
+Per-layer mixed ratios (DominoSearch-style, paper Table 4) are expressed by
+``layer_patterns``: a list of (regex, NMSparsity) tried in order; first match
+wins; non-matching maskable leaves use ``default``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import NMSparsity
+from repro.utils.tree import tree_map_with_name
+
+# name fragments that are never masked, whatever their shape
+_EXCLUDE_FRAGMENTS = (
+    "embed",      # token / position / codebook embeddings (+ unembed)
+    "norm",       # layer/rms norms
+    "bias",
+    "router",     # MoE gate — tiny and accuracy-critical
+    "scale",
+    "a_log",      # mamba2 / rg-lru recurrence parameters
+    "dt_",        # mamba2 dt projection bias & init
+    "conv",       # mamba2 short conv (depthwise, tiny)
+    "gate_diag",  # rg-lru diagonal gates
+    "lambda",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Global sparsity policy for a parameter tree."""
+
+    default: NMSparsity = NMSparsity(2, 4)
+    layer_patterns: Sequence[tuple[str, NMSparsity]] = ()
+    extra_excludes: Sequence[str] = ()
+    min_dim: Optional[int] = None  # both dims must be >= this (default: M)
+
+    def pattern_for(self, name: str, shape: tuple[int, ...]) -> Optional[NMSparsity]:
+        """The N:M pattern for a named leaf, or None if it must stay dense."""
+        lname = name.lower()
+        for frag in _EXCLUDE_FRAGMENTS:
+            if frag in lname:
+                return None
+        for frag in self.extra_excludes:
+            if frag in lname:
+                return None
+        if len(shape) < 2:
+            return None
+        pat = self.default
+        for regex, p in self.layer_patterns:
+            if re.search(regex, name):
+                pat = p
+                break
+        if pat is None:
+            return None
+        # Matmul weights are laid out (..., in, out) everywhere in the zoo
+        # (scan-stacked: (L, in, out); MoE experts: (E, in, out)), and N:M
+        # groups must run along the *contraction* dim = axis -2. A configured
+        # group_axis of 0 means "the reduction axis" and is normalized to -2,
+        # which is identical for plain 2-D weights but correct for stacked
+        # leaves (masking along the layer/expert axis would be meaningless).
+        ga = -2 if pat.group_axis == 0 else pat.group_axis
+        if pat.group_axis != ga:
+            pat = dataclasses.replace(pat, group_axis=ga)
+        axis = pat.group_axis % len(shape)
+        if shape[axis] % pat.m != 0:
+            return None  # group dim not divisible: stay dense (recorded)
+        floor = self.min_dim if self.min_dim is not None else pat.m
+        if min(shape[-2:]) < floor:
+            return None
+        return pat
+
+
+def maskable_map(params: Any, cfg: SparsityConfig) -> Any:
+    """Tree of Optional[NMSparsity], aligned with ``params``."""
+    return tree_map_with_name(
+        lambda name, p: cfg.pattern_for(name, tuple(p.shape)), params
+    )
+
+
+def sparsity_report(params: Any, cfg: SparsityConfig) -> dict:
+    """Human-readable coverage summary (used in EXPERIMENTS.md §Arch tables)."""
+    total = 0
+    masked = 0
+    removed = 0.0
+    per_leaf = {}
+    leaves = jax.tree_util.tree_leaves_with_path(params)
+    from repro.utils.tree import _path_str
+
+    for path, p in leaves:
+        name = _path_str(path)
+        pat = cfg.pattern_for(name, tuple(p.shape))
+        total += p.size
+        if pat is not None:
+            masked += p.size
+            removed += p.size * (1 - pat.density)
+            per_leaf[name] = str(pat)
+        else:
+            per_leaf[name] = "dense"
+    return {
+        "total_params": total,
+        "maskable_params": masked,
+        "maskable_fraction": masked / max(total, 1),
+        "removed_fraction_of_total": removed / max(total, 1),
+        "per_leaf": per_leaf,
+    }

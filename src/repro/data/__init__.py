@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticLMDataset, SyntheticTask, make_batch_specs
+from repro.data.pipeline import DataIterator, IteratorState

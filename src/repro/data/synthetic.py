@@ -1,0 +1,137 @@
+"""Deterministic synthetic data (the container is offline; see DESIGN.md §8).
+
+Two generators:
+
+- :class:`SyntheticLMDataset` — a learnable formal language for LM training:
+  tokens follow a randomly-drawn order-2 Markov chain with per-document seeds,
+  so models genuinely reduce loss below ln(V) and recipe *comparisons* (dense
+  vs ASP vs SR-STE vs STEP) are meaningful. Generation is a pure function of
+  (seed, step), so any batch can be re-materialized after restart — the data
+  pipeline's state is just two integers.
+
+- :class:`SyntheticTask` — the teacher-student regression/classification task
+  used by the paper-figure benchmarks where we need a *controlled* setting in
+  which a 2:4-sparse student can represent the teacher exactly (the analogue
+  of "the dense accuracy is reachable under the mask").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMDataset:
+    vocab: int
+    seq_len: int
+    seed: int = 0
+    n_states: int = 64  # Markov-chain state count (<= vocab)
+
+    def _chain(self) -> np.ndarray:
+        """Row-stochastic transition matrix (n_states, n_states), fixed."""
+        rng = np.random.default_rng(self.seed)
+        logits = rng.normal(size=(self.n_states, self.n_states)) * 2.0
+        p = np.exp(logits - logits.max(axis=1, keepdims=True))
+        return p / p.sum(axis=1, keepdims=True)
+
+    def batch(self, step: int, batch_size: int) -> dict:
+        """Materialize batch ``step`` — pure function of (seed, step)."""
+        key = jax.random.PRNGKey(self.seed * 1_000_003 + step)
+        chain = jnp.asarray(self._chain())  # (S0, S0)
+        k0, k1 = jax.random.split(key)
+        state0 = jax.random.randint(k0, (batch_size,), 0, self.n_states)
+
+        def gen(carry, k):
+            st = carry
+            nxt = jax.random.categorical(k, jnp.log(chain[st] + 1e-9))
+            return nxt, nxt
+
+        keys = jax.random.split(k1, self.seq_len)
+        _, seq = jax.lax.scan(gen, state0, keys)
+        seq = jnp.moveaxis(seq, 0, 1)  # (B, S)
+        tokens = seq % self.vocab
+        return {
+            "tokens": tokens[:, :].astype(jnp.int32),
+            "labels": jnp.concatenate(
+                [tokens[:, 1:], tokens[:, :1]], axis=1
+            ).astype(jnp.int32),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticTask:
+    """Teacher-student task whose teacher is *exactly* N:M sparse, so the
+    sparse-recipe gap to dense is attributable to optimization (the paper's
+    regime), not representational capacity."""
+
+    in_dim: int = 64
+    out_dim: int = 32
+    hidden: int = 128
+    n: int = 2
+    m: int = 4
+    seed: int = 0
+    noise: float = 0.01
+    heavy_tail: bool = True  # gradient noise profile that stresses Adam's v
+
+    def teacher(self) -> dict:
+        from repro.core.masking import nm_mask
+
+        k1, k2 = jax.random.split(jax.random.PRNGKey(self.seed))
+        w1 = jax.random.normal(k1, (self.in_dim, self.hidden))
+        w2 = jax.random.normal(k2, (self.hidden, self.out_dim))
+        w1 = w1 * nm_mask(w1, self.n, self.m, 0)
+        w2 = w2 * nm_mask(w2, self.n, self.m, 0)
+        return {"w1": w1 / jnp.sqrt(self.in_dim), "w2": w2 / jnp.sqrt(self.hidden)}
+
+    def student_init(self, key) -> dict:
+        k1, k2 = jax.random.split(key)
+        return {
+            "fc1": {"w": jax.random.normal(k1, (self.in_dim, self.hidden)) * 0.05},
+            "fc2": {"w": jax.random.normal(k2, (self.hidden, self.out_dim)) * 0.05},
+        }
+
+    def apply(self, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+        h = jax.nn.relu(x @ params["fc1"]["w"])
+        return h @ params["fc2"]["w"]
+
+    def batch(self, step: int, batch_size: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        t = self.teacher()
+        key = jax.random.PRNGKey(self.seed * 7_777_777 + step + 1)
+        kx, kn, kh = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (batch_size, self.in_dim))
+        y = jax.nn.relu(x @ t["w1"]) @ t["w2"]
+        noise = self.noise * jax.random.normal(kn, y.shape)
+        if self.heavy_tail:
+            # occasional large-noise samples: the heavy-tailed gradient-noise
+            # profile (Zhang et al. 2020) under which Adam >> SGD and the
+            # paper's variance pathology is visible.
+            spike = (jax.random.uniform(kh, (batch_size, 1)) < 0.05).astype(
+                jnp.float32
+            )
+            noise = noise * (1.0 + 20.0 * spike)
+        return x, y + noise
+
+    def loss(self, params: dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        return jnp.mean(jnp.square(self.apply(params, x) - y))
+
+
+def make_batch_specs(cfg: ArchConfig, batch_size: int, seq_len: int) -> dict:
+    """ShapeDtypeStruct stand-ins for a training batch (dry-run input)."""
+    from repro.models.model import frontend_dim
+
+    specs = {
+        "labels": jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32),
+    }
+    if cfg.frontend != "none":
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (batch_size, seq_len, frontend_dim(cfg)), jnp.bfloat16
+        )
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32)
+    return specs

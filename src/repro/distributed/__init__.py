@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (
+    param_pspec,
+    tree_param_pspecs,
+    batch_pspecs,
+    cache_pspecs,
+    state_pspecs,
+    DP_AXES,
+    MODEL_AXIS,
+)

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: compressed N:M structured-sparse matmul (decode path).
+
+TPUs have no Sparse-Tensor-Core analogue, but decode is HBM-bandwidth-bound:
+the win from a learned N:M mask on TPU is reading only the kept N/M of the
+weights from HBM (DESIGN.md §3). The kernel streams compressed tiles —
+values ``(K·N/M, O)`` + 8-bit in-group indices — into VMEM, decompresses the
+tile *inside* VMEM with unrolled select ops, and feeds the dense MXU:
+
+    HBM traffic per weight tile:  (N/M)·(bits_w + 8)/bits_w of dense
+    (2:4 bf16: 0.75x;  1:4: 0.375x;  2:8 int8 would be 0.5x)
+
+Grid (i, j, k) over (rows of x / BM, cols of W / BO, reduction / BK) with a
+f32 VMEM accumulator; k is the innermost (sequential) dimension and the
+accumulator is flushed at k == K-1 — the standard Pallas TPU matmul schedule.
+Blocks: BM=128, BO=256, BK=512 dense-rows (=> 512·N/M compressed rows),
+MXU-aligned (multiples of 128 on the lane dim).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _nm_spmm_kernel(x_ref, v_ref, i_ref, o_ref, acc_ref, *, n: int, m: int, bk: int):
+    """x (BM, BK) @ decompress(v, i) (BK, BO) -> o (BM, BO)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    vals = v_ref[...].astype(jnp.float32)  # (BK*n/m, BO)
+    idx = i_ref[...].astype(jnp.int32)
+    g = bk // m  # dense groups in this block
+    bo = vals.shape[-1]
+    valsg = vals.reshape(g, n, bo)
+    idxg = idx.reshape(g, n, bo)
+    # decompress in VMEM: dense[g, r, o] = sum_j (idx[g, j, o] == r) * vals[g, j, o]
+    row = jax.lax.broadcasted_iota(jnp.int32, (g, m, bo), 1)
+    dense = jnp.zeros((g, m, bo), jnp.float32)
+    for j in range(n):  # unrolled: n is static
+        dense = dense + jnp.where(
+            idxg[:, j : j + 1, :] == row, valsg[:, j : j + 1, :], 0.0
+        )
+    w = dense.reshape(bk, bo)
+    acc_ref[...] += jax.lax.dot(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "m", "bm", "bo", "bk", "interpret"),
+)
+def nm_spmm_pallas(
+    x: jnp.ndarray,  # (B, K)
+    values: jnp.ndarray,  # (K*n/m, O)
+    indices: jnp.ndarray,  # (K*n/m, O) uint8
+    n: int,
+    m: int,
+    bm: int = 128,
+    bo: int = 256,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y = x @ decompress(values, indices); compressed weights never
+    materialize densely in HBM."""
+    b, k = x.shape
+    kc, o = values.shape
+    assert kc * m == k * n, (k, kc, n, m)
+    bm = min(bm, b)
+    bk = min(bk, k)
+    while k % bk or (bk * n) % m:
+        bk -= 1
+    bo = min(bo, o)
+    bp = -(-b // bm) * bm
+    op = -(-o // bo) * bo
+    xp = jnp.pad(x, ((0, bp - b), (0, 0)))
+    vp = jnp.pad(values, ((0, 0), (0, op - o)))
+    ip = jnp.pad(indices, ((0, 0), (0, op - o)))
+    bkc = bk * n // m  # compressed rows per block
+    grid = (bp // bm, op // bo, k // bk)
+    out = pl.pallas_call(
+        functools.partial(_nm_spmm_kernel, n=n, m=m, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bkc, bo), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bkc, bo), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bo), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, op), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bo), jnp.float32)],
+        interpret=interpret,
+    )(xp, vp, ip)
+    return out[:b, :o]

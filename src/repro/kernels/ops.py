@@ -1,0 +1,62 @@
+"""jit'd public wrappers for the Pallas kernels, with automatic fallback.
+
+``use_pallas(...)`` decides per-platform: on TPU the compiled kernels run
+natively; on CPU (this container) they run in interpret mode inside tests
+and benchmarks, while the hot training path uses the jnp reference (the
+kernels are the TPU *target*, not a CPU win).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masking as ref_masking
+from repro.kernels.nm_mask import nm_mask_apply_pallas
+from repro.kernels.nm_spmm import nm_spmm_pallas
+from repro.kernels import ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def nm_mask_apply(
+    w: jnp.ndarray,
+    n: int,
+    m: int,
+    *,
+    prefer_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(Π⊙w, Π) via the fused kernel when profitable.
+
+    2-D weights with groups on axis 0 route to Pallas; other ranks use the
+    reference path (they are rare and small in the zoo)."""
+    use = prefer_pallas if prefer_pallas is not None else on_tpu()
+    if use and w.ndim == 2 and w.shape[0] % m == 0:
+        itp = (not on_tpu()) if interpret is None else interpret
+        masked, mask = nm_mask_apply_pallas(w, n, m, interpret=itp)
+        return mask, masked
+    mask = ref_masking.nm_mask(w, n, m, 0)
+    return mask, mask * w
+
+
+def nm_spmm(
+    x: jnp.ndarray,
+    values: jnp.ndarray,
+    indices: jnp.ndarray,
+    n: int,
+    m: int,
+    *,
+    prefer_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Compressed N:M matmul (serving path)."""
+    use = prefer_pallas if prefer_pallas is not None else on_tpu()
+    if use:
+        itp = (not on_tpu()) if interpret is None else interpret
+        return nm_spmm_pallas(x, values, indices, n, m, interpret=itp)
+    return ref.nm_spmm_ref(x, values, indices, n, m)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref`` in kernel tests).
+
+These re-export / compose the reference implementations in ``repro.core.
+masking`` so the kernel tests have a single import point.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.masking import (
+    nm_compress,
+    nm_decompress,
+    nm_mask,
+    nm_mask_and_apply,
+)
+
+__all__ = [
+    "nm_mask",
+    "nm_mask_and_apply",
+    "nm_compress",
+    "nm_decompress",
+    "nm_spmm_ref",
+]
+
+
+def nm_spmm_ref(
+    x: jnp.ndarray,  # (B, K)
+    values: jnp.ndarray,  # (K*n/m, O)
+    indices: jnp.ndarray,  # (K*n/m, O) uint8
+    n: int,
+    m: int,
+) -> jnp.ndarray:
+    """Oracle for the compressed N:M matmul: decompress then dense matmul."""
+    w = nm_decompress(values, indices, n, m, group_axis=0)  # (K, O)
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,293 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) cell
+lowers, partitions, and compiles on the production mesh — and extract the
+memory / cost / collective numbers the roofline analysis (§Roofline) reads.
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first init); do not set it globally — tests and benches are
+supposed to see 1 device.
+
+Usage:
+    python -m repro.launch.dryrun --arch starcoder2-3b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out report.json]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.core as core
+from repro.configs import ASSIGNED_ARCHS, get_config, SHAPES
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.data.synthetic import make_batch_specs
+from repro.distributed.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    shardings_for,
+    state_pspecs,
+    tree_param_pspecs,
+    _dp,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.train.loop import TrainState, make_train_step
+from repro.core.step_optimizer import StepConfig, step_optimizer
+from repro.utils import hlo_analysis as H
+from repro.utils import hlo_cost as HC
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (ShapeDtypeStruct stand-ins; nothing is allocated)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Abstract model inputs for one cell."""
+    if shape.kind == "train":
+        return {"batch": make_batch_specs(cfg, shape.global_batch, shape.seq_len)}
+    if shape.kind == "prefill":
+        specs = make_batch_specs(cfg, shape.global_batch, shape.seq_len)
+        specs.pop("labels")
+        return {"batch": specs}
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len)
+        )
+        return {
+            "tokens": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+            "cache": cache,
+        }
+    raise ValueError(shape.kind)
+
+
+def abstract_train_state(cfg: ArchConfig, recipe: core.Recipe, step_cfg: StepConfig):
+    opt = step_optimizer(step_cfg)
+
+    def build():
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        return TrainState(
+            params=params,
+            opt=opt.init(params),
+            recipe=recipe.init_state(params),
+            comp=None,
+            rng=jax.random.PRNGKey(0),
+            data_state=jnp.zeros((2,), jnp.int32),
+        )
+
+    return jax.eval_shape(build)
+
+
+# ---------------------------------------------------------------------------
+# the three lowered programs
+# ---------------------------------------------------------------------------
+
+
+def _block_constraint(mesh, seq_axis: bool = True):
+    """Sequence-parallel residual-stream constraint (bounds remat memory)."""
+    dp = _dp(mesh)
+
+    def fn(x):
+        if x.ndim == 3:
+            spec = P(dp, "model" if seq_axis else None, None)
+        else:
+            spec = P(dp, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return fn
+
+
+def make_recipe(cfg: ArchConfig, n: int = 2, m: int = 4) -> core.Recipe:
+    return core.make_recipe(
+        "step", core.SparsityConfig(default=core.NMSparsity(n, m))
+    )
+
+
+def lower_train(cfg: ArchConfig, shape: ShapeSpec, mesh, *, seq_shard=True,
+                fsdp=True, nm=(2, 4)):
+    recipe = make_recipe(cfg, *nm)
+    step_cfg = StepConfig(learning_rate=1e-4)
+    opt = step_optimizer(step_cfg)
+    bc = _block_constraint(mesh, seq_axis=seq_shard)
+
+    def loss(p, batch):
+        return M.loss_fn(p, cfg, batch, remat=True, block_constraint=bc)
+
+    step = make_train_step(loss, recipe, opt, grad_clip=1.0)
+    state_abs = abstract_train_state(cfg, recipe, step_cfg)
+    specs = input_specs(cfg, shape)
+    state_sh = shardings_for(mesh, state_abs, state_pspecs(mesh, state_abs, fsdp=fsdp))
+    batch_sh = shardings_for(mesh, specs["batch"], batch_pspecs(mesh, specs["batch"]))
+    fn = jax.jit(step, in_shardings=(state_sh, batch_sh), donate_argnums=0)
+    return fn.lower(state_abs, specs["batch"])
+
+
+def lower_prefill(cfg: ArchConfig, shape: ShapeSpec, mesh, *, seq_shard=True,
+                  fsdp=True):
+    bc = _block_constraint(mesh, seq_axis=seq_shard)
+
+    def prefill_fn(params, batch):
+        logits, _, caches = M.forward(
+            params, cfg, batch, remat=False, want_cache=True, block_constraint=bc
+        )
+        return logits[:, -1, :], caches
+
+    params_abs = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = input_specs(cfg, shape)
+    p_sh = shardings_for(mesh, params_abs, tree_param_pspecs(params_abs, fsdp=fsdp))
+    b_sh = shardings_for(mesh, specs["batch"], batch_pspecs(mesh, specs["batch"]))
+    fn = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh))
+    return fn.lower(params_abs, specs["batch"])
+
+
+def lower_decode(cfg: ArchConfig, shape: ShapeSpec, mesh, *, fsdp=False, kv_shard="seq"):
+    def serve_step(params, tokens, cache):
+        return M.decode_step(params, cfg, tokens, cache)
+
+    params_abs = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = input_specs(cfg, shape)
+    # serving params: TP only (no FSDP — weights must be resident per step)
+    from repro.distributed.sharding import sanitize_spec
+    p_sh = shardings_for(mesh, params_abs, tree_param_pspecs(params_abs, fsdp=fsdp))
+    t_sh = NamedSharding(
+        mesh, sanitize_spec(P(_dp(mesh)), (shape.global_batch,), mesh)
+    )
+    c_sh = shardings_for(mesh, specs["cache"], cache_pspecs(mesh, specs["cache"], kv_shard=kv_shard))
+    fn = jax.jit(serve_step, in_shardings=(p_sh, t_sh, c_sh), donate_argnums=2)
+    return fn.lower(params_abs, specs["tokens"], specs["cache"])
+
+
+LOWER = {"train": lower_train, "prefill": lower_prefill, "decode": lower_decode}
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(
+    arch: str, shape_name: str, *, multi_pod: bool = False, **overrides
+) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_dev = 512 if multi_pod else 256
+    report: dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_dev,
+    }
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        report["status"] = "skipped"
+        report["reason"] = "full-attention arch: 500k dense KV decode is quadratic by construction (DESIGN.md §4)"
+        return report
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        t0 = time.time()
+        with mesh:
+            lowered = LOWER[shape.kind](cfg, shape, mesh, **overrides)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = H.memory_analysis_dict(compiled)
+        cost = H.cost_analysis_dict(compiled)
+        text = compiled.as_text()
+        coll = H.collective_bytes(text)
+        walk = HC.analyze(text)  # trip-count-corrected (see utils/hlo_cost.py)
+        report.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=mem,
+            flops=walk["flops"],
+            flops_xla_uncorrected=cost.get("flops", 0.0),
+            bytes_accessed=cost.get("bytes accessed", 0.0),
+            collectives={"total_bytes": walk["collective_total"],
+                         "per_kind": walk["collective_bytes"],
+                         "counts": coll.get("counts", {}),
+                         "unknown_trip_count_whiles": walk["unknown_trip_count_whiles"]},
+        )
+    except Exception as e:  # report, don't crash the sweep
+        report.update(status="error", error=f"{type(e).__name__}: {e}",
+                      trace=traceback.format_exc()[-2000:])
+    return report
+
+
+def all_cells(multi_pod: bool) -> list[tuple[str, str]]:
+    cells = []
+    for arch in ASSIGNED_ARCHS:
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            cells.append((arch, shape))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="incremental JSON report path")
+    args = ap.parse_args()
+
+    existing: dict[str, dict] = {}
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            existing = json.load(f)
+
+    def key(arch, shape, mp):
+        return f"{arch}|{shape}|{'mp' if mp else 'sp'}"
+
+    todo: list[tuple[str, str, bool]] = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        for mp in meshes:
+            for arch, shape in all_cells(mp):
+                todo.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mp in meshes:
+            todo.append((args.arch, args.shape, mp))
+
+    for arch, shape, mp in todo:
+        k = key(arch, shape, mp)
+        if k in existing and existing[k].get("status") in ("ok", "skipped"):
+            print(f"[skip-cached] {k}")
+            continue
+        print(f"[run] {k} ...", flush=True)
+        rep = run_cell(arch, shape, multi_pod=mp)
+        line = {kk: rep.get(kk) for kk in ("status", "compile_s", "flops", "error")}
+        print(f"  -> {line}", flush=True)
+        if rep.get("status") == "ok":
+            mem = rep["memory"]
+            per_dev = (mem.get("argument_size_in_bytes", 0)
+                       + mem.get("temp_size_in_bytes", 0)
+                       - mem.get("alias_size_in_bytes", 0))
+            print(f"  memory/device ~ {per_dev/1e9:.2f} GB | collective GB "
+                  f"{rep['collectives']['total_bytes']/1e9:.2f}", flush=True)
+        existing[k] = rep
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(existing, f, indent=1)
+    n_ok = sum(1 for r in existing.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in existing.values() if r.get("status") == "skipped")
+    n_err = sum(1 for r in existing.values() if r.get("status") == "error")
+    print(f"done: ok={n_ok} skipped={n_skip} error={n_err}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module constant) so importing this module never touches
+jax device state — the dry-run sets XLA_FLAGS *before* any jax init, and
+smoke tests must keep seeing 1 device.
+
+Topology (TPU v5e target):
+- single pod: (16, 16) over ("data", "model") = 256 chips.
+- multi-pod: (2, 16, 16) over ("pod", "data", "model") = 512 chips;
+  "pod" is an outer data-parallel axis (the model axes never cross the
+  inter-pod DCI).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1):
+    """A mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    data = max(1, n // model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# Hardware constants for the roofline model (TPU v5e, per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW_PER_LINK = 50e9  # B/s per link (~ per sharded axis direction)

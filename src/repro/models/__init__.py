@@ -1,0 +1,14 @@
+# Lazy exports to break the configs.base <-> models.model import cycle
+# (configs.base needs the sub-config dataclasses from leaf modules;
+#  models.model needs ArchConfig from configs.base).
+_EXPORTS = ("TransformerLM", "init_params", "model_flops_per_token", "forward",
+            "loss_fn", "decode_step", "prefill", "init_cache", "param_count",
+            "active_param_count", "layer_plan", "frontend_dim")
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        from repro.models import model as _m
+
+        return getattr(_m, name)
+    raise AttributeError(name)

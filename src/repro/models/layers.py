@@ -1,0 +1,259 @@
+"""Shared neural-net layers: norms, RoPE/M-RoPE, chunked attention, MLPs.
+
+Conventions
+-----------
+- Matmul weights are stored ``(in_features, out_features)`` (``y = x @ W``)
+  so N:M sparsity groups run along axis 0 — the reduction axis.
+- All layers are pure functions over explicit parameter dicts.
+- Attention is implemented with an online-softmax scan over KV chunks
+  (flash-attention style) so the 32k-prefill cells never materialize a
+  (S, S) score matrix — this is the TPU-native memory-hierarchy adaptation
+  (block lives in VMEM, HBM traffic is O(S) per query block).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    scale = (2.0 / (in_dim + out_dim)) ** 0.5
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(
+        x.dtype
+    )
+
+
+def layernorm(
+    x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0
+) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    sections=(2, 3, 3),
+    theta: float = 10000.0,
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: the head dim is split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x: (B, S, H, D); positions: (B, S, 3) int32 (temporal, height, width).
+    ``sections`` are the relative shares of D/2 per stream (Qwen2-VL uses
+    16/24/24 of 64 — ratio 2:3:3).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    tot = sum(sections)
+    splits = [half * s // tot for s in sections]
+    splits[-1] = half - sum(splits[:-1])
+    freqs = rope_freqs(d, theta)  # (half,)
+    # build per-frequency position source: first splits[0] freqs follow t, etc.
+    pos_idx = jnp.concatenate(
+        [jnp.full((n,), i, jnp.int32) for i, n in enumerate(splits)]
+    )  # (half,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),  # (B, S, 3)
+        jnp.broadcast_to(pos_idx, positions.shape[:2] + (half,)).astype(jnp.int32) * 0
+        + pos_idx[None, None, :],
+        axis=-1,
+    )  # (B, S, half)
+    ang = pos * freqs  # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _gqa_expand(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """Reshape q (B,S,H,D) -> (B,S,n_kv,H/n_kv,D) for grouped attention."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def chunked_attention(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding-window (local) attention
+    q_offset: int = 0,  # position of q[0] within the kv sequence
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Online-softmax attention, scanning over KV chunks (flash style).
+
+    Never materializes more than a (Sq, chunk) score block per (batch, head),
+    which is what makes the 32k-prefill dry-run cells fit. GQA is handled by
+    grouping query heads over each KV head.
+    """
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    g = h // hkv
+    qg = _gqa_expand(q, hkv).astype(jnp.float32)  # (B,Sq,Hkv,G,D)
+    scale = d**-0.5
+
+    n_chunks = (sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, hkv, d)
+    vc = v.reshape(b, n_chunks, chunk, hkv, d)
+
+    q_pos = q_offset + jnp.arange(sq)  # (Sq,)
+
+    def body(carry, inputs):
+        m_prev, l_prev, acc = carry
+        kb, vb, c_idx = inputs  # (B,chunk,Hkv,D) x2, scalar
+        kv_pos = c_idx * chunk + jnp.arange(chunk)  # (chunk,)
+        s = (
+            jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb.astype(jnp.float32)) * scale
+        )  # (B,Hkv,G,Sq,chunk)
+        mask = kv_pos[None, :] <= (q_pos[:, None] if causal else jnp.inf)
+        if not causal:
+            mask = jnp.ones((sq, chunk), bool)
+        if window is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        mask = mask & (kv_pos[None, :] < sk)  # padding
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        corr = jnp.exp(jnp.where(jnp.isinf(m_prev), -jnp.inf, m_prev) - m_safe)
+        corr = jnp.where(jnp.isinf(m_prev), 0.0, corr)
+        l_new = corr * l_prev + jnp.sum(p, axis=-1)
+        acc = corr[..., None] * acc + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, acc0),
+        (
+            jnp.moveaxis(kc, 1, 0),
+            jnp.moveaxis(vc, 1, 0),
+            jnp.arange(n_chunks),
+        ),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,Hkv,G,Sq,D)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, D)
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    cache_len,  # (B,) or scalar int32: valid prefix length
+    *,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Single-token attention over a KV cache (dense — decode is
+    bandwidth-bound, not memory-capacity-bound, so no chunking needed)."""
+    b, s, hkv, d = k_cache.shape
+    h = q.shape[2]
+    g = h // hkv
+    qg = _gqa_expand(q, hkv).astype(jnp.float32)[:, 0]  # (B,Hkv,G,D)
+    scale = d**-0.5
+    scores = (
+        jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32)) * scale
+    )  # (B,Hkv,G,S)
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.reshape(jnp.asarray(cache_len), (-1, 1))  # (B,S)
+    if window is not None:
+        valid = valid & (
+            pos[None, :] >= jnp.reshape(jnp.asarray(cache_len), (-1, 1)) - window
+        )
+    scores = jnp.where(valid[:, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_mlp(x: jnp.ndarray, p: dict) -> jnp.ndarray:
+    """p: {gate: (d, f), up: (d, f), down: (f, d)}"""
+    gate = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32))
+    up = (x @ p["w_up"]).astype(jnp.float32)
+    return ((gate * up).astype(x.dtype)) @ p["w_down"]
+
+
+def gelu_mlp(x: jnp.ndarray, p: dict) -> jnp.ndarray:
+    """p: {w_fc: (d, f), w_proj: (f, d)} (+ optional biases)"""
+    h = x @ p["w_fc"]
+    if "b_fc" in p:
+        h = h + p["b_fc"]
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    y = h @ p["w_proj"]
+    if "b_proj" in p:
+        y = y + p["b_proj"]
+    return y

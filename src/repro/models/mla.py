@@ -1,0 +1,136 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+MLA compresses K/V into a shared low-rank latent ``c_kv`` (kv_lora_rank wide)
+plus a small shared RoPE key; per-head K(nope)/V are up-projected from the
+latent. At decode time only ``(c_kv, k_rope)`` is cached — the KV cache is
+``kv_lora + rope_dim`` wide per token instead of ``2 · H · head_dim``, an
+~18× reduction for DeepSeek-V2-Lite. This is the architecture's whole point
+and our serve path honors it: the cache stores latents and decode re-expands
+K/V on the fly (bandwidth-for-compute trade — the right direction on TPU
+where HBM bandwidth dominates decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, chunked_attention, decode_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+def init_mla_params(
+    key, d_model: int, n_heads: int, cfg: MLAConfig, dtype=jnp.bfloat16
+) -> dict:
+    ks = jax.random.split(key, 6)
+    sc = lambda i, o: (2.0 / (i + o)) ** 0.5
+    qd = n_heads * (cfg.nope_head_dim + cfg.rope_head_dim)
+    kvd = n_heads * (cfg.nope_head_dim + cfg.v_head_dim)
+    od = n_heads * cfg.v_head_dim
+    mk = lambda k, i, o: (
+        jax.random.normal(k, (i, o), jnp.float32) * sc(i, o)
+    ).astype(dtype)
+    return {
+        "w_q": mk(ks[0], d_model, qd),
+        "w_dkv": mk(ks[1], d_model, cfg.kv_lora + cfg.rope_head_dim),
+        "w_ukv": mk(ks[2], cfg.kv_lora, kvd),
+        "w_o": mk(ks[3], od, d_model),
+    }
+
+
+def _project_qkv(x, p, n_heads: int, cfg: MLAConfig):
+    b, s, _ = x.shape
+    nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q = (x @ p["w_q"]).reshape(b, s, n_heads, nd + rd)
+    dkv = x @ p["w_dkv"]  # (B,S,kv_lora + rd)
+    c_kv, k_rope = dkv[..., : cfg.kv_lora], dkv[..., cfg.kv_lora :]
+    return q, c_kv, k_rope
+
+
+def _expand_kv(c_kv, p, n_heads: int, cfg: MLAConfig):
+    b, s, _ = c_kv.shape
+    nd, vd = cfg.nope_head_dim, cfg.v_head_dim
+    ukv = (c_kv @ p["w_ukv"]).reshape(b, s, n_heads, nd + vd)
+    return ukv[..., :nd], ukv[..., nd:]  # k_nope, v
+
+
+def mla_attention(
+    x: jnp.ndarray,  # (B, S, d)
+    p: dict,
+    n_heads: int,
+    cfg: MLAConfig,
+    positions: jnp.ndarray,
+    rope_theta: float = 10000.0,
+    chunk: int = 512,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence MLA (train / prefill). Returns (out, (c_kv, k_rope))."""
+    b, s, _ = x.shape
+    nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q, c_kv, k_rope = _project_qkv(x, p, n_heads, cfg)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    k_rope_r = apply_rope(k_rope[:, :, None, :], positions, rope_theta)  # (B,S,1,rd)
+    k_nope, v = _expand_kv(c_kv, p, n_heads, cfg)
+
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)  # (B,S,H,nd+rd)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_r, (b, s, n_heads, rd))], axis=-1
+    )
+    # pad v to the same head dim so one attention kernel serves both
+    out = chunked_attention(qf, kf, v_pad(v, nd + rd), causal=True, chunk=chunk)
+    out = out[..., :vd].reshape(b, s, n_heads * vd)
+    return out @ p["w_o"], (c_kv, k_rope_r[:, :, 0, :])
+
+
+def v_pad(v: jnp.ndarray, to: int) -> jnp.ndarray:
+    return jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, to - v.shape[-1])))
+
+
+def mla_decode(
+    x: jnp.ndarray,  # (B, 1, d)
+    p: dict,
+    n_heads: int,
+    cfg: MLAConfig,
+    cache_ckv: jnp.ndarray,  # (B, S_max, kv_lora)
+    cache_krope: jnp.ndarray,  # (B, S_max, rd)
+    cache_len,  # (B,) int32
+    rope_theta: float = 10000.0,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step; re-expands K/V from the latent cache.
+
+    Returns (out, new_cache_ckv, new_cache_krope). The caller advances
+    cache_len."""
+    b = x.shape[0]
+    nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    pos = jnp.reshape(jnp.asarray(cache_len), (-1, 1))  # (B,1)
+    q, c_kv_new, k_rope_new = _project_qkv(x, p, n_heads, cfg)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, pos, rope_theta)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], pos, rope_theta)[:, :, 0, :]
+
+    # write the new latent into the cache at position cache_len
+    bidx = jnp.arange(b)
+    cache_ckv = cache_ckv.at[bidx, jnp.reshape(cache_len, (-1,))].set(c_kv_new[:, 0])
+    cache_krope = cache_krope.at[bidx, jnp.reshape(cache_len, (-1,))].set(
+        k_rope_new[:, 0]
+    )
+
+    # expand the whole latent cache to per-head K/V (bandwidth → compute)
+    k_nope, v = _expand_kv(cache_ckv, p, n_heads, cfg)  # (B,S,H,nd/vd)
+    s = cache_ckv.shape[1]
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(cache_krope[:, :, None, :], (b, s, n_heads, rd))],
+        axis=-1,
+    )
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = decode_attention(qf, kf, v_pad(v, nd + rd), jnp.reshape(cache_len, (-1,)) + 1)
+    out = out[..., :vd].reshape(b, 1, n_heads * vd)
+    return out @ p["w_o"], cache_ckv, cache_krope

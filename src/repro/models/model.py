@@ -1,0 +1,709 @@
+"""The architecture zoo's single entry point: a configurable decoder LM.
+
+One code path covers all 10 assigned architectures:
+
+- mixers: GQA attention (RoPE / M-RoPE / QKV-bias / sliding window),
+  MLA (DeepSeek latent attention), Mamba-2 SSD, RG-LRU (Griffin).
+- MLPs: SwiGLU, GeLU, MoE (top-k, shared experts), or none (Mamba-2).
+- heterogenous stacks via ``layer_plan``: a periodic super-block is scanned
+  (``lax.scan`` keeps HLO size O(1) in depth — 80-layer dry-runs compile),
+  with optional non-periodic head/tail layers applied individually
+  (DeepSeek's dense first layer; RecurrentGemma's 38 = 12×(rec,rec,attn)+2).
+
+The model is sparsity-agnostic: recipes mask the *parameter tree* before it
+reaches ``forward`` (see core/recipes.py), exactly like the paper applies
+Π⊙w per training step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import recurrent as REC
+from repro.models import ssm as SSM
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    head: tuple[str, ...]  # kinds of unscanned leading layers
+    period: tuple[str, ...]  # the scanned super-block's kinds
+    n_body: int  # number of scanned super-blocks
+    tail: tuple[str, ...]  # kinds of unscanned trailing layers
+
+
+def layer_plan(cfg: ArchConfig) -> LayerPlan:
+    kinds = cfg.block_kinds()
+    head: list[str] = []
+    if cfg.moe is not None and cfg.moe.first_layer_dense:
+        head = [kinds[0] + ":dense"]
+        kinds = kinds[1:]
+    if cfg.layer_pattern is None:
+        period = (kinds[0],) if kinds else ()
+        return LayerPlan(tuple(head), period, len(kinds), ())
+    p = len(cfg.layer_pattern)
+    n_body = len(kinds) // p
+    tail = tuple(kinds[n_body * p :])
+    return LayerPlan(tuple(head), tuple(cfg.layer_pattern), n_body, tail)
+
+
+def _block_mixer_mlp(kind: str, cfg: ArchConfig) -> tuple[str, str]:
+    """kind string -> (mixer, mlp_kind)."""
+    force_dense = kind.endswith(":dense")
+    base = kind.split(":")[0]
+    if base == "ssm":
+        mixer = "ssm"
+        mlp = "none"
+    elif base == "rec":
+        mixer = "rec"
+        mlp = "dense"
+    else:  # attn
+        mixer = "mla" if cfg.mla is not None else "attn"
+        mlp = "moe" if (cfg.moe is not None and not force_dense) else "dense"
+    if force_dense:
+        mlp = "dense"
+    return mixer, mlp
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def _init_norm(cfg: ArchConfig, d: int) -> dict:
+    if cfg.norm == "rms":
+        return {"norm_scale": jnp.zeros((d,), jnp.float32)}
+    return {
+        "norm_scale": jnp.ones((d,), jnp.float32),
+        "norm_bias": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _apply_norm(cfg: ArchConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm == "rms":
+        return L.rmsnorm(x, p["norm_scale"])
+    return L.layernorm(x, p["norm_scale"], p["norm_bias"])
+
+
+def _init_attn(key, cfg: ArchConfig, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d, h * hd, dtype),
+        "wk": L.dense_init(ks[1], d, kv * hd, dtype),
+        "wv": L.dense_init(ks[2], d, kv * hd, dtype),
+        "wo": L.dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bias_q"] = jnp.zeros((h * hd,), dtype)
+        p["bias_k"] = jnp.zeros((kv * hd,), dtype)
+        p["bias_v"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.o_bias:
+        p["bias_o"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _init_mlp(key, cfg: ArchConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": L.dense_init(ks[0], d, f, dtype),
+            "w_up": L.dense_init(ks[1], d, f, dtype),
+            "w_down": L.dense_init(ks[2], f, d, dtype),
+        }
+    return {
+        "w_fc": L.dense_init(ks[0], d, f, dtype),
+        "w_proj": L.dense_init(ks[1], f, d, dtype),
+    }
+
+
+def _init_block(key, kind: str, cfg: ArchConfig, dtype) -> dict:
+    mixer, mlp = _block_mixer_mlp(kind, cfg)
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict = {"pre": _init_norm(cfg, d)}
+    if mixer == "attn":
+        p["attn"] = _init_attn(k1, cfg, dtype)
+    elif mixer == "mla":
+        p["attn"] = MLA.init_mla_params(k1, d, cfg.n_heads, cfg.mla, dtype)
+    elif mixer == "ssm":
+        p["mixer"] = SSM.init_ssm_params(k1, d, cfg.ssm, dtype)
+    elif mixer == "rec":
+        p["mixer"] = REC.init_rglru_params(k1, d, cfg.rglru, dtype)
+    if mlp != "none":
+        p["post"] = _init_norm(cfg, d)
+        if mlp == "moe":
+            p["moe"] = MOE.init_moe_params(k2, d, cfg.moe, dtype)
+        else:
+            p["mlp"] = _init_mlp(k2, cfg, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    plan = layer_plan(cfg)
+    keys = jax.random.split(key, 8)
+    params: dict = {
+        "embed": {"tok_embed": L.embed_init(keys[0], cfg.vocab, cfg.d_model, dtype)},
+        "final": _init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = {
+            "out_embed": L.dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+        }
+    if cfg.frontend != "none":
+        fdim = frontend_dim(cfg)
+        params["frontend"] = {
+            "frontend_proj": L.dense_init(keys[2], fdim, cfg.d_model, dtype)
+        }
+    for i, kind in enumerate(plan.head):
+        params[f"head_{i}"] = _init_block(
+            jax.random.fold_in(keys[3], i), kind, cfg, dtype
+        )
+    if plan.n_body:
+        def one(k):
+            sb = {}
+            for j, kind in enumerate(plan.period):
+                sb[f"sb_{j}"] = _init_block(jax.random.fold_in(k, j), kind, cfg, dtype)
+            return sb
+
+        body_keys = jax.random.split(keys[4], plan.n_body)
+        params["body"] = jax.vmap(one)(body_keys)
+    for i, kind in enumerate(plan.tail):
+        params[f"tail_{i}"] = _init_block(
+            jax.random.fold_in(keys[5], i), kind, cfg, dtype
+        )
+    return params
+
+
+def frontend_dim(cfg: ArchConfig) -> int:
+    return {"audio_stub": 512, "vision_stub": 1176}.get(cfg.frontend, 0)
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attn_forward(
+    x, p, cfg: ArchConfig, positions, *, chunk: int, want_cache: bool
+):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bias_q"], k + p["bias_k"], v + p["bias_v"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.rope == "rope":
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = L.apply_mrope(q, positions, theta=cfg.rope_theta)
+        k = L.apply_mrope(k, positions, theta=cfg.rope_theta)
+    out = L.chunked_attention(
+        q, k, v, causal=True, window=cfg.local_window, chunk=chunk
+    )
+    out = out.reshape(b, s, h * hd) @ p["wo"]
+    if cfg.o_bias:
+        out = out + p["bias_o"]
+    cache = (k, v) if want_cache else None
+    return out, cache
+
+
+def _block_forward(
+    x,
+    p: dict,
+    kind: str,
+    cfg: ArchConfig,
+    positions,
+    *,
+    chunk: int = 512,
+    want_cache: bool = False,
+    ep_constraint=None,
+):
+    """Full-seq block. Returns (x_out, aux_loss, cache_entry)."""
+    mixer, mlp = _block_mixer_mlp(kind, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    h = _apply_norm(cfg, p["pre"], x)
+    if mixer == "attn":
+        mix_out, cache = _attn_forward(
+            h, p["attn"], cfg, positions, chunk=chunk, want_cache=want_cache
+        )
+    elif mixer == "mla":
+        pos1d = positions if positions.ndim == 2 else positions[..., 0]
+        mix_out, lat = MLA.mla_attention(
+            h, p["attn"], cfg.n_heads, cfg.mla, pos1d, cfg.rope_theta, chunk
+        )
+        cache = lat if want_cache else None
+    elif mixer == "ssm":
+        mix_out, state = SSM.ssm_block(h, p["mixer"], cfg.d_model, cfg.ssm)
+        cache = state if want_cache else None  # (ssm_state, conv_tail)
+    elif mixer == "rec":
+        mix_out, state, conv_state = REC.rglru_block(h, p["mixer"], cfg.rglru)
+        cache = (state, conv_state) if want_cache else None
+    else:
+        raise AssertionError(mixer)
+    x = x + mix_out
+    if mlp != "none":
+        h2 = _apply_norm(cfg, p["post"], x)
+        if mlp == "moe":
+            mo, a = MOE.moe_mlp(h2, p["moe"], cfg.moe, ep_constraint=ep_constraint)
+            aux = aux + a
+        elif cfg.mlp == "swiglu":
+            mo = L.swiglu_mlp(h2, p["mlp"])
+        else:
+            mo = L.gelu_mlp(h2, p["mlp"])
+        x = x + mo
+    return x, aux, cache
+
+
+def _default_positions(cfg: ArchConfig, b: int, s: int, offset=0):
+    pos = offset + jnp.arange(s)[None, :]
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.rope == "mrope":
+        return jnp.broadcast_to(pos[..., None], (b, s, 3))
+    return pos
+
+
+def forward(
+    params: dict,
+    cfg: ArchConfig,
+    batch: dict,
+    *,
+    chunk: int = 512,
+    remat: bool = True,
+    want_cache: bool = False,
+    block_constraint=None,
+    ep_constraint=None,
+) -> tuple[jnp.ndarray, jnp.ndarray, Any]:
+    """Full-sequence forward.
+
+    ``batch``: {"tokens": (B,S) int32} or {"embeds": (B,S,F)} for stub
+    frontends; optional {"positions"}. Returns (logits, aux_loss, caches).
+
+    ``block_constraint``: optional fn applied to the residual stream at
+    layer boundaries — the launch layer injects
+    ``lax.with_sharding_constraint`` here (e.g. sequence-parallel residuals),
+    which pins the remat-saved activations' layout under pjit.
+    """
+    plan = layer_plan(cfg)
+    if "embeds" in batch and cfg.frontend != "none":
+        x = batch["embeds"] @ params["frontend"]["frontend_proj"]
+        b, s = x.shape[0], x.shape[1]
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = params["embed"]["tok_embed"][tokens]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+
+    if block_constraint is not None:
+        x = block_constraint(x)
+    aux = jnp.zeros((), jnp.float32)
+    caches: dict = {}
+
+    for i, kind in enumerate(plan.head):
+        x, a, c = _block_forward(
+            x, params[f"head_{i}"], kind, cfg, positions,
+            chunk=chunk, want_cache=want_cache, ep_constraint=ep_constraint,
+        )
+        aux += a
+        if want_cache:
+            caches[f"head_{i}"] = c
+
+    if plan.n_body:
+        def superblock(x, p_sb):
+            a_tot = jnp.zeros((), jnp.float32)
+            cs = {}
+            for j, kind in enumerate(plan.period):
+                x, a, c = _block_forward(
+                    x, p_sb[f"sb_{j}"], kind, cfg, positions,
+                    chunk=chunk, want_cache=want_cache, ep_constraint=ep_constraint,
+                )
+                a_tot += a
+                if want_cache:
+                    cs[f"sb_{j}"] = c
+            if block_constraint is not None:
+                x = block_constraint(x)
+            return x, (a_tot, cs if want_cache else None)
+
+        sb_fn = jax.checkpoint(superblock) if remat else superblock
+
+        def scan_body(x, p_sb):
+            return sb_fn(x, p_sb)
+
+        x, (a_list, c_stack) = jax.lax.scan(scan_body, x, params["body"])
+        aux += jnp.sum(a_list)
+        if want_cache:
+            caches["body"] = c_stack
+
+    for i, kind in enumerate(plan.tail):
+        x, a, c = _block_forward(
+            x, params[f"tail_{i}"], kind, cfg, positions,
+            chunk=chunk, want_cache=want_cache, ep_constraint=ep_constraint,
+        )
+        aux += a
+        if want_cache:
+            caches[f"tail_{i}"] = c
+
+    x = _apply_norm(cfg, params["final"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["tok_embed"].T
+    else:
+        logits = x @ params["unembed"]["out_embed"]
+    return logits, aux, (caches if want_cache else None)
+
+
+def loss_fn(
+    params: dict, cfg: ArchConfig, batch: dict, *, chunk: int = 512,
+    remat: bool = True, aux_weight: float = 0.01, z_weight: float = 1e-4,
+    block_constraint=None, ep_constraint=None, logits_constraint=None,
+) -> tuple[jnp.ndarray, dict]:
+    logits, aux, _ = forward(params, cfg, batch, chunk=chunk, remat=remat,
+                             block_constraint=block_constraint,
+                             ep_constraint=ep_constraint)
+    if logits_constraint is not None:
+        # keep logits vocab-sharded through the loss: logsumexp reduces over
+        # the sharded vocab dim (GSPMD psums a (B,S) scalar field instead of
+        # all-gathering the (B,S,V) logits — §Perf hillclimb #1)
+        logits = logits_constraint(logits)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    nll = lse - ll
+    zloss = jnp.square(lse)
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce = jnp.sum(nll * mask) / denom
+        zl = jnp.sum(zloss * mask) / denom
+    else:
+        ce = jnp.mean(nll)
+        zl = jnp.mean(zloss)
+    total = ce + aux_weight * aux + z_weight * zl
+    return total, {"ce": ce, "aux": aux, "zloss": zl}
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving path
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int, dtype=None) -> dict:
+    """Allocate the decode cache for every layer."""
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    plan = layer_plan(cfg)
+
+    def one(kind: str) -> Any:
+        mixer, _ = _block_mixer_mlp(kind, cfg)
+        if mixer == "attn":
+            s = max_len if cfg.local_window is None else min(max_len, cfg.local_window)
+            shp = (batch_size, s, cfg.n_kv, cfg.hd)
+            return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        if mixer == "mla":
+            return {
+                "ckv": jnp.zeros((batch_size, max_len, cfg.mla.kv_lora), dtype),
+                "krope": jnp.zeros(
+                    (batch_size, max_len, cfg.mla.rope_head_dim), dtype
+                ),
+            }
+        if mixer == "ssm":
+            dims = SSM.ssm_dims(cfg.d_model, cfg.ssm)
+            conv_dim = dims["d_inner"] + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+            return {
+                "state": jnp.zeros(
+                    (batch_size, dims["n_heads"], cfg.ssm.head_dim, cfg.ssm.d_state),
+                    jnp.float32,
+                ),
+                "conv": jnp.zeros(
+                    (batch_size, cfg.ssm.conv_width - 1, conv_dim), dtype
+                ),
+            }
+        if mixer == "rec":
+            w = cfg.rglru.lru_width
+            return {
+                "state": jnp.zeros((batch_size, w), jnp.float32),
+                "conv": jnp.zeros(
+                    (batch_size, cfg.rglru.conv_width - 1, w), dtype
+                ),
+            }
+        raise AssertionError(mixer)
+
+    cache: dict = {"len": jnp.zeros((batch_size,), jnp.int32)}
+    for i, kind in enumerate(plan.head):
+        cache[f"head_{i}"] = one(kind)
+    if plan.n_body:
+        sb = {f"sb_{j}": one(kind) for j, kind in enumerate(plan.period)}
+        cache["body"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (plan.n_body,) + x.shape).copy(), sb
+        )
+    for i, kind in enumerate(plan.tail):
+        cache[f"tail_{i}"] = one(kind)
+    return cache
+
+
+def _attn_decode(x, p, cfg: ArchConfig, c: dict, pos):
+    """x: (B,1,d). pos: (B,) positions of the new token."""
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bias_q"], k + p["bias_k"], v + p["bias_v"]
+    q = q.reshape(b, 1, h, hd)
+    k = k.reshape(b, 1, kv, hd)
+    v = v.reshape(b, 1, kv, hd)
+    posb = jnp.reshape(pos, (b, 1))
+    if cfg.rope == "rope":
+        q = L.apply_rope(q, posb, cfg.rope_theta)
+        k = L.apply_rope(k, posb, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        p3 = jnp.broadcast_to(posb[..., None], (b, 1, 3))
+        q = L.apply_mrope(q, p3, theta=cfg.rope_theta)
+        k = L.apply_mrope(k, p3, theta=cfg.rope_theta)
+
+    s_cache = c["k"].shape[1]
+    if cfg.local_window is not None and cfg.local_window <= s_cache:
+        # ring-free rolling window: shift when full
+        full = pos[0] >= s_cache  # uniform pos across batch in our serving
+        kc = jnp.where(full, jnp.roll(c["k"], -1, axis=1), c["k"])
+        vc = jnp.where(full, jnp.roll(c["v"], -1, axis=1), c["v"])
+        slot = jnp.minimum(pos, s_cache - 1)
+    else:
+        kc, vc = c["k"], c["v"]
+        slot = pos
+    bidx = jnp.arange(b)
+    kc = kc.at[bidx, slot].set(k[:, 0])
+    vc = vc.at[bidx, slot].set(v[:, 0])
+    out = L.decode_attention(q, kc, vc, jnp.minimum(pos, s_cache - 1) + 1)
+    out = out.reshape(b, 1, h * hd) @ p["wo"]
+    if cfg.o_bias:
+        out = out + p["bias_o"]
+    return out, {"k": kc, "v": vc}
+
+
+def _block_decode(x, p, kind: str, cfg: ArchConfig, c, pos):
+    mixer, mlp = _block_mixer_mlp(kind, cfg)
+    h = _apply_norm(cfg, p["pre"], x)
+    if mixer == "attn":
+        mix_out, c = _attn_decode(h, p["attn"], cfg, c, pos)
+    elif mixer == "mla":
+        mix_out, ckv, krope = MLA.mla_decode(
+            h, p["attn"], cfg.n_heads, cfg.mla, c["ckv"], c["krope"], pos,
+            cfg.rope_theta,
+        )
+        c = {"ckv": ckv, "krope": krope}
+    elif mixer == "ssm":
+        mix_out, st, cv = SSM.ssm_decode_step(
+            h, p["mixer"], cfg.d_model, cfg.ssm, c["state"], c["conv"]
+        )
+        c = {"state": st, "conv": cv}
+    elif mixer == "rec":
+        mix_out, st, cv = REC.rglru_decode_step(
+            h, p["mixer"], cfg.rglru, c["state"], c["conv"]
+        )
+        c = {"state": st, "conv": cv}
+    x = x + mix_out
+    if mlp != "none":
+        h2 = _apply_norm(cfg, p["post"], x)
+        if mlp == "moe":
+            mo, _ = MOE.moe_mlp(h2, p["moe"], cfg.moe)
+        elif cfg.mlp == "swiglu":
+            mo = L.swiglu_mlp(h2, p["mlp"])
+        else:
+            mo = L.gelu_mlp(h2, p["mlp"])
+        x = x + mo
+    return x, c
+
+
+def decode_step(
+    params: dict, cfg: ArchConfig, tokens: jnp.ndarray, cache: dict
+) -> tuple[jnp.ndarray, dict]:
+    """One serving step: tokens (B,) int32 -> (logits (B,V), new cache)."""
+    plan = layer_plan(cfg)
+    pos = cache["len"]  # (B,)
+    x = params["embed"]["tok_embed"][tokens][:, None, :]  # (B,1,d)
+    new_cache: dict = {"len": cache["len"] + 1}
+
+    for i, kind in enumerate(plan.head):
+        x, c = _block_decode(x, params[f"head_{i}"], kind, cfg, cache[f"head_{i}"], pos)
+        new_cache[f"head_{i}"] = c
+
+    if plan.n_body:
+        def scan_body(x, pc):
+            p_sb, c_sb = pc
+            cs = {}
+            for j, kind in enumerate(plan.period):
+                x, cj = _block_decode(x, p_sb[f"sb_{j}"], kind, cfg, c_sb[f"sb_{j}"], pos)
+                cs[f"sb_{j}"] = cj
+            return x, cs
+
+        x, body_cache = jax.lax.scan(scan_body, x, (params["body"], cache["body"]))
+        new_cache["body"] = body_cache
+
+    for i, kind in enumerate(plan.tail):
+        x, c = _block_decode(x, params[f"tail_{i}"], kind, cfg, cache[f"tail_{i}"], pos)
+        new_cache[f"tail_{i}"] = c
+
+    x = _apply_norm(cfg, params["final"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["tok_embed"].T
+    else:
+        logits = x @ params["unembed"]["out_embed"]
+    return logits[:, 0, :], new_cache
+
+
+def prefill(
+    params: dict, cfg: ArchConfig, batch: dict, max_len: int, *, chunk: int = 512
+) -> tuple[jnp.ndarray, dict]:
+    """Process a prompt; build the decode cache. Returns (last logits, cache)."""
+    logits, _, caches = forward(
+        params, cfg, batch, chunk=chunk, remat=False, want_cache=True
+    )
+    if "tokens" in batch:
+        b, s = batch["tokens"].shape
+    else:
+        b, s = batch["embeds"].shape[:2]
+    cache = init_cache(cfg, b, max_len)
+    cache["len"] = jnp.full((b,), s, jnp.int32)
+
+    def fill(kind: str, c, produced):
+        mixer, _ = _block_mixer_mlp(kind, cfg)
+        if mixer == "attn":
+            k, v = produced
+            sc = c["k"].shape[1]
+            if sc >= s:
+                return {
+                    "k": jax.lax.dynamic_update_slice(c["k"], k, (0, 0, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(c["v"], v, (0, 0, 0, 0)),
+                }
+            return {"k": k[:, -sc:], "v": v[:, -sc:]}  # window cache
+        if mixer == "mla":
+            ckv, krope = produced
+            return {
+                "ckv": jax.lax.dynamic_update_slice(c["ckv"], ckv, (0, 0, 0)),
+                "krope": jax.lax.dynamic_update_slice(c["krope"], krope, (0, 0, 0)),
+            }
+        if mixer == "ssm":
+            st, tail = produced
+            # short prompts: left-pad the conv tail with the cache's zeros
+            w1 = c["conv"].shape[1]
+            tail = tail.astype(c["conv"].dtype)
+            if tail.shape[1] < w1:
+                tail = jnp.concatenate(
+                    [c["conv"][:, : w1 - tail.shape[1]], tail], axis=1
+                )
+            return {"state": st, "conv": tail}
+        if mixer == "rec":
+            st, cv = produced
+            return {"state": st, "conv": cv.astype(c["conv"].dtype)}
+        raise AssertionError(mixer)
+
+    plan = layer_plan(cfg)
+    for i, kind in enumerate(plan.head):
+        cache[f"head_{i}"] = fill(kind, cache[f"head_{i}"], caches[f"head_{i}"])
+    if plan.n_body:
+        # vmapped fill over the body stack
+        def fill_sb(c_sb, pr_sb):
+            return {
+                f"sb_{j}": fill(kind, c_sb[f"sb_{j}"], pr_sb[f"sb_{j}"])
+                for j, kind in enumerate(plan.period)
+            }
+
+        cache["body"] = jax.vmap(fill_sb)(cache["body"], caches["body"])
+    for i, kind in enumerate(plan.tail):
+        cache[f"tail_{i}"] = fill(kind, cache[f"tail_{i}"], caches[f"tail_{i}"])
+    return logits[:, -1, :], cache
+
+
+# ---------------------------------------------------------------------------
+# analytics
+# ---------------------------------------------------------------------------
+
+
+def param_count(cfg: ArchConfig) -> int:
+    import math
+
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    return sum(
+        math.prod(x.shape) for x in jax.tree_util.tree_leaves(shapes)
+    )
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Active params per token (MoE: only top-k experts count)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    expert_p = 3 * cfg.d_model * cfg.moe.d_ff_expert
+    plan = layer_plan(cfg)
+    n_moe = sum(
+        1
+        for kind in (
+            list(plan.head)
+            + list(plan.period) * plan.n_body
+            + list(plan.tail)
+        )
+        if _block_mixer_mlp(kind, cfg)[1] == "moe"
+    )
+    return total - n_moe * (e - k) * expert_p
+
+
+def model_flops_per_token(cfg: ArchConfig, seq_len: int) -> float:
+    """MODEL_FLOPS/token = 6·N_active (+ attention quadratic term)."""
+    n_active = active_param_count(cfg)
+    flops = 6.0 * n_active
+    # causal attention: 12 * L_attn * H * hd * S/2 per token (fwd+bwd ~ 3x fwd)
+    plan = layer_plan(cfg)
+    kinds = list(plan.head) + list(plan.period) * plan.n_body + list(plan.tail)
+    n_attn = sum(1 for k in kinds if _block_mixer_mlp(k, cfg)[0] in ("attn", "mla"))
+    w = cfg.local_window
+    eff_s = seq_len if w is None else min(w, seq_len)
+    flops += 6.0 * n_attn * cfg.n_heads * cfg.hd * (eff_s / 2) * 2
+    return flops
+
+
+class TransformerLM:
+    """Thin OO wrapper tying an ArchConfig to the functional API."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return init_params(self.cfg, key)
+
+    def loss(self, params, batch, **kw):
+        return loss_fn(params, self.cfg, batch, **kw)
+
+    def forward(self, params, batch, **kw):
+        return forward(params, self.cfg, batch, **kw)
+
+    def prefill(self, params, batch, max_len, **kw):
+        return prefill(params, self.cfg, batch, max_len, **kw)
+
+    def decode_step(self, params, tokens, cache):
+        return decode_step(params, self.cfg, tokens, cache)
+
+    def init_cache(self, batch_size, max_len, dtype=None):
+        return init_cache(self.cfg, batch_size, max_len, dtype)

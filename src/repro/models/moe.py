@@ -1,0 +1,154 @@
+"""Mixture-of-Experts MLP with sort-based capacity dispatch (EP-shardable).
+
+Design notes (vs the GShard one-hot einsum): the dense ``(T, E, C)`` dispatch
+tensor is O(T·E·C) and explodes at 64 experts × 65k tokens/shard, so we use
+the MaxText-style sort-and-scatter formulation instead:
+
+  1. top-k routing per token,
+  2. stable-sort the (token, expert) pairs by expert,
+  3. each pair's slot = expert·C + rank-within-expert (overflow dropped),
+  4. scatter token activations into an ``(E, C, d)`` buffer,
+  5. grouped expert matmuls ``(E, C, d) @ (E, d, f)``,
+  6. gather-scatter back with the gate weights.
+
+The ``(E, C, d)`` buffer carries a sharding constraint on E (the ``model``
+mesh axis) so experts are parallelized (EP) and GSPMD inserts the all-to-all;
+token activations stay sharded on the data axis throughout.
+
+A standard load-balancing auxiliary loss (Switch-style) is returned so the
+training objective is complete.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0  # DeepSeek-style always-on shared experts
+    capacity_factor: float = 1.25
+    first_layer_dense: bool = False  # DeepSeek: layer 0 uses a dense MLP
+    router_dtype: str = "float32"
+
+
+def moe_capacity(tokens: int, cfg: MoEConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def init_moe_params(key, d_model: int, cfg: MoEConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 5)
+    scale_in = (2.0 / (d_model + cfg.d_ff_expert)) ** 0.5
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    p = {
+        "router": (
+            jax.random.normal(ks[0], (d_model, e), jnp.float32) * 0.02
+        ).astype(jnp.float32),
+        "w_gate_e": (
+            jax.random.normal(ks[1], (e, d_model, f), jnp.float32) * scale_in
+        ).astype(dtype),
+        "w_up_e": (
+            jax.random.normal(ks[2], (e, d_model, f), jnp.float32) * scale_in
+        ).astype(dtype),
+        "w_down_e": (
+            jax.random.normal(ks[3], (e, f, d_model), jnp.float32) * scale_in
+        ).astype(dtype),
+    }
+    if cfg.n_shared:
+        fs = cfg.n_shared * f
+        sc = (2.0 / (d_model + fs)) ** 0.5
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": (jax.random.normal(kk[0], (d_model, fs), jnp.float32) * sc).astype(dtype),
+            "w_up": (jax.random.normal(kk[1], (d_model, fs), jnp.float32) * sc).astype(dtype),
+            "w_down": (jax.random.normal(kk[2], (fs, d_model), jnp.float32) * sc).astype(dtype),
+        }
+    return p
+
+
+def moe_mlp(
+    x: jnp.ndarray,  # (B, S, d)
+    p: dict,
+    cfg: MoEConfig,
+    *,
+    ep_constraint=None,  # callable: (E,C,d)-array -> sharded array (EP)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,d), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e, k = cfg.n_experts, cfg.top_k
+    cap = moe_capacity(t, cfg)
+
+    if ep_constraint is not None:
+        xt = ep_constraint(xt)  # (T, d): keep tokens dp-sharded, replicated
+        # over model, so the dispatch gathers below stay shard-local
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_g, top_i = jax.lax.top_k(probs, k)  # (T, k)
+    top_g = top_g / jnp.maximum(jnp.sum(top_g, axis=-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch, GATHER-ONLY on the wide tensors.
+    # Scatters of (T, d)/(E, C, d) activations partition terribly under GSPMD
+    # (measured: the .at[slot].set/add formulation all-reduces the full f32
+    # buffer per layer — tens of GB/step/device on dbrx). All big-tensor data
+    # movement below is expressed as gathers; the only scatters touch int32
+    # index vectors of size E*C / T*k (~MBs).
+    fe = top_i.reshape(-1)  # (T*k,) expert of each pair
+    fg = top_g.reshape(-1)
+    ftok = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(fe, stable=True)
+    se, stok = fe[order], ftok[order]
+    counts = jnp.zeros((e,), jnp.int32).at[fe].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[se]
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, e * cap)  # overflow -> scratch
+
+    # slot -> source token (int32 scatter; sentinel t = zero row)
+    slot_tok = jnp.full((e * cap + 1,), t, jnp.int32).at[slot].set(stok)
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    buf = xt_pad[slot_tok[: e * cap]].reshape(e, cap, d)  # gather
+    if ep_constraint is not None:
+        buf = ep_constraint(buf)
+
+    # ---- grouped expert matmuls (dense per expert; MXU-friendly)
+    gate = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", buf, p["w_gate_e"]).astype(jnp.float32)
+    )
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up_e"]).astype(jnp.float32)
+    h = (gate * up).astype(x.dtype)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down_e"])  # (E, C, d)
+    if ep_constraint is not None:
+        out_e = ep_constraint(out_e)
+
+    # ---- combine: per-token gather of its k expert outputs
+    # pair -> slot in unsorted pair order (int32 scatter, small)
+    pair_slot = jnp.zeros((t * k,), jnp.int32).at[order].set(slot)
+    flat = jnp.concatenate(
+        [out_e.reshape(e * cap, d), jnp.zeros((1, d), out_e.dtype)], axis=0
+    )
+    per_pair = flat[pair_slot].reshape(t, k, d)  # gather
+    yt = jnp.sum(
+        per_pair.astype(jnp.float32) * top_g[..., None].astype(jnp.float32), axis=1
+    )
+
+    if cfg.n_shared:
+        sp = p["shared"]
+        g2 = jax.nn.silu((xt @ sp["w_gate"]).astype(jnp.float32))
+        u2 = (xt @ sp["w_up"]).astype(jnp.float32)
+        yt = yt + ((g2 * u2).astype(x.dtype) @ sp["w_down"]).astype(jnp.float32)
+
+    return yt.astype(x.dtype).reshape(b, s, d), aux

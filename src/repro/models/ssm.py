@@ -1,0 +1,239 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Implements the chunked SSD algorithm from Dao & Gu (2024): within a chunk the
+state-space kernel is computed as masked matmuls (MXU-friendly), across chunks
+a linear recurrence carries the (H, P, N) state. Training/prefill use the
+chunked form; decode is the O(1) recurrent update.
+
+Layout: d_inner = expand * d_model, H = d_inner / head_dim heads, state size N,
+B/C shared across heads per group (n_groups). The short depthwise conv and the
+recurrence parameters (A_log, D, dt bias) are excluded from N:M masking (1-D /
+tiny — see sparsity_config); the in/out projections, which hold ~95% of block
+parameters, are masked.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256
+
+
+def ssm_dims(d_model: int, cfg: SSMConfig) -> dict:
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    # in_proj packs [z, x, B, C, dt]
+    d_in_proj = 2 * d_inner + 2 * cfg.n_groups * cfg.d_state + n_heads
+    return dict(d_inner=d_inner, n_heads=n_heads, d_in_proj=d_in_proj)
+
+
+def init_ssm_params(key, d_model: int, cfg: SSMConfig, dtype=jnp.bfloat16) -> dict:
+    dims = ssm_dims(d_model, cfg)
+    di, nh = dims["d_inner"], dims["n_heads"]
+    ks = jax.random.split(key, 4)
+    conv_dim = di + 2 * cfg.n_groups * cfg.d_state
+    return {
+        "w_in": (
+            jax.random.normal(ks[0], (d_model, dims["d_in_proj"]), jnp.float32)
+            * (2.0 / (d_model + dims["d_in_proj"])) ** 0.5
+        ).astype(dtype),
+        "w_out": (
+            jax.random.normal(ks[1], (di, d_model), jnp.float32)
+            * (2.0 / (di + d_model)) ** 0.5
+        ).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, conv_dim), jnp.float32) * 0.1
+                   ).astype(dtype),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),  # A = -exp(a_log), per head
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+    }
+
+
+def _split_in_proj(zxbcdt: jnp.ndarray, d_model: int, cfg: SSMConfig):
+    dims = ssm_dims(d_model, cfg)
+    di, nh = dims["d_inner"], dims["n_heads"]
+    gs = cfg.n_groups * cfg.d_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * gs]
+    dt = zxbcdt[..., di + di + 2 * gs :]  # (..., nh)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, conv_w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along S. xbc: (B, S, C), conv_w: (W, C)."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :] for i in range(w)
+    )
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """segsum(x)[..., i, j] = sum_{k=j+1..i} x[..., k] (lower-tri), -inf above.
+
+    x: (..., Q) -> (..., Q, Q)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j) = sum_{j+1..i}
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H) softplus'd
+    a_log: jnp.ndarray,  # (H,)
+    b: jnp.ndarray,  # (B, S, G, N)
+    c: jnp.ndarray,  # (B, S, G, N)
+    chunk: int,
+    init_state=None,  # (B, H, P, N)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    xw = (x * dt[..., None]).astype(jnp.float32)  # dt-weighted input
+    da = dt.astype(jnp.float32) * (-jnp.exp(a_log.astype(jnp.float32)))  # (B,S,H) <=0
+
+    def resh(t, extra):  # (B, S, ...) -> (B, nc, chunk, ...)
+        return t.reshape((bsz, nc, chunk) + extra)
+
+    xc = resh(xw, (h, p))
+    dac = resh(da, (h,))
+    bc = resh(b.astype(jnp.float32), (g, n))
+    cc = resh(c.astype(jnp.float32), (g, n))
+    bh = jnp.repeat(bc, rep, axis=3)  # (B,nc,chunk,H,N)
+    ch = jnp.repeat(cc, rep, axis=3)
+
+    # within-chunk (diagonal block): y_ij = C_i . B_j * exp(segsum) * x_j
+    l = jnp.exp(_segsum(jnp.moveaxis(dac, -1, 2)))  # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bzqhn,bzkhn->bzhqk", ch, bh)  # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bzhqk,bzkhp->bzqhp", scores * l, xc)
+
+    # per-chunk state contribution: S_z = sum_j exp(sum_{j+1..Q} da) B_j x_j
+    cum = jnp.cumsum(dac, axis=2)  # (B,nc,Q,H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+    states = jnp.einsum(
+        "bzqh,bzqhn,bzqhp->bzhpn", decay_to_end, bh, xc
+    )  # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H) total decay of a chunk
+
+    # inter-chunk recurrence over z: S_out = decay * S_in + states_z
+    def scan_fn(s_prev, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev  # emit state *entering* the chunk
+
+    s0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    s_final, s_enter = jax.lax.scan(
+        scan_fn,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    s_enter = jnp.moveaxis(s_enter, 0, 1)  # (B,nc,H,P,N)
+
+    # off-diagonal contribution: y_i += C_i exp(cum_i) S_enter
+    decay_from_start = jnp.exp(cum)  # (B,nc,Q,H)
+    y_off = jnp.einsum(
+        "bzqhn,bzqh,bzhpn->bzqhp", ch, decay_from_start, s_enter
+    )
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, s_final
+
+
+def ssm_block(
+    u: jnp.ndarray,  # (B, S, d_model)
+    p: dict,
+    d_model: int,
+    cfg: SSMConfig,
+    init_state=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full Mamba-2 mixer. Returns (out (B,S,d), (ssm_state, conv_tail))."""
+    dims = ssm_dims(d_model, cfg)
+    di, nh = dims["d_inner"], dims["n_heads"]
+    g, n, hd = cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    zxbcdt = u @ p["w_in"]
+    z, xbc_raw, dt = _split_in_proj(zxbcdt, d_model, cfg)
+    conv_tail = xbc_raw[:, -(cfg.conv_width - 1):, :]  # decode conv state
+    xbc = _causal_conv(xbc_raw, p["conv_w"])
+    x = xbc[..., :di]
+    b = xbc[..., di : di + g * n]
+    c = xbc[..., di + g * n :]
+    bsz, s, _ = u.shape
+    x = x.reshape(bsz, s, nh, hd)
+    b = b.reshape(bsz, s, g, n)
+    c = c.reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+
+    # largest divisor of S not exceeding the configured chunk (keeps odd test
+    # lengths working; production shapes are multiples of cfg.chunk)
+    chunk = min(cfg.chunk, s)
+    while s % chunk:
+        chunk -= 1
+    y, s_final = ssd_chunked(x, dt, p["a_log"], b, c, chunk, init_state)
+    y = y + p["d_skip"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(bsz, s, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))  # gated
+    return (y.astype(u.dtype)) @ p["w_out"], (s_final, conv_tail)
+
+
+def ssm_decode_step(
+    u: jnp.ndarray,  # (B, 1, d_model)
+    p: dict,
+    d_model: int,
+    cfg: SSMConfig,
+    ssm_state: jnp.ndarray,  # (B, H, P, N)
+    conv_state: jnp.ndarray,  # (B, W-1, conv_dim)
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrent decode. Returns (out, new_ssm_state, new_conv_state)."""
+    dims = ssm_dims(d_model, cfg)
+    di, nh = dims["d_inner"], dims["n_heads"]
+    g, n, hd = cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    zxbcdt = u @ p["w_in"]
+    z, xbc, dt = _split_in_proj(zxbcdt, d_model, cfg)
+    # conv with rolled state
+    full = jnp.concatenate([conv_state, xbc], axis=1)  # (B, W, C)
+    w = p["conv_w"].shape[0]
+    conv_out = sum(full[:, i : i + 1, :] * p["conv_w"][i][None, None, :] for i in range(w))
+    xbc1 = jax.nn.silu(conv_out.astype(jnp.float32)).astype(u.dtype)
+    new_conv_state = full[:, 1:, :]
+
+    x = xbc1[..., :di].reshape(-1, nh, hd)  # (B,H,P)
+    b = xbc1[..., di : di + g * n].reshape(-1, g, n)
+    c = xbc1[..., di + g * n :].reshape(-1, g, n)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    da = jnp.exp(dt1 * (-jnp.exp(p["a_log"].astype(jnp.float32))))  # (B,H)
+    rep = nh // g
+    bh = jnp.repeat(b, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    chh = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+
+    new_state = ssm_state * da[..., None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", bh, x.astype(jnp.float32), dt1
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, chh)
+    y = y + p["d_skip"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(-1, 1, di) * jax.nn.silu(z.astype(jnp.float32))
+    return (y.astype(u.dtype)) @ p["w_out"], new_state, new_conv_state

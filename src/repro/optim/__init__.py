@@ -1,0 +1,9 @@
+from repro.optim.base import GradientTransformation, chain, identity, clip_by_global_norm
+from repro.optim.adam import adam, adamw, sgd, scale_by_adam
+from repro.optim.schedules import (
+    constant_schedule,
+    linear_warmup_cosine_decay,
+    linear_decay,
+    inverse_sqrt_schedule,
+)
+from repro.optim.compression import ef_sign_compress, CompressionState

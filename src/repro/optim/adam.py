@@ -1,0 +1,153 @@
+"""Adam / AdamW / momentum-SGD as GradientTransformations.
+
+These are the *plain* optimizers (paper Eq. 2-7). The STEP two-phase variant —
+the paper's contribution — lives in ``repro.core.step_optimizer`` and reuses
+the same state layout so checkpoints are interchangeable between dense Adam
+(precondition phase) and STEP.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import GradientTransformation
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def _lr(schedule: Schedule, step: jnp.ndarray) -> jnp.ndarray:
+    if callable(schedule):
+        return schedule(step)
+    return jnp.asarray(schedule, jnp.float32)
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar
+    m: Any  # first moment
+    v: Any  # second moment ("variance" in the paper)
+
+
+def scale_by_adam(
+    b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+) -> GradientTransformation:
+    """Adam moment update + bias correction, producing the *direction* m̂/(√v̂+ε)."""
+
+    def init(params):
+        zeros = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+        )
+        return AdamState(step=jnp.zeros((), jnp.int32), m=zeros(), v=zeros())
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        m = jax.tree_util.tree_map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32), state.m, grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.v,
+            grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        updates = jax.tree_util.tree_map(
+            lambda mm, vv: (mm / bc1) / (jnp.sqrt(vv / bc2) + eps), m, v
+        )
+        return updates, AdamState(step=step, m=m, v=v)
+
+    return GradientTransformation(init, update)
+
+
+def adam(
+    learning_rate: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> GradientTransformation:
+    inner = scale_by_adam(b1, b2, eps)
+
+    def init(params):
+        return inner.init(params)
+
+    def update(grads, state, params=None):
+        updates, new_state = inner.update(grads, state, params)
+        lr = _lr(learning_rate, new_state.step)
+        updates = jax.tree_util.tree_map(lambda u: -lr * u, updates)
+        return updates, new_state
+
+    return GradientTransformation(init, update)
+
+
+def adamw(
+    learning_rate: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    mask: Optional[Callable[[Any], Any]] = None,
+) -> GradientTransformation:
+    """Adam with decoupled weight decay. ``mask(params)`` returns a tree of
+    bools selecting which leaves are decayed (default: all)."""
+    inner = scale_by_adam(b1, b2, eps)
+
+    def init(params):
+        return inner.init(params)
+
+    def update(grads, state, params=None):
+        updates, new_state = inner.update(grads, state, params)
+        lr = _lr(learning_rate, new_state.step)
+        if weight_decay and params is not None:
+            decay_sel = (
+                mask(params)
+                if mask is not None
+                else jax.tree_util.tree_map(lambda _: True, params)
+            )
+            updates = jax.tree_util.tree_map(
+                lambda u, p, d: u + (weight_decay * p.astype(jnp.float32) if d else 0.0),
+                updates,
+                params,
+                decay_sel,
+            )
+        updates = jax.tree_util.tree_map(lambda u: -lr * u, updates)
+        return updates, new_state
+
+    return GradientTransformation(init, update)
+
+
+class SgdState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Any
+
+
+def sgd(
+    learning_rate: Schedule, momentum: float = 0.9, nesterov: bool = False
+) -> GradientTransformation:
+    """Momentum SGD — the optimizer SR-STE was originally tuned for."""
+
+    def init(params):
+        return SgdState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+            ),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        buf = jax.tree_util.tree_map(
+            lambda b, g: momentum * b + g.astype(jnp.float32), state.momentum, grads
+        )
+        d = (
+            jax.tree_util.tree_map(
+                lambda g, b: g.astype(jnp.float32) + momentum * b, grads, buf
+            )
+            if nesterov
+            else buf
+        )
+        lr = _lr(learning_rate, step)
+        updates = jax.tree_util.tree_map(lambda u: -lr * u, d)
+        return updates, SgdState(step=step, momentum=buf)
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,82 @@
+"""Minimal gradient-transformation framework (optax-style, self-contained).
+
+The container has no optax; the framework builds its own composable optimizer
+stack. A :class:`GradientTransformation` is an ``(init, update)`` pair:
+
+    state = tx.init(params)
+    updates, state = tx.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Updates are *added* to params (sign convention: the transformation itself
+negates by the learning rate).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import global_norm
+
+PyTree = Any
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[PyTree], Any]
+    update: Callable[..., tuple[PyTree, Any]]
+
+
+def identity() -> GradientTransformation:
+    return GradientTransformation(
+        init=lambda params: (),
+        update=lambda grads, state, params=None: (grads, state),
+    )
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    """Compose transformations left-to-right."""
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p, params, updates
+    )
+
+
+class ClipState(NamedTuple):
+    pass
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        return ClipState()
+
+    def update(grads, state, params=None):
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        return jax.tree_util.tree_map(lambda g: g * scale, grads), state
+
+    return GradientTransformation(init, update)
+
+
+def scale(factor: float) -> GradientTransformation:
+    return GradientTransformation(
+        init=lambda params: (),
+        update=lambda g, s, p=None: (
+            jax.tree_util.tree_map(lambda x: x * factor, g),
+            s,
+        ),
+    )

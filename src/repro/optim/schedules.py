@@ -1,0 +1,54 @@
+"""Learning-rate schedules (functions of the integer step)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant_schedule(value: float) -> Schedule:
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def linear_warmup_cosine_decay(
+    peak: float,
+    warmup_steps: int,
+    total_steps: int,
+    end_factor: float = 0.1,
+) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(1.0, warmup_steps)
+        frac = (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        cos = end_factor * peak + (1 - end_factor) * peak * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac)
+        )
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn
+
+
+def linear_decay(peak: float, total_steps: int, warmup_steps: int = 0) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(1.0, warmup_steps) if warmup_steps else peak
+        frac = (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+        dec = peak * jnp.clip(1.0 - frac, 0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, dec)
+
+    return fn
+
+
+def inverse_sqrt_schedule(peak: float, warmup_steps: int) -> Schedule:
+    """The "Attention is All You Need" schedule (used for the WMT analogue)."""
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32) + 1.0
+        return peak * jnp.minimum(
+            step / jnp.maximum(1.0, warmup_steps) ** 1.5, step**-0.5
+        ) * jnp.sqrt(jnp.maximum(1.0, warmup_steps))
+
+    return fn

@@ -1,0 +1,6 @@
+from repro.sparse_infer.compress import (
+    compress_params,
+    decompress_params,
+    CompressedTensor,
+    compression_report,
+)

@@ -1,0 +1,1 @@
+from repro.train.loop import TrainState, Trainer, TrainerConfig, make_train_step

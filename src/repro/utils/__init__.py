@@ -1,0 +1,9 @@
+from repro.utils.tree import (
+    tree_paths,
+    tree_map_with_name,
+    global_norm,
+    tree_size,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+)

@@ -1,0 +1,97 @@
+"""Post-compile HLO analysis: collective-byte accounting for the roofline.
+
+``cost_analysis`` has FLOPs and bytes-accessed but no collective traffic, so
+we parse the optimized HLO text and sum operand sizes of every collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute),
+as the assignment prescribes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %x = bf16[8,128]{1,0} all-reduce(...)   /  (f32[4], bf16[2,2]) all-to-all
+_OP_RE = re.compile(
+    r"=\s*(?P<out>\(?[a-z0-9\[\],{}\s]*\)?)\s*(?P<op>"
+    + "|".join(_COLLECTIVES)
+    + r")(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op, by kind.
+
+    Uses the *result* shape of each collective as its payload proxy (the
+    '-done' halves of async pairs are skipped to avoid double counting).
+    """
+    per_kind: dict[str, int] = defaultdict(int)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue  # async completion: counted at -start
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("op")
+        b = _shape_bytes(m.group("out"))
+        per_kind[kind] += b
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    return {"total_bytes": total, "per_kind": dict(per_kind), "counts": dict(counts)}
+
+
+def count_ops(hlo_text: str, name: str) -> int:
+    return len(re.findall(rf"\b{re.escape(name)}\(", hlo_text))
+
+
+def memory_analysis_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        if hasattr(ma, attr):
+            out[attr] = int(getattr(ma, attr))
+    return out
+
+
+def cost_analysis_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}

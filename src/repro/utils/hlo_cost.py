@@ -1,0 +1,244 @@
+"""Trip-count-aware HLO cost model (FLOPs + collective bytes).
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+undercounts scanned-layer models by ~the layer count (verified empirically —
+a 10-iteration scan reports 1 iteration's FLOPs). This walker parses the
+optimized HLO text and recursively costs the module:
+
+- ``dot``  -> 2 * size(result) * prod(lhs contracting dims)
+- collectives (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute) -> result bytes (payload proxy), by kind
+- ``while`` -> trip_count (from the ``known_trip_count`` backend_config XLA
+  attaches to counted loops) x cost(body)
+- ``fusion`` / ``call`` / ``conditional`` -> cost of the called computations
+
+Elementwise FLOPs are ignored (matmul-dominated models; the roofline compute
+term cares about MXU work).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_elems_bytes(shape_text: str) -> tuple[int, int]:
+    """(elements, bytes) summed over every array shape in the text."""
+    elems = 0
+    byts = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _parse_dims(shape_text: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    coll_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    unknown_while: int = 0
+
+    def add(self, other: "Cost", times: float = 1.0):
+        self.flops += other.flops * times
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] += v * times
+        self.unknown_while += other.unknown_while
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_FIRST_CALL_RE = re.compile(r"([a-zA-Z][\w\-]*)\(")
+
+
+def _parse_op_line(line: str):
+    """Return (name, shape_text, op, rest) or None.
+
+    Robust to tuple shapes containing ``/*index=N*/`` comments and layout
+    annotations — finds the first ``identifier(`` after the '=' as the op.
+    """
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end() :]
+    call = _FIRST_CALL_RE.search(rest)
+    if not call:
+        return None
+    return name, rest[: call.start()], call.group(1), rest[call.end() :]
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s+\(.*\)\s*->")
+
+
+def _split_computations(hlo: str) -> tuple[dict[str, list[str]], Optional[str]]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group("name")
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def _trip_count(line: str) -> Optional[int]:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+    if m:
+        return int(m.group(1))
+    return None
+
+
+def _called(line: str) -> list[str]:
+    out = []
+    m = re.search(r"calls=%?([\w.\-]+)", line)
+    if m:
+        out.append(m.group(1))
+    m = re.search(r"body=%?([\w.\-]+)", line)
+    if m:
+        out.append(m.group(1))
+    m = re.search(r"condition=%?([\w.\-]+)", line)
+    if m:
+        out.append(m.group(1))
+    # conditional: branch_computations={%a, %b}
+    m = re.search(r"branch_computations=\{([^}]*)\}", line)
+    if m:
+        out.extend(x.strip().lstrip("%") for x in m.group(1).split(","))
+    m2 = re.search(r"true_computation=%?([\w.\-]+)", line)
+    if m2:
+        out.append(m2.group(1))
+    m2 = re.search(r"false_computation=%?([\w.\-]+)", line)
+    if m2:
+        out.append(m2.group(1))
+    return out
+
+
+def module_cost(hlo: str) -> Cost:
+    comps, entry = _split_computations(hlo)
+    memo: dict[str, Cost] = {}
+
+    def shapes_table(lines: list[str]) -> dict[str, str]:
+        table = {}
+        for line in lines:
+            parsed = _parse_op_line(line)
+            if parsed:
+                table[parsed[0]] = parsed[1]
+        return table
+
+    def cost_of(comp: str, stack=()) -> Cost:
+        if comp in memo:
+            return memo[comp]
+        if comp in stack or comp not in comps:
+            return Cost()
+        c = Cost()
+        lines = comps[comp]
+        table = shapes_table(lines)
+        for line in lines:
+            parsed = _parse_op_line(line)
+            if not parsed:
+                continue
+            _, shape, op, args = parsed
+            if op in ("dot", "dot-general"):
+                out_elems, _ = _shape_elems_bytes(shape)
+                lhs_m = re.search(r"\s*%([\w.\-]+)", args)
+                k = 1
+                cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                if lhs_m and cd and lhs_m.group(1) in table:
+                    lhs_dims = _parse_dims(table[lhs_m.group(1)])
+                    for d in cd.group(1).split(","):
+                        if d and int(d) < len(lhs_dims):
+                            k *= lhs_dims[int(d)]
+                c.flops += 2.0 * out_elems * k
+            elif op in _COLLECTIVES or any(
+                op == f"{x}-start" for x in _COLLECTIVES
+            ):
+                base = op.replace("-start", "")
+                _, byts = _shape_elems_bytes(shape)
+                c.coll_bytes[base] += byts
+            elif op == "while":
+                tc = _trip_count(line)
+                if tc is None:
+                    tc = 1
+                    c.unknown_while += 1
+                for callee in _called(line):
+                    if callee in comps:
+                        # body costed tc times; condition tc times (free-ish)
+                        c.add(cost_of(callee, stack + (comp,)), times=tc)
+            elif op == "conditional":
+                # lax.cond: one branch executes per step — model the worst
+                # (max-cost) branch, not the sum (STEP's mask/no-mask cond
+                # would otherwise double-count)
+                branch_costs = [
+                    cost_of(callee, stack + (comp,))
+                    for callee in _called(line)
+                    if callee in comps
+                ]
+                if branch_costs:
+                    worst = max(
+                        branch_costs,
+                        key=lambda bc: bc.flops + bc.collective_total,
+                    )
+                    c.add(worst)
+            elif op in ("fusion", "call", "custom-call", "map",
+                        "reduce", "reduce-window", "sort", "scatter", "select-and-scatter"):
+                for callee in _called(line):
+                    if callee in comps:
+                        c.add(cost_of(callee, stack + (comp,)))
+        memo[comp] = c
+        return c
+
+    if entry is None:
+        return Cost()
+    total = Cost()
+    total.add(cost_of(entry))
+    return total
+
+
+def analyze(compiled_text: str) -> dict:
+    c = module_cost(compiled_text)
+    return {
+        "flops": c.flops,
+        "collective_bytes": dict(c.coll_bytes),
+        "collective_total": c.collective_total,
+        "unknown_trip_count_whiles": c.unknown_while,
+    }

@@ -1,0 +1,77 @@
+"""Pytree utilities used across the framework.
+
+Parameter trees in this framework are nested dicts of jnp arrays. Leaf
+*names* are '/'-joined dict-key paths (e.g. ``"blocks/attn/wq"``); sparsity
+configs, sharding rules and checkpoints all key off these names.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_paths(tree: Any) -> list[str]:
+    """Return the '/'-joined name of every leaf, in tree order."""
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    return [_path_str(p) for p, _ in leaves]
+
+
+def tree_map_with_name(fn: Callable[[str, Any], Any], tree: Any, *rest: Any) -> Any:
+    """``tree_map`` where ``fn(name, leaf, *rest_leaves)`` also sees the leaf name."""
+
+    def wrapper(path, leaf, *others):
+        return fn(_path_str(path), leaf, *others)
+
+    return jax.tree_util.tree_map_with_path(wrapper, tree, *rest)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    """L2 norm over all leaves."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements across all leaves (python int; static)."""
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_zeros_like(tree: Any, dtype=None) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), tree
+    )
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_scale(a: Any, s) -> Any:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_cast(tree: Any, dtype) -> Any:
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+def tree_where(pred, a: Any, b: Any) -> Any:
+    """Elementwise select between two trees on a scalar predicate."""
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)

@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches():
+    """Long single-process test runs exhaust XLA's JIT dylib space; clearing
+    compiled-executable caches between modules keeps the suite stable."""
+    yield
+    jax.clear_caches()

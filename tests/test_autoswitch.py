@@ -1,0 +1,110 @@
+"""AutoSwitch (Algorithm 2) and the baseline switching criteria."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autoswitch import (
+    AutoSwitchConfig,
+    autoswitch_step,
+    criterion_autoswitch_offline,
+    criterion_relative_norm,
+    criterion_staleness,
+    init_autoswitch,
+    variance_change_sample,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_window_size_matches_paper():
+    # T_w = floor(1/(1-beta2))
+    assert AutoSwitchConfig(beta2=0.999).t_w == 1000
+    assert AutoSwitchConfig(beta2=0.99).t_w == 100
+    assert AutoSwitchConfig(beta2=0.9).t_w == 10
+    assert AutoSwitchConfig(beta2=0.999, window=17).t_w == 17
+
+
+def test_incremental_identity_matches_direct_diff():
+    """Z_t from (g, v_t) must equal d^{-1}||v_{t+1} - v_t||_1 exactly."""
+    cfg = AutoSwitchConfig(beta2=0.9)
+    g = {"a": jnp.array([1.0, -2.0]), "b": jnp.array([[0.5, 3.0]])}
+    v = {"a": jnp.array([0.4, 0.1]), "b": jnp.array([[1.0, 2.0]])}
+    v_next = jax.tree_util.tree_map(
+        lambda vv, gg: cfg.beta2 * vv + (1 - cfg.beta2) * gg**2, v, g
+    )
+    direct = (
+        sum(
+            jnp.sum(jnp.abs(a - b))
+            for a, b in zip(jax.tree_util.tree_leaves(v_next), jax.tree_util.tree_leaves(v))
+        )
+        / 4.0
+    )
+    z = variance_change_sample(g, v, cfg)
+    np.testing.assert_allclose(float(z), float(direct), rtol=1e-6)
+
+
+def test_option_ii_geometric():
+    cfg = AutoSwitchConfig(beta2=0.9, option="II")
+    g = {"a": jnp.array([1.0, 2.0])}
+    v = {"a": jnp.array([0.0, 0.0])}
+    z = variance_change_sample(g, v, cfg)
+    # geometric mean of (0.1*[1,4]) = sqrt(0.1*0.4)
+    np.testing.assert_allclose(float(z), float(jnp.sqrt(0.1 * 0.4)), rtol=1e-4)
+
+
+def test_switch_fires_only_after_full_window_below_eps():
+    cfg = AutoSwitchConfig(beta2=0.9, eps=1e-3, window=5)
+    state = init_autoswitch(cfg)
+    fired_at = None
+    for t in range(1, 20):
+        z = jnp.asarray(1e-4)  # always below eps
+        state, zbar, crit = autoswitch_step(state, z, jnp.asarray(t), cfg)
+        if bool(crit) and fired_at is None:
+            fired_at = t
+    assert fired_at == 5  # needs a full window first
+
+
+def test_clipping_bounds():
+    cfg = AutoSwitchConfig(beta2=0.9, eps=1e-9, window=3, t_min=5, t_max=10)
+    state = init_autoswitch(cfg)
+    fired = []
+    for t in range(1, 15):
+        z = jnp.asarray(1.0)  # never below eps
+        state, _, crit = autoswitch_step(state, z, jnp.asarray(t), cfg)
+        if bool(crit):
+            fired.append(t)
+    assert fired and fired[0] == 11  # forced by t_max
+
+    cfg2 = AutoSwitchConfig(beta2=0.9, eps=1e9, window=3, t_min=6)
+    state = init_autoswitch(cfg2)
+    fired = []
+    for t in range(1, 12):
+        state, _, crit = autoswitch_step(state, jnp.asarray(0.0), jnp.asarray(t), cfg2)
+        if bool(crit):
+            fired.append(t)
+    assert fired[0] == 7  # eps satisfied immediately but t_min delays
+
+
+def test_offline_matches_online():
+    cfg = AutoSwitchConfig(beta2=0.9, eps=0.5, window=4)
+    z_trace = np.array([2.0, 1.5, 1.0, 0.9, 0.4, 0.3, 0.2, 0.2, 0.1, 0.1])
+    state = init_autoswitch(cfg)
+    online = None
+    for t, z in enumerate(z_trace, start=1):
+        state, _, crit = autoswitch_step(state, jnp.asarray(z), jnp.asarray(t), cfg)
+        if bool(crit) and online is None:
+            online = t - 1  # offline uses 0-based indices
+    offline = criterion_autoswitch_offline(z_trace, cfg)
+    assert online == offline
+
+
+def test_baseline_criteria_shapes():
+    # Eq. 10: relative norm change < 0.5
+    v_norms = np.array([1.0, 10.0, 12.0, 12.5, 12.6])
+    t = criterion_relative_norm(v_norms)
+    assert t == 2  # 12 vs 10 -> 0.2 < 0.5 at step 2
+    # Eq. 11: staleness ratio > 0.96 with k = 10 (beta2=0.9)
+    v_l1 = np.concatenate([np.linspace(1, 20, 15), np.full(10, 20.0)])
+    t2 = criterion_staleness(v_l1, beta2=0.9)
+    assert t2 >= 10

@@ -1,0 +1,108 @@
+"""Checkpoint substrate: atomicity, integrity, retention, elastic restore."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    load_pytree,
+    save_pytree,
+    verify,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tree():
+    return {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.ones((4,), jnp.bfloat16), "d": jnp.zeros((), jnp.int32)},
+    }
+
+
+def test_roundtrip_preserves_values_and_dtypes(tmp_path):
+    t = _tree()
+    save_pytree(str(tmp_path / "ck"), t, {"step": 7})
+    out, meta = load_pytree(str(tmp_path / "ck"), t)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_corruption_detected(tmp_path):
+    p = str(tmp_path / "ck")
+    save_pytree(p, _tree())
+    assert verify(p)
+    # flip bytes in the arrays file
+    f = os.path.join(p, "arrays.npz")
+    data = bytearray(open(f, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(f, "wb").write(bytes(data))
+    assert not verify(p)
+
+
+def test_latest_step_skips_corrupt(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep_last=5)
+    ck.save(1, _tree())
+    ck.save(2, _tree())
+    # corrupt step 2
+    f = os.path.join(str(tmp_path), "step_0000000002", "manifest.json")
+    with open(f, "w") as fh:
+        json.dump({"keys": [], "checksums": {}, "meta": {}}, fh)
+    assert ck.latest_step() == 1
+    out, meta = ck.load(_tree())
+    assert meta["step"] == 1
+
+
+def test_keep_last_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep_last=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree())
+    assert ck.steps() == [3, 4]
+
+
+def test_keep_every_archival(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep_last=1, keep_every=2)
+    for s in (1, 2, 3, 4, 5):
+        ck.save(s, _tree())
+    assert ck.steps() == [2, 4, 5]
+
+
+def test_elastic_restore_onto_sharding(tmp_path):
+    """Restore re-shards onto whatever devices the relaunch has (1 CPU here,
+    via an explicit SingleDeviceSharding — the mechanism is identical for a
+    256-chip NamedSharding)."""
+    from jax.sharding import SingleDeviceSharding
+
+    t = _tree()
+    save_pytree(str(tmp_path / "ck"), t)
+    sh = SingleDeviceSharding(jax.devices()[0])
+    out, _ = load_pytree(str(tmp_path / "ck"), t, shardings=sh)
+    for leaf in jax.tree_util.tree_leaves(out):
+        assert leaf.sharding == sh
+
+
+def test_atomic_no_partial_on_failure(tmp_path, monkeypatch):
+    p = str(tmp_path / "ck")
+    save_pytree(p, _tree(), {"step": 1})
+
+    # make the next save explode mid-write; the old checkpoint must survive
+    import numpy as _np
+
+    orig = _np.savez
+
+    def boom(*a, **k):
+        raise RuntimeError("disk full")
+
+    monkeypatch.setattr(_np, "savez", boom)
+    with pytest.raises(RuntimeError):
+        save_pytree(p, _tree(), {"step": 2})
+    monkeypatch.setattr(_np, "savez", orig)
+    assert verify(p)
+    _, meta = load_pytree(p, _tree())
+    assert meta["step"] == 1

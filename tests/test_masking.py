@@ -1,0 +1,107 @@
+"""Unit + property tests for the N:M masking math (paper Eq. 8/9 substrate)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masking as mk
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+NM_CASES = [(1, 4), (2, 4), (3, 4), (1, 8), (2, 8), (4, 8), (1, 16), (4, 16), (8, 32)]
+
+
+@pytest.mark.parametrize("n,m", NM_CASES)
+@pytest.mark.parametrize("axis", [0, 1])
+def test_mask_exact_n_per_group(n, m, axis):
+    w = jax.random.normal(jax.random.PRNGKey(0), (m * 3, m * 2))
+    mask = mk.nm_mask(w, n, m, axis)
+    wt = jnp.moveaxis(mask, axis, -1)
+    groups = wt.reshape(wt.shape[0], -1, m)
+    counts = groups.sum(-1)
+    assert (counts == n).all(), counts
+
+
+@pytest.mark.parametrize("n,m", NM_CASES)
+def test_mask_keeps_largest(n, m):
+    w = jax.random.normal(jax.random.PRNGKey(1), (m * 4, 8))
+    mask = mk.nm_mask(w, n, m, 0)
+    aw = jnp.abs(w)
+    groups = jnp.moveaxis(aw, 0, -1).reshape(8, -1, m)
+    gm = jnp.moveaxis(mask, 0, -1).reshape(8, -1, m)
+    kept_min = jnp.where(gm > 0, groups, jnp.inf).min(-1)
+    dropped_max = jnp.where(gm == 0, groups, -jnp.inf).max(-1)
+    assert (kept_min >= dropped_max).all()
+
+
+def test_mask_n_equals_m_is_dense():
+    w = jax.random.normal(jax.random.PRNGKey(2), (8, 8))
+    assert (mk.nm_mask(w, 4, 4, 0) == 1).all()
+
+
+def test_mask_indivisible_raises():
+    w = jnp.zeros((10, 8))
+    with pytest.raises(ValueError):
+        mk.nm_mask(w, 2, 4, 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.sampled_from(NM_CASES),
+    st.integers(1, 4),
+    st.integers(1, 3),
+    st.integers(0, 2**31 - 1),
+)
+def test_compress_roundtrip_property(nm, g, cols, seed):
+    n, m = nm
+    w = jax.random.normal(jax.random.PRNGKey(seed), (g * m, cols * 4))
+    mask = mk.nm_mask(w, n, m, 0)
+    v, i = mk.nm_compress(w, n, m, 0)
+    assert v.shape == (g * n, cols * 4)
+    assert i.dtype == jnp.uint8
+    dense = mk.nm_decompress(v, i, n, m, 0)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(mask * w), rtol=0, atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([(1, 4), (2, 4), (2, 8)]), st.integers(0, 2**31 - 1))
+def test_dynamic_matches_static(nm, seed):
+    n, m = nm
+    w = jax.random.normal(jax.random.PRNGKey(seed), (m * 5, 12))
+    static = mk.nm_mask(w, n, m, 0)
+    dynamic = mk.nm_mask_dynamic(w, jnp.asarray(n), m, 0)
+    np.testing.assert_array_equal(np.asarray(static), np.asarray(dynamic))
+
+
+def test_straight_through_gradient_is_identity():
+    w = jax.random.normal(jax.random.PRNGKey(3), (8, 4))
+    mask = mk.nm_mask(w, 2, 4, 0)
+    # f = sum(sin(masked_w)); STE grad must be cos evaluated at masked point,
+    # WITHOUT the mask factor (pruned coords still receive gradient)
+    g = jax.grad(lambda w: jnp.sum(jnp.sin(mk.straight_through_mask(w, mask))))(w)
+    expected = jnp.cos(w * mask)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(expected), rtol=1e-6)
+
+
+def test_masked_no_ste_kills_pruned_grads():
+    w = jax.random.normal(jax.random.PRNGKey(4), (8, 4))
+    mask = mk.nm_mask(w, 2, 4, 0)
+    g = jax.grad(lambda w: jnp.sum(jnp.sin(mk.masked_no_ste(w, mask))))(w)
+    assert (np.asarray(g)[np.asarray(mask) == 0] == 0).all()
+
+
+def test_sr_ste_term_only_on_pruned():
+    w = jax.random.normal(jax.random.PRNGKey(5), (8, 4))
+    mask = mk.nm_mask(w, 2, 4, 0)
+    term = mk.sr_ste_grad_term(w, mask, 0.5)
+    np.testing.assert_allclose(np.asarray(term), np.asarray(0.5 * (1 - mask) * w))
+
+
+def test_3d_weights_supported():
+    # MoE expert stacks (E, d, f) with groups along d (axis 1)
+    w = jax.random.normal(jax.random.PRNGKey(6), (4, 16, 8))
+    mask = mk.nm_mask(w, 2, 4, 1)
+    groups = jnp.moveaxis(mask, 1, -1).reshape(4, 8, 4, 4).sum(-1)
+    assert (groups == 2).all()

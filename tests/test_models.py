@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests (reduced configs, one fwd/train step on CPU)
+and serving-path consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models.model import (
+    TransformerLM,
+    frontend_dim,
+    layer_plan,
+    model_flops_per_token,
+    param_count,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+ALL_ARCHS = list(ASSIGNED_ARCHS) + ["gpt2-paper"]
+
+
+def _batch(cfg, b=2, s=16, key=jax.random.PRNGKey(7)):
+    batch = {"labels": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+    if cfg.frontend != "none":
+        batch["embeds"] = jax.random.normal(
+            key, (b, s, frontend_dim(cfg)), jnp.bfloat16
+        )
+    else:
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux, _ = model.forward(params, batch, chunk=8)
+    b, s = batch["labels"].shape
+    assert logits.shape == (b, s, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: model.loss(p, batch, chunk=8), has_aux=True
+    )(params)
+    assert bool(jnp.isfinite(loss))
+    gn = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree_util.tree_leaves(grads))
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [a for a in ALL_ARCHS if get_config(a).frontend == "none"],
+)
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, cfg.vocab)
+    full, _, _ = model.forward(params, {"tokens": toks}, chunk=8)
+    lp, cache = model.prefill(params, {"tokens": toks[:, :-1]}, max_len=16, chunk=8)
+    ld, cache = model.decode_step(params, toks[:, -1], cache)
+    np.testing.assert_allclose(
+        np.asarray(lp, np.float32), np.asarray(full[:, -2], np.float32), atol=0.06
+    )
+    np.testing.assert_allclose(
+        np.asarray(ld, np.float32), np.asarray(full[:, -1], np.float32), atol=0.06
+    )
+    assert int(cache["len"][0]) == 12
+
+
+def test_layer_plans():
+    rg = get_config("recurrentgemma-9b")
+    plan = layer_plan(rg)
+    assert plan.period == ("rec", "rec", "attn")
+    assert plan.n_body == 12 and plan.tail == ("rec", "rec")
+    ds = get_config("deepseek-v2-lite-16b")
+    plan = layer_plan(ds)
+    assert plan.head == ("attn:dense",) and plan.n_body == 26
+    sc = get_config("starcoder2-3b")
+    plan = layer_plan(sc)
+    assert plan.n_body == 30 and not plan.head and not plan.tail
+
+
+def test_param_counts_match_published_class():
+    """Full configs land in the right parameter class (name plausibility)."""
+    expected = {
+        "starcoder2-3b": (2.5e9, 4e9),
+        "qwen1.5-110b": (95e9, 125e9),
+        "minitron-4b": (3.5e9, 5.5e9),
+        "command-r-plus-104b": (95e9, 115e9),
+        "deepseek-v2-lite-16b": (12e9, 20e9),
+        "dbrx-132b": (115e9, 145e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "musicgen-large": (1.5e9, 2.8e9),
+        "qwen2-vl-2b": (1.2e9, 2.5e9),
+        "recurrentgemma-9b": (7.0e9, 11e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = param_count(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params_below_total():
+    from repro.models.model import active_param_count
+
+    cfg = get_config("dbrx-132b")
+    assert active_param_count(cfg) < param_count(cfg) * 0.4
+
+
+def test_flops_per_token_scales_with_seq():
+    cfg = get_config("starcoder2-3b")
+    f1 = model_flops_per_token(cfg, 4096)
+    f2 = model_flops_per_token(cfg, 32768)
+    assert f2 > f1  # quadratic attention term grows
+    mb = get_config("mamba2-2.7b")
+    assert model_flops_per_token(mb, 4096) == model_flops_per_token(mb, 32768)
+
+
+def test_local_window_attention_masks_far_tokens():
+    cfg = get_config("recurrentgemma-9b", smoke=True)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    toks = jax.random.randint(jax.random.PRNGKey(4), (1, 24), 0, cfg.vocab)
+    # changing a token far outside the window must not change the last logits
+    # (window=16 in smoke config; distance 20 > window and no recurrent path
+    # would hide it only if attention leaked) — recurrent layers DO carry
+    # state, so instead check window masking directly on the attention layer.
+    from repro.models.layers import chunked_attention
+
+    q = jax.random.normal(jax.random.PRNGKey(5), (1, 24, 2, 8))
+    k = jax.random.normal(jax.random.PRNGKey(6), (1, 24, 1, 8))
+    v = jax.random.normal(jax.random.PRNGKey(7), (1, 24, 1, 8))
+    out1 = chunked_attention(q, k, v, causal=True, window=4, chunk=8)
+    k2 = k.at[:, 0].set(99.0)
+    v2 = v.at[:, 0].set(99.0)
+    out2 = chunked_attention(q, k2, v2, causal=True, window=4, chunk=8)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, 10:]), np.asarray(out2[:, 10:]), atol=1e-5
+    )
+
+
+def test_mrope_position_streams_differ():
+    from repro.models.layers import apply_mrope, apply_rope
+
+    x = jax.random.normal(jax.random.PRNGKey(8), (1, 6, 2, 16))
+    pos_text = jnp.broadcast_to(jnp.arange(6)[None, :, None], (1, 6, 3))
+    same = apply_mrope(x, pos_text)
+    pos_img = pos_text.at[..., 1].set(jnp.arange(6)[None] * 3)
+    diff = apply_mrope(x, pos_img)
+    assert not np.allclose(np.asarray(same), np.asarray(diff))

@@ -1,0 +1,143 @@
+"""Recipe mechanics: dense / STE / SR-STE / ASP / Decay / STEP."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+
+jax.config.update("jax_platform_name", "cpu")
+
+SCFG = core.SparsityConfig(default=core.NMSparsity(2, 4))
+
+
+def _params():
+    k = jax.random.PRNGKey(0)
+    return {
+        "layer1": {"w": jax.random.normal(k, (16, 8)), "bias": jnp.zeros((8,))},
+        "embed": {"tok_embed": jax.random.normal(k, (32, 16))},
+    }
+
+
+def _run_masks(recipe, params, steps, phase2_at=None):
+    st = recipe.init_state(params)
+    out = []
+    for t in range(steps):
+        phase2 = jnp.asarray(phase2_at is not None and t >= phase2_at)
+        mask, active, st = recipe.masks_for_step(params, st, phase2)
+        out.append((mask, bool(active)))
+    return out, st
+
+
+def test_dense_never_masks():
+    recipe = core.make_recipe("dense", SCFG)
+    out, _ = _run_masks(recipe, _params(), 3)
+    assert not any(a for _, a in out)
+
+
+def test_ste_always_masks_weights_not_bias_or_embed():
+    recipe = core.make_recipe("ste", SCFG)
+    out, _ = _run_masks(recipe, _params(), 2)
+    mask, active = out[0]
+    assert active
+    assert float(mask["layer1"]["w"].mean()) == 0.5
+    assert (mask["layer1"]["bias"] == 1).all()  # 1-D excluded
+    assert (mask["embed"]["tok_embed"] == 1).all()  # embeddings excluded
+
+
+def test_step_masks_only_in_phase2():
+    recipe = core.make_recipe("step", SCFG)
+    out, _ = _run_masks(recipe, _params(), 4, phase2_at=2)
+    assert [a for _, a in out] == [False, False, True, True]
+    assert (out[0][0]["layer1"]["w"] == 1).all()
+    assert float(out[2][0]["layer1"]["w"].mean()) == 0.5
+
+
+def test_asp_prunes_once_and_freezes():
+    params = _params()
+    recipe = core.make_recipe("asp", SCFG, prune_at=2)
+    st = recipe.init_state(params)
+    masks = []
+    for t in range(5):
+        mask, active, st = recipe.masks_for_step(params, st, jnp.asarray(False))
+        masks.append((np.asarray(mask["layer1"]["w"]), bool(active)))
+        params = jax.tree_util.tree_map(lambda p: p * 1.1, params)  # drift
+    assert [a for _, a in masks] == [False, False, True, True, True]
+    np.testing.assert_array_equal(masks[2][0], masks[4][0])  # frozen
+
+
+def test_decay_schedule_tightens():
+    recipe = core.make_recipe("decay", SCFG, dense_until=2, decay_interval=2)
+    params = _params()
+    st = recipe.init_state(params)
+    densities = []
+    for t in range(10):
+        mask, active, st = recipe.masks_for_step(params, st, jnp.asarray(False))
+        densities.append(float(mask["layer1"]["w"].mean()))
+    assert densities[0] == 1.0 and densities[1] == 1.0  # dense phase
+    # then 3:4 -> 2:4 (target floor) and never below target
+    assert densities[2] == 0.75
+    assert densities[4] == 0.5
+    assert min(densities[4:]) == 0.5
+
+
+def test_sr_ste_grad_term_applied():
+    recipe = core.make_recipe("sr_ste", SCFG, sr_lambda=0.1)
+    params = _params()
+    st = recipe.init_state(params)
+    mask, active, st = recipe.masks_for_step(params, st, jnp.asarray(False))
+    g0 = jax.tree_util.tree_map(jnp.zeros_like, params)
+    g = recipe.grad_postprocess(g0, params, mask, active)
+    w, mw = np.asarray(params["layer1"]["w"]), np.asarray(mask["layer1"]["w"])
+    np.testing.assert_allclose(np.asarray(g["layer1"]["w"]), 0.1 * (1 - mw) * w, rtol=1e-6)
+    # plain ste adds nothing
+    recipe2 = core.make_recipe("ste", SCFG)
+    g2 = recipe2.grad_postprocess(g0, params, mask, active)
+    assert (np.asarray(g2["layer1"]["w"]) == 0).all()
+
+
+def test_export_sparse_is_exactly_nm():
+    recipe = core.make_recipe("step", SCFG)
+    params = _params()
+    sp = recipe.export_sparse(params)
+    w = np.asarray(sp["layer1"]["w"]).T.reshape(8, 4, 4)  # groups along axis 0
+    nz = (w != 0).sum(-1)
+    assert (nz == 2).all()
+
+
+def test_layerwise_patterns_override_default():
+    cfg = core.SparsityConfig(
+        default=core.NMSparsity(2, 4),
+        layer_patterns=((r"layer1/w", core.NMSparsity(1, 4)),),
+    )
+    recipe = core.make_recipe("ste", cfg)
+    out, _ = _run_masks(recipe, _params(), 1)
+    assert float(out[0][0]["layer1"]["w"].mean()) == 0.25
+
+
+def test_domino_search_meets_budget():
+    params = {
+        f"blk{i}": {"w": jax.random.normal(jax.random.PRNGKey(i), (32, 16)) * (i + 1)}
+        for i in range(4)
+    }
+    cfg = core.domino_search(params, SCFG, m=8, target_density=0.5)
+    recipe = core.make_recipe("ste", cfg)
+    st = recipe.init_state(params)
+    mask, _, _ = recipe.masks_for_step(params, st, jnp.asarray(False))
+    density = float(
+        sum(m.sum() for m in jax.tree_util.tree_leaves(mask))
+        / sum(m.size for m in jax.tree_util.tree_leaves(mask))
+    )
+    assert density <= 0.55
+    # layers with larger weights should keep more
+    ratios = core.assigned_ratios(cfg)
+    ns = [int(v.split(":")[0]) for k, v in sorted(ratios.items())]
+    assert ns[-1] >= ns[0]
+
+
+def test_sparsity_report():
+    rep = core.sparsity_report(_params(), SCFG)
+    assert rep["maskable_params"] == 16 * 8
+    assert 0 < rep["maskable_fraction"] < 1
+    assert rep["per_leaf"]["layer1/w"] == "2:4"
+    assert rep["per_leaf"]["embed/tok_embed"] == "dense"

@@ -1,0 +1,136 @@
+"""STEP optimizer (Algorithm 1): phase mechanics and Adam equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autoswitch import AutoSwitchConfig
+from repro.core.step_optimizer import StepConfig, step_optimizer
+from repro.optim.adam import adam
+from repro.optim.base import apply_updates
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _params():
+    return {"w": jnp.arange(8, dtype=jnp.float32).reshape(2, 4) / 10.0}
+
+
+def _grads(t):
+    key = jax.random.PRNGKey(t)
+    return {"w": jax.random.normal(key, (2, 4))}
+
+
+def test_phase1_matches_plain_adam():
+    """Before the switch STEP must be bit-identical to Adam (Alg.1 l.2-9)."""
+    cfg = StepConfig(learning_rate=1e-2, b2=0.9, switch_at=10_000)
+    sopt = step_optimizer(cfg)
+    aopt = adam(1e-2, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps)
+    p1, p2 = _params(), _params()
+    s1, s2 = sopt.init(p1), aopt.init(p2)
+    for t in range(20):
+        g = _grads(t)
+        u1, s1 = sopt.update(g, s1, p1)
+        u2, s2 = aopt.update(g, s2, p2)
+        p1 = apply_updates(p1, u1)
+        p2 = apply_updates(p2, u2)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]), rtol=1e-6)
+    assert not bool(s1.phase2)
+
+
+def test_variance_freezes_at_switch():
+    cfg = StepConfig(learning_rate=1e-2, b2=0.9, switch_at=5)
+    opt = step_optimizer(cfg)
+    p = _params()
+    s = opt.init(p)
+    v_at_switch = None
+    for t in range(12):
+        g = _grads(t)
+        u, s = opt.update(g, s, p)
+        p = apply_updates(p, u)
+        if int(s.step) == 5:
+            v_at_switch = np.asarray(s.v["w"]).copy()
+    assert bool(s.phase2)
+    assert int(s.t0) == 5
+    np.testing.assert_array_equal(np.asarray(s.v["w"]), v_at_switch)
+
+
+def test_precondition_is_bias_corrected_sqrt():
+    cfg = StepConfig(learning_rate=1e-2, b2=0.9, eps=1e-8, switch_at=4)
+    opt = step_optimizer(cfg)
+    p = _params()
+    s = opt.init(p)
+    for t in range(6):
+        u, s = opt.update(_grads(t), s, p)
+        p = apply_updates(p, u)
+    bc2 = 1 - cfg.b2 ** 4
+    expected = np.sqrt(np.asarray(s.v["w"]) / bc2) + cfg.eps
+    np.testing.assert_allclose(np.asarray(s.precond["w"]), expected, rtol=1e-6)
+
+
+def test_phase2_update_uses_frozen_preconditioner():
+    cfg = StepConfig(learning_rate=0.1, b1=0.0, b2=0.9, switch_at=3)
+    opt = step_optimizer(cfg)
+    p = _params()
+    s = opt.init(p)
+    for t in range(3):
+        u, s = opt.update(_grads(t), s, p)
+        p = apply_updates(p, u)
+    assert bool(s.phase2)
+    g = {"w": jnp.ones((2, 4))}
+    u, s2 = opt.update(g, s, p)
+    # with b1=0: update = -lr * g / precond (bias correction of m is 1-0^t=1)
+    expected = -0.1 * 1.0 / np.asarray(s.precond["w"])
+    np.testing.assert_allclose(np.asarray(u["w"]), expected, rtol=1e-5)
+
+
+def test_ablation_update_v_in_phase2():
+    cfg = StepConfig(learning_rate=1e-2, b2=0.9, switch_at=3, update_v_in_phase2=True)
+    opt = step_optimizer(cfg)
+    p = _params()
+    s = opt.init(p)
+    v_prev = None
+    for t in range(8):
+        u, s = opt.update(_grads(t), s, p)
+        p = apply_updates(p, u)
+        if int(s.step) == 6:
+            v_prev = np.asarray(s.v["w"]).copy()
+    assert bool(s.phase2)
+    assert not np.allclose(np.asarray(s.v["w"]), v_prev)  # v keeps moving
+
+
+def test_autoswitch_drives_phase_change():
+    # decaying gradients -> variance change shrinks below eps -> switch
+    cfg = StepConfig(
+        learning_rate=1e-3,
+        b2=0.9,
+        autoswitch=AutoSwitchConfig(eps=1e-6, window=5),
+    )
+    opt = step_optimizer(cfg)
+    p = _params()
+    s = opt.init(p)
+    for t in range(200):
+        g = {"w": jnp.full((2, 4), 0.5 ** t)}  # rapidly vanishing gradients
+        u, s = opt.update(g, s, p)
+        p = apply_updates(p, u)
+        if bool(s.phase2):
+            break
+    assert bool(s.phase2)
+    assert 5 <= int(s.t0) <= 200
+
+
+def test_state_is_jit_and_scan_compatible():
+    cfg = StepConfig(learning_rate=1e-2, b2=0.9, switch_at=4)
+    opt = step_optimizer(cfg)
+    p = _params()
+    s = opt.init(p)
+
+    @jax.jit
+    def step(carry, g):
+        p, s = carry
+        u, s = opt.update(g, s, p)
+        return (apply_updates(p, u), s), s.phase2
+
+    gs = {"w": jax.random.normal(jax.random.PRNGKey(0), (10, 2, 4))}
+    (p2, s2), phases = jax.lax.scan(step, (p, s), gs)
+    assert bool(phases[-1]) and not bool(phases[0])
