@@ -25,11 +25,13 @@ def main() -> None:
         layerwise,
         recipes,
         roofline,
+        serve_bench,
         sparsity_sweep,
     )
 
     suites = {
         "kernels": kernel_bench.run,                       # §Kernels
+        "serve": serve_bench.run,                          # §Serving engine
         "autoswitch": lambda: autoswitch_bench.run(steps=max(300, steps)),  # Table 1
         "recipes": lambda: (recipes.table_mlp(steps=steps, seeds=(0,)),
                             recipes.table_lm(steps=120)),  # Tables 2-3

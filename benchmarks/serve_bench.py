@@ -1,0 +1,61 @@
+"""Serving-engine benchmark: dense vs compressed-native decode, batch sweep.
+
+For each batch size the same request load is served twice through
+``repro.serving.DecodeEngine`` — once on the masked-dense tree, once on the
+N:M-compressed tree (the ``nm_spmm`` dispatch path) — and we report
+µs/decode-step (the ``us_per_call`` column) plus tokens/s and the HBM
+weight-bytes ratio. On CPU the compressed path pays a decompress per
+matmul (the jnp reference); the HBM ratio column is the quantity the TPU
+Pallas kernel converts into decode-step time.
+
+    PYTHONPATH=src python -m benchmarks.run --only serve
+"""
+from __future__ import annotations
+
+import jax
+
+import repro.core as core
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models.model import TransformerLM
+from repro.serving import DecodeEngine, SamplingParams
+from repro.sparse_infer import compress_params, compression_report
+
+
+def run(
+    arch: str = "gpt2-paper",
+    nm=(2, 4),
+    batches=(1, 2, 4),
+    prompt_len: int = 8,
+    gen: int = 16,
+) -> None:
+    cfg = get_config(arch, smoke=True)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n, m = nm
+    recipe = core.make_recipe(
+        "step", core.SparsityConfig(default=core.NMSparsity(n, m))
+    )
+    sparse = recipe.export_sparse(params)
+    comp = compress_params(sparse, recipe.sparsity)
+    ratio = compression_report(sparse, comp)["ratio"]
+
+    for batch in batches:
+        for mode, tree in (("dense", sparse), ("compressed", comp)):
+            engine = DecodeEngine(
+                model, tree, max_batch=batch, max_len=prompt_len + gen + 1
+            )
+            sp = SamplingParams(max_new_tokens=gen)
+            for r in range(2 * batch):  # 2x oversubscribed: slot reuse on
+                prompt = jax.random.randint(
+                    jax.random.PRNGKey(100 + r), (prompt_len,), 0, cfg.vocab
+                )
+                engine.submit([int(t) for t in prompt], sp)
+            engine.run()
+            st = engine.stats()
+            emit(
+                f"serve/{arch}/{n}:{m}/{mode}/b{batch}",
+                st["ms_per_decode_step"] * 1e3,
+                f"tok/s={st['tokens_per_s']:.1f} "
+                f"steps={st['decode_steps']} hbm_ratio={ratio:.3f}",
+            )

@@ -1,15 +1,21 @@
-"""Batched sparse serving demo: export Π_T ⊙ w_T, compress, decode.
+"""Compressed-native serving demo: export Π_T ⊙ w_T, compress, serve it.
 
     PYTHONPATH=src python examples/serve_sparse.py
     PYTHONPATH=src python examples/serve_sparse.py --ckpt-dir /tmp/train_lm_ck
 
-Shows the deployment path: final-mask export (Algorithm 1 line 23-24),
-N:M weight compression (the HBM-bandwidth win the nm_spmm Pallas kernel
-realizes on TPU), and a batched KV-cache greedy-decode loop.
+Shows the deployment path: final-mask export (Algorithm 1 line 23-24), N:M
+weight compression, and a continuous-batching decode loop that consumes the
+``CompressedTensor`` tree directly — every weight read goes through the
+``nm_spmm`` compressed-matmul path (the HBM-bandwidth win on TPU), with no
+dense rehydration. Submits more requests than decode lanes so slot reuse
+(continuous batching) is exercised.
 """
 import sys
 
 from repro.launch.serve import main
 
 if __name__ == "__main__":
-    main(sys.argv[1:] or ["--arch", "gpt2-paper", "--batch", "4", "--gen", "16"])
+    main(
+        sys.argv[1:]
+        or ["--arch", "gpt2-paper", "--batch", "2", "--requests", "5", "--gen", "12"]
+    )

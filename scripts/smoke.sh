@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Mechanical regression gate: tier-1 tests + the compressed-native serve path.
+#
+#     bash scripts/smoke.sh [extra pytest args]
+#
+# Runs (1) the full tier-1 pytest suite and (2) the serving launcher on the
+# smoke config — a real continuous-batching decode over CompressedTensor
+# leaves — so a regression anywhere in the prefill/decode/compression stack
+# fails the script even if no unit test covers it directly.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q "$@"
+
+echo "== serve smoke (compressed-native) =="
+python -m repro.launch.serve --arch gpt2-paper --batch 2 --requests 3 \
+    --prompt-len 8 --gen 8
+
+echo "== serve smoke (dense A/B) =="
+python -m repro.launch.serve --arch gpt2-paper --batch 2 --requests 2 \
+    --prompt-len 8 --gen 4 --dense
+
+echo "smoke OK"

@@ -29,6 +29,7 @@ _EXCLUDE_FRAGMENTS = (
     "router",     # MoE gate — tiny and accuracy-critical
     "scale",
     "a_log",      # mamba2 / rg-lru recurrence parameters
+    "d_skip",     # mamba2 per-head D skip (1-D; 2-D only when scan-stacked)
     "dt_",        # mamba2 dt projection bias & init
     "conv",       # mamba2 short conv (depthwise, tiny)
     "gate_diag",  # rg-lru diagonal gates

@@ -31,7 +31,8 @@ def nm_mask_apply(
     prefer_pallas: Optional[bool] = None,
     interpret: Optional[bool] = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """(Π⊙w, Π) via the fused kernel when profitable.
+    """Return ``(Π, Π⊙w)`` — the mask, then the masked weight — via the
+    fused kernel when profitable.
 
     2-D weights with groups on axis 0 route to Pallas; other ranks use the
     reference path (they are rare and small in the zoo)."""

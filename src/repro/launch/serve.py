@@ -1,18 +1,20 @@
-"""Serving launcher: batched greedy decode from an N:M-compressed model.
+"""Serving launcher: compressed-native continuous-batching decode.
 
     python -m repro.launch.serve --arch gpt2-paper --batch 4 --prompt-len 16 \
-        --gen 32 [--ckpt-dir /tmp/run1]
+        --gen 32 [--ckpt-dir /tmp/run1] [--dense] [--temperature 0.8 --top-k 40]
 
 Loads (or initializes) params, applies the final Π_T mask (Algorithm 1,
-line 23-24), exports the N:M-compressed artifact, reports the HBM footprint
-win, and runs a batched KV-cache decode loop — the serving path whose
-weight reads the nm_spmm Pallas kernel compresses on TPU.
+line 23-24), exports the N:M-compressed artifact, and hands the *compressed
+tree itself* to ``repro.serving.DecodeEngine`` — prefill and every decode
+step run directly on ``CompressedTensor`` leaves via the ``nm_spmm`` kernel
+path (Pallas on TPU); the dense weights are never rehydrated in HBM.
+``--dense`` serves the masked-dense tree instead, as an A/B baseline for
+the same engine.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -21,21 +23,12 @@ import repro.core as core
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config, list_archs
 from repro.models.model import TransformerLM
-from repro.sparse_infer import compress_params, compression_report, decompress_params
+from repro.serving import DecodeEngine, SamplingParams
+from repro.sparse_infer import compress_params, compression_report
 
 
-def main(argv=None) -> dict:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gpt2-paper", choices=list_archs())
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--no-smoke", dest="smoke", action="store_false")
-    ap.add_argument("--nm", default="2:4")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--ckpt-dir", default=None)
-    args = ap.parse_args(argv)
-
+def build_serving_state(args) -> tuple:
+    """(model, serving_tree, compression_report) from CLI args."""
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.frontend != "none":
         raise SystemExit("serve demo targets token-input archs")
@@ -55,34 +48,65 @@ def main(argv=None) -> dict:
             print(f"# restored params from step {step}")
 
     n, m = (int(x) for x in args.nm.split(":"))
-    recipe = core.make_recipe("step", core.SparsityConfig(default=core.NMSparsity(n, m)))
+    recipe = core.make_recipe(
+        "step", core.SparsityConfig(default=core.NMSparsity(n, m))
+    )
     sparse = recipe.export_sparse(params)  # Π_T ⊙ w_T
     comp = compress_params(sparse, recipe.sparsity)
     rep = compression_report(sparse, comp)
-    print(json.dumps({"compression": rep}))
-    serving_params = decompress_params(comp)  # reference path (nm_spmm on TPU)
+    serving_tree = sparse if args.dense else comp
+    return model, serving_tree, rep
 
-    toks = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-paper", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--no-smoke", dest="smoke", action="store_false")
+    ap.add_argument("--nm", default="2:4")
+    ap.add_argument("--batch", type=int, default=4, help="decode lanes")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="total requests (default: one per lane)")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--dense", action="store_true",
+                    help="serve the masked-dense tree (A/B baseline)")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args(argv)
+
+    model, serving_tree, rep = build_serving_state(args)
+    cfg = model.cfg
+    print(json.dumps({"compression": rep}))
+
+    engine = DecodeEngine(
+        model,
+        serving_tree,
+        max_batch=args.batch,
+        max_len=args.prompt_len + args.gen + 1,
+        seed=0,
     )
-    max_len = args.prompt_len + args.gen + 1
-    logits, cache = model.prefill(serving_params, {"tokens": toks}, max_len=max_len)
-    step = jax.jit(lambda p, t, c: model.decode_step(p, t, c))
-    tok = jnp.argmax(logits, -1)
-    out = [tok]
-    t0 = time.perf_counter()
-    for _ in range(args.gen):
-        logits, cache = step(serving_params, tok, cache)
-        tok = jnp.argmax(logits, -1)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    seqs = jnp.stack(out, axis=1)
+    n_requests = args.batch if args.requests is None else args.requests
+    sampling = SamplingParams(
+        temperature=args.temperature, top_k=args.top_k, max_new_tokens=args.gen
+    )
+    for r in range(n_requests):
+        prompt = jax.random.randint(
+            jax.random.PRNGKey(1000 + r), (args.prompt_len,), 0, cfg.vocab
+        )
+        engine.submit([int(t) for t in prompt], sampling)
+    results = engine.run()
+
+    st = engine.stats()
     summary = {
         "arch": cfg.name,
-        "generated_shape": list(seqs.shape),
-        "tokens_per_s": args.gen * args.batch / dt,
-        "ms_per_decode_step": dt / args.gen * 1e3,
+        "compressed": not args.dense,
+        "n_requests": len(results),
+        "generated_tokens": st["tokens_generated"],
+        "tokens_per_s": st["tokens_per_s"],
+        "ms_per_decode_step": st["ms_per_decode_step"],
+        "decode_steps": st["decode_steps"],
         "hbm_weight_ratio": round(rep["ratio"], 3),
     }
     print(json.dumps({"summary": summary}))

@@ -5,6 +5,13 @@ Conventions
 - Matmul weights are stored ``(in_features, out_features)`` (``y = x @ W``)
   so N:M sparsity groups run along axis 0 — the reduction axis.
 - All layers are pure functions over explicit parameter dicts.
+- Every weight matmul in the model zoo goes through :func:`matmul`, the
+  single dispatch point that makes the layer stack polymorphic over dense
+  arrays and N:M-compressed ``sparse_infer.CompressedTensor`` leaves: the
+  serving engine passes the compressed tree straight into
+  ``prefill``/``decode_step`` and compressed weights route through the
+  ``kernels.ops.nm_spmm`` path (Pallas on TPU) with no dense
+  rehydration in HBM.
 - Attention is implemented with an online-softmax scan over KV chunks
   (flash-attention style) so the 32k-prefill cells never materialize a
   (S, S) score matrix — this is the TPU-native memory-hierarchy adaptation
@@ -13,10 +20,53 @@ Conventions
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
+from repro.sparse_infer.compress import CompressedTensor
+
+
+# ---------------------------------------------------------------------------
+# the weight-matmul dispatch point (dense | N:M-compressed)
+# ---------------------------------------------------------------------------
+
+Weight = Union[jnp.ndarray, CompressedTensor]
+
+
+def matmul(x: jnp.ndarray, w: Weight) -> jnp.ndarray:
+    """``y = x @ w`` for a dense or N:M-compressed weight.
+
+    Dense arrays use the native matmul (batched over leading dims for
+    stacked ``(E, in, out)`` expert / layer weights). ``CompressedTensor``
+    leaves route through ``kernels.ops.nm_spmm``, which streams the
+    compressed ``(values, indices)`` pair and never materializes the dense
+    weight in HBM (Pallas on TPU; jnp reference elsewhere).
+    """
+    if isinstance(w, CompressedTensor):
+        return _compressed_matmul(x, w)
+    return x @ w
+
+
+def _compressed_matmul(x: jnp.ndarray, w: CompressedTensor) -> jnp.ndarray:
+    v, idx = w.values, w.indices
+    # groups must run along the contraction axis (axis -2 of the weight)
+    assert w.group_axis % v.ndim == v.ndim - 2, (w.group_axis, v.shape)
+    if v.ndim == 2:
+        lead = x.shape[:-1]
+        y = kernel_ops.nm_spmm(x.reshape(-1, x.shape[-1]), v, idx, w.n, w.m)
+        return y.reshape(lead + (v.shape[-1],))
+    if v.ndim == 3 and x.ndim == 3:
+        # stacked weights (experts (E, in, out) / scan blocks): map the
+        # 2-D kernel over the leading axis
+        return jax.vmap(
+            lambda xe, ve, ie: kernel_ops.nm_spmm(xe, ve, ie, w.n, w.m)
+        )(x, v, idx)
+    raise ValueError(
+        f"unsupported compressed matmul: x {x.shape} @ values {v.shape}"
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -242,18 +292,18 @@ def decode_attention(
 
 def swiglu_mlp(x: jnp.ndarray, p: dict) -> jnp.ndarray:
     """p: {gate: (d, f), up: (d, f), down: (f, d)}"""
-    gate = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32))
-    up = (x @ p["w_up"]).astype(jnp.float32)
-    return ((gate * up).astype(x.dtype)) @ p["w_down"]
+    gate = jax.nn.silu(matmul(x, p["w_gate"]).astype(jnp.float32))
+    up = matmul(x, p["w_up"]).astype(jnp.float32)
+    return matmul((gate * up).astype(x.dtype), p["w_down"])
 
 
 def gelu_mlp(x: jnp.ndarray, p: dict) -> jnp.ndarray:
     """p: {w_fc: (d, f), w_proj: (f, d)} (+ optional biases)"""
-    h = x @ p["w_fc"]
+    h = matmul(x, p["w_fc"])
     if "b_fc" in p:
         h = h + p["b_fc"]
     h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
-    y = h @ p["w_proj"]
+    y = matmul(h, p["w_proj"])
     if "b_proj" in p:
         y = y + p["b_proj"]
     return y

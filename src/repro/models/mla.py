@@ -16,7 +16,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import apply_rope, chunked_attention, decode_attention
+from repro.models.layers import apply_rope, chunked_attention, decode_attention, matmul
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,8 +49,8 @@ def init_mla_params(
 def _project_qkv(x, p, n_heads: int, cfg: MLAConfig):
     b, s, _ = x.shape
     nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
-    q = (x @ p["w_q"]).reshape(b, s, n_heads, nd + rd)
-    dkv = x @ p["w_dkv"]  # (B,S,kv_lora + rd)
+    q = matmul(x, p["w_q"]).reshape(b, s, n_heads, nd + rd)
+    dkv = matmul(x, p["w_dkv"])  # (B,S,kv_lora + rd)
     c_kv, k_rope = dkv[..., : cfg.kv_lora], dkv[..., cfg.kv_lora :]
     return q, c_kv, k_rope
 
@@ -58,7 +58,7 @@ def _project_qkv(x, p, n_heads: int, cfg: MLAConfig):
 def _expand_kv(c_kv, p, n_heads: int, cfg: MLAConfig):
     b, s, _ = c_kv.shape
     nd, vd = cfg.nope_head_dim, cfg.v_head_dim
-    ukv = (c_kv @ p["w_ukv"]).reshape(b, s, n_heads, nd + vd)
+    ukv = matmul(c_kv, p["w_ukv"]).reshape(b, s, n_heads, nd + vd)
     return ukv[..., :nd], ukv[..., nd:]  # k_nope, v
 
 
@@ -87,7 +87,7 @@ def mla_attention(
     # pad v to the same head dim so one attention kernel serves both
     out = chunked_attention(qf, kf, v_pad(v, nd + rd), causal=True, chunk=chunk)
     out = out[..., :vd].reshape(b, s, n_heads * vd)
-    return out @ p["w_o"], (c_kv, k_rope_r[:, :, 0, :])
+    return matmul(out, p["w_o"]), (c_kv, k_rope_r[:, :, 0, :])
 
 
 def v_pad(v: jnp.ndarray, to: int) -> jnp.ndarray:
@@ -133,4 +133,4 @@ def mla_decode(
     qf = jnp.concatenate([q_nope, q_rope], axis=-1)
     out = decode_attention(qf, kf, v_pad(v, nd + rd), jnp.reshape(cache_len, (-1,)) + 1)
     out = out[..., :vd].reshape(b, 1, n_heads * vd)
-    return out @ p["w_o"], cache_ckv, cache_krope
+    return matmul(out, p["w_o"]), cache_ckv, cache_krope

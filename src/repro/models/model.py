@@ -10,9 +10,13 @@ One code path covers all 10 assigned architectures:
   with optional non-periodic head/tail layers applied individually
   (DeepSeek's dense first layer; RecurrentGemma's 38 = 12×(rec,rec,attn)+2).
 
-The model is sparsity-agnostic: recipes mask the *parameter tree* before it
-reaches ``forward`` (see core/recipes.py), exactly like the paper applies
-Π⊙w per training step.
+The model is sparsity-agnostic in two senses: during training, recipes mask
+the *parameter tree* before it reaches ``forward`` (see core/recipes.py),
+exactly like the paper applies Π⊙w per training step; at serving time, the
+parameter tree may hold ``sparse_infer.CompressedTensor`` leaves — every
+weight matmul dispatches through ``layers.matmul``, so ``prefill`` and
+``decode_step`` run directly on the N:M-compressed artifact (the
+``repro.serving`` engine's fast path; no dense rehydration in HBM).
 """
 from __future__ import annotations
 
@@ -202,9 +206,9 @@ def _attn_forward(
 ):
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    q = L.matmul(x, p["wq"])
+    k = L.matmul(x, p["wk"])
+    v = L.matmul(x, p["wv"])
     if cfg.qkv_bias:
         q, k, v = q + p["bias_q"], k + p["bias_k"], v + p["bias_v"]
     q = q.reshape(b, s, h, hd)
@@ -219,7 +223,7 @@ def _attn_forward(
     out = L.chunked_attention(
         q, k, v, causal=True, window=cfg.local_window, chunk=chunk
     )
-    out = out.reshape(b, s, h * hd) @ p["wo"]
+    out = L.matmul(out.reshape(b, s, h * hd), p["wo"])
     if cfg.o_bias:
         out = out + p["bias_o"]
     cache = (k, v) if want_cache else None
@@ -305,7 +309,7 @@ def forward(
     """
     plan = layer_plan(cfg)
     if "embeds" in batch and cfg.frontend != "none":
-        x = batch["embeds"] @ params["frontend"]["frontend_proj"]
+        x = L.matmul(batch["embeds"], params["frontend"]["frontend_proj"])
         b, s = x.shape[0], x.shape[1]
     else:
         tokens = batch["tokens"]
@@ -366,9 +370,9 @@ def forward(
 
     x = _apply_norm(cfg, params["final"], x)
     if cfg.tie_embeddings:
-        logits = x @ params["embed"]["tok_embed"].T
+        logits = x @ params["embed"]["tok_embed"].T  # embeddings stay dense
     else:
-        logits = x @ params["unembed"]["out_embed"]
+        logits = L.matmul(x, params["unembed"]["out_embed"])
     return logits, aux, (caches if want_cache else None)
 
 
@@ -461,13 +465,31 @@ def init_cache(cfg: ArchConfig, batch_size: int, max_len: int, dtype=None) -> di
     return cache
 
 
+def write_cache_slot(pool: dict, single: dict, slot) -> dict:
+    """Write a batch-1 cache ``single`` into lane ``slot`` of a pooled cache.
+
+    Owns the pool's axis layout so callers (the serving engine) don't have
+    to: top-level leaves are ``(B, ...)``; the scanned ``"body"`` stack is
+    ``(L, B, ...)`` — its batch axis sits behind the layer axis.
+    """
+    out = dict(pool)
+    for k in pool:
+        axis_write = (
+            (lambda pl, one: pl.at[:, slot].set(one[:, 0]))
+            if k == "body"
+            else (lambda pl, one: pl.at[slot].set(one[0]))
+        )
+        out[k] = jax.tree_util.tree_map(axis_write, pool[k], single[k])
+    return out
+
+
 def _attn_decode(x, p, cfg: ArchConfig, c: dict, pos):
     """x: (B,1,d). pos: (B,) positions of the new token."""
     b = x.shape[0]
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    q = L.matmul(x, p["wq"])
+    k = L.matmul(x, p["wk"])
+    v = L.matmul(x, p["wv"])
     if cfg.qkv_bias:
         q, k, v = q + p["bias_q"], k + p["bias_k"], v + p["bias_v"]
     q = q.reshape(b, 1, h, hd)
@@ -484,10 +506,11 @@ def _attn_decode(x, p, cfg: ArchConfig, c: dict, pos):
 
     s_cache = c["k"].shape[1]
     if cfg.local_window is not None and cfg.local_window <= s_cache:
-        # ring-free rolling window: shift when full
-        full = pos[0] >= s_cache  # uniform pos across batch in our serving
-        kc = jnp.where(full, jnp.roll(c["k"], -1, axis=1), c["k"])
-        vc = jnp.where(full, jnp.roll(c["v"], -1, axis=1), c["v"])
+        # ring-free rolling window, gated per lane: continuous batching gives
+        # every lane its own position (jnp.roll on axis 1 is lane-independent)
+        full = pos >= s_cache  # (B,)
+        kc = jnp.where(full[:, None, None, None], jnp.roll(c["k"], -1, axis=1), c["k"])
+        vc = jnp.where(full[:, None, None, None], jnp.roll(c["v"], -1, axis=1), c["v"])
         slot = jnp.minimum(pos, s_cache - 1)
     else:
         kc, vc = c["k"], c["v"]
@@ -496,7 +519,7 @@ def _attn_decode(x, p, cfg: ArchConfig, c: dict, pos):
     kc = kc.at[bidx, slot].set(k[:, 0])
     vc = vc.at[bidx, slot].set(v[:, 0])
     out = L.decode_attention(q, kc, vc, jnp.minimum(pos, s_cache - 1) + 1)
-    out = out.reshape(b, 1, h * hd) @ p["wo"]
+    out = L.matmul(out.reshape(b, 1, h * hd), p["wo"])
     if cfg.o_bias:
         out = out + p["bias_o"]
     return out, {"k": kc, "v": vc}
@@ -567,9 +590,9 @@ def decode_step(
 
     x = _apply_norm(cfg, params["final"], x)
     if cfg.tie_embeddings:
-        logits = x @ params["embed"]["tok_embed"].T
+        logits = x @ params["embed"]["tok_embed"].T  # embeddings stay dense
     else:
-        logits = x @ params["unembed"]["out_embed"]
+        logits = L.matmul(x, params["unembed"]["out_embed"])
     return logits[:, 0, :], new_cache
 
 
@@ -707,3 +730,5 @@ class TransformerLM:
 
     def init_cache(self, batch_size, max_len, dtype=None):
         return init_cache(self.cfg, batch_size, max_len, dtype)
+
+    write_cache_slot = staticmethod(write_cache_slot)

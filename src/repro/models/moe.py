@@ -26,6 +26,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.models.layers import matmul
+
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
@@ -124,13 +126,13 @@ def moe_mlp(
     if ep_constraint is not None:
         buf = ep_constraint(buf)
 
-    # ---- grouped expert matmuls (dense per expert; MXU-friendly)
-    gate = jax.nn.silu(
-        jnp.einsum("ecd,edf->ecf", buf, p["w_gate_e"]).astype(jnp.float32)
-    )
-    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up_e"]).astype(jnp.float32)
+    # ---- grouped expert matmuls (per-expert; MXU-friendly). matmul
+    # broadcasts over the expert axis for dense (E, in, out) stacks and
+    # vmaps the compressed kernel over it for CompressedTensor leaves.
+    gate = jax.nn.silu(matmul(buf, p["w_gate_e"]).astype(jnp.float32))
+    up = matmul(buf, p["w_up_e"]).astype(jnp.float32)
     h = (gate * up).astype(x.dtype)
-    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down_e"])  # (E, C, d)
+    out_e = matmul(h, p["w_down_e"])  # (E, C, d)
     if ep_constraint is not None:
         out_e = ep_constraint(out_e)
 
@@ -147,8 +149,8 @@ def moe_mlp(
 
     if cfg.n_shared:
         sp = p["shared"]
-        g2 = jax.nn.silu((xt @ sp["w_gate"]).astype(jnp.float32))
-        u2 = (xt @ sp["w_up"]).astype(jnp.float32)
-        yt = yt + ((g2 * u2).astype(x.dtype) @ sp["w_down"]).astype(jnp.float32)
+        g2 = jax.nn.silu(matmul(xt, sp["w_gate"]).astype(jnp.float32))
+        u2 = matmul(xt, sp["w_up"]).astype(jnp.float32)
+        yt = yt + matmul((g2 * u2).astype(x.dtype), sp["w_down"]).astype(jnp.float32)
 
     return yt.astype(x.dtype).reshape(b, s, d), aux

@@ -17,6 +17,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.models.layers import matmul
+
 
 @dataclasses.dataclass(frozen=True)
 class RGLRUConfig:
@@ -60,8 +62,8 @@ def rglru_scan(
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (h (B,S,W) f32, final_state (B,W) f32)."""
     lam = jax.nn.softplus(p["a_log_lambda"])  # (W,) > 0
-    r = jax.nn.sigmoid((u @ p["w_a_gate"]).astype(jnp.float32))  # (B,S,W)
-    i = jax.nn.sigmoid((u @ p["w_i_gate"]).astype(jnp.float32))
+    r = jax.nn.sigmoid(matmul(u, p["w_a_gate"]).astype(jnp.float32))  # (B,S,W)
+    i = jax.nn.sigmoid(matmul(u, p["w_i_gate"]).astype(jnp.float32))
     log_a = -cfg.c * lam[None, None, :] * r  # (B,S,W)  (<= 0)
     a = jnp.exp(log_a)
     beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
@@ -89,8 +91,8 @@ def rglru_block(
     conv_state=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Full Griffin recurrent block. Returns (out, lru_state, conv_state)."""
-    x = u @ p["w_x"]
-    gate = jax.nn.gelu((u @ p["w_gate_branch"]).astype(jnp.float32), approximate=True)
+    x = matmul(u, p["w_x"])
+    gate = jax.nn.gelu(matmul(u, p["w_gate_branch"]).astype(jnp.float32), approximate=True)
     if conv_state is not None:
         w = p["conv_w"].shape[0]
         full = jnp.concatenate([conv_state, x], axis=1)
@@ -104,7 +106,7 @@ def rglru_block(
         new_conv_state = x[:, -(p["conv_w"].shape[0] - 1) :, :]
     h, final = rglru_scan(xc, u, p, cfg, init_state)
     y = (h * gate).astype(u.dtype)
-    return y @ p["w_out"], final, new_conv_state
+    return matmul(y, p["w_out"]), final, new_conv_state
 
 
 def rglru_decode_step(

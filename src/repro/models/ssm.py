@@ -18,6 +18,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.models.layers import matmul
+
 
 @dataclasses.dataclass(frozen=True)
 class SSMConfig:
@@ -174,7 +176,7 @@ def ssm_block(
     di, nh = dims["d_inner"], dims["n_heads"]
     g, n, hd = cfg.n_groups, cfg.d_state, cfg.head_dim
 
-    zxbcdt = u @ p["w_in"]
+    zxbcdt = matmul(u, p["w_in"])
     z, xbc_raw, dt = _split_in_proj(zxbcdt, d_model, cfg)
     conv_tail = xbc_raw[:, -(cfg.conv_width - 1):, :]  # decode conv state
     xbc = _causal_conv(xbc_raw, p["conv_w"])
@@ -196,7 +198,7 @@ def ssm_block(
     y = y + p["d_skip"][None, None, :, None] * x.astype(jnp.float32)
     y = y.reshape(bsz, s, di)
     y = y * jax.nn.silu(z.astype(jnp.float32))  # gated
-    return (y.astype(u.dtype)) @ p["w_out"], (s_final, conv_tail)
+    return matmul(y.astype(u.dtype), p["w_out"]), (s_final, conv_tail)
 
 
 def ssm_decode_step(
@@ -212,7 +214,7 @@ def ssm_decode_step(
     di, nh = dims["d_inner"], dims["n_heads"]
     g, n, hd = cfg.n_groups, cfg.d_state, cfg.head_dim
 
-    zxbcdt = u @ p["w_in"]
+    zxbcdt = matmul(u, p["w_in"])
     z, xbc, dt = _split_in_proj(zxbcdt, d_model, cfg)
     # conv with rolled state
     full = jnp.concatenate([conv_state, xbc], axis=1)  # (B, W, C)
@@ -236,4 +238,4 @@ def ssm_decode_step(
     y = jnp.einsum("bhpn,bhn->bhp", new_state, chh)
     y = y + p["d_skip"][None, :, None] * x.astype(jnp.float32)
     y = y.reshape(-1, 1, di) * jax.nn.silu(z.astype(jnp.float32))
-    return (y.astype(u.dtype)) @ p["w_out"], new_state, new_conv_state
+    return matmul(y.astype(u.dtype), p["w_out"]), new_state, new_conv_state

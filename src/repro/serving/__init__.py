@@ -1,0 +1,3 @@
+"""Compressed-native serving: continuous-batching decode over N:M trees."""
+from repro.serving.engine import DecodeEngine, GenerationResult
+from repro.serving.sampling import SamplingParams, sample_tokens

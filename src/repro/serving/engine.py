@@ -1,0 +1,289 @@
+"""Continuous-batching decode engine over a (compressed or dense) model tree.
+
+The engine is the serving counterpart of ``launch/train.py``'s Trainer: it
+owns a preallocated KV-cache pool of ``max_batch`` slots, a FIFO request
+queue, and the jitted prefill/decode executables, and it serves the
+parameter tree it is given *as is*. Hand it the N:M-compressed artifact
+from ``sparse_infer.compress_params`` and every weight matmul inside
+``model.prefill`` / ``model.decode_step`` routes through the compressed
+``nm_spmm`` path (see ``models.layers.matmul``) — the dense weights never
+materialize in HBM.
+
+Scheduling is continuous batching: whenever a slot frees up (a request hit
+its stop condition) the next queued request is admitted *between decode
+steps* — one prefill writes its cache into the free slot and the following
+decode step carries the new request alongside the in-flight ones. Per-slot
+``cache["len"]`` keeps heterogeneous sequence positions correct (including
+per-lane rolling-window shifts on sliding-window archs); idle slots are
+pinned to length 0 and their sampled tokens discarded.
+
+Prefill retraces per distinct prompt length (shapes are static under jit);
+serve traffic with a small set of prompt lengths, or pad client-side.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import TransformerLM
+from repro.serving.sampling import SamplingParams, sample_tokens
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    """A completed request."""
+
+    uid: int
+    prompt: list[int]
+    tokens: list[int]  # generated tokens (eos not included)
+    finish_reason: str  # "eos" | "length" | "cache_full"
+
+
+@dataclasses.dataclass
+class _Request:
+    uid: int
+    prompt: list[int]
+    sampling: SamplingParams
+
+
+class _Slot:
+    """Host-side bookkeeping for one active batch lane."""
+
+    __slots__ = ("uid", "prompt", "sampling", "generated")
+
+    def __init__(self, req: _Request):
+        self.uid = req.uid
+        self.prompt = req.prompt
+        self.sampling = req.sampling
+        self.generated: list[int] = []
+
+
+class DecodeEngine:
+    """Batched decode over a fixed-size slot pool with continuous batching.
+
+    Parameters
+    ----------
+    model: the ``TransformerLM`` wrapper (provides prefill/decode_step).
+    params: the serving tree — dense arrays and/or ``CompressedTensor``
+        leaves; served directly, no rehydration.
+    max_batch: number of concurrent decode lanes (cache pool size).
+    max_len: per-slot cache capacity (prompt + generated tokens).
+    """
+
+    def __init__(
+        self,
+        model: TransformerLM,
+        params: Any,
+        *,
+        max_batch: int = 8,
+        max_len: int = 128,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache = model.init_cache(max_batch, max_len)
+        self.slots: list[Optional[_Slot]] = [None] * max_batch
+        self.queue: deque[_Request] = deque()
+        self.tokens = jnp.zeros((max_batch,), jnp.int32)
+        self.key = jax.random.PRNGKey(seed)
+        self._next_uid = 0
+        self.decode_steps = 0
+        self.admitted = 0
+        self.tokens_generated = 0
+        self.decode_tokens = 0  # tokens produced by decode steps (not prefill)
+        self.decode_wall_s = 0.0
+
+        def _decode(params, tok, cache, temps, topks, active, key,
+                    need_sample, need_topk):
+            logits, cache = model.decode_step(params, tok, cache)
+            # idle lanes: pin position so a freed slot cannot creep past the
+            # cache bound while it waits for its next request
+            cache["len"] = jnp.where(active, cache["len"], 0)
+            nxt = sample_tokens(
+                logits, temps, topks, key,
+                need_sample=need_sample, need_topk=need_topk,
+            )
+            return jnp.where(active, nxt, 0), logits, cache
+
+        def _insert(params, pool, prompt, slot, temp, topk, key,
+                    need_sample, need_topk):
+            # single-request prefill, written into the pool at `slot`
+            # (model.write_cache_slot owns the pool's axis layout)
+            logits, c1 = model.prefill(
+                params, {"tokens": prompt[None, :]}, max_len=max_len
+            )
+            pool = model.write_cache_slot(pool, c1, slot)
+            first = sample_tokens(
+                logits, temp[None], topk[None], key,
+                need_sample=need_sample, need_topk=need_topk,
+            )
+            return first[0], pool
+
+        # the need_* flags are static so all-greedy batches compile to a
+        # bare argmax (no vocab sort / categorical in the decode hot path);
+        # at most 4 _decode variants exist, warmed untimed on first use
+        self._decode = jax.jit(
+            _decode, static_argnames=("need_sample", "need_topk")
+        )
+        self._insert = jax.jit(
+            _insert, static_argnames=("need_sample", "need_topk")
+        )
+        self._warmed: set[tuple[bool, bool]] = set()
+
+    # -- request intake ------------------------------------------------------
+
+    def submit(
+        self, prompt: Sequence[int], sampling: Optional[SamplingParams] = None
+    ) -> int:
+        """Enqueue a request; returns its uid."""
+        prompt = [int(t) for t in prompt]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} >= cache capacity {self.max_len}"
+            )
+        uid = self._next_uid
+        self._next_uid += 1
+        self.queue.append(_Request(uid, prompt, sampling or SamplingParams()))
+        return uid
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def _finish(self, i: int, reason: str, out: list[GenerationResult]) -> None:
+        s = self.slots[i]
+        out.append(GenerationResult(s.uid, s.prompt, s.generated, reason))
+        self.tokens_generated += len(s.generated)
+        self.slots[i] = None
+
+    def _absorb(
+        self, i: int, token: int, out: list[GenerationResult], *,
+        from_decode: bool = False,
+    ) -> None:
+        """Record a freshly sampled token for slot i; finish on a stop."""
+        s = self.slots[i]
+        sp = s.sampling
+        if sp.eos_id >= 0 and token == sp.eos_id:
+            self._finish(i, "eos", out)
+            return
+        s.generated.append(token)
+        if from_decode:
+            self.decode_tokens += 1
+        if len(s.generated) >= sp.max_new_tokens:
+            self._finish(i, "length", out)
+        elif len(s.prompt) + len(s.generated) >= self.max_len:
+            # the cache has no room to ingest this token — stop here
+            self._finish(i, "cache_full", out)
+
+    def _admit(self, req: _Request, i: int, out: list[GenerationResult]) -> None:
+        self.key, sub = jax.random.split(self.key)
+        first, self.cache = self._insert(
+            self.params,
+            self.cache,
+            jnp.asarray(req.prompt, jnp.int32),
+            i,
+            jnp.float32(req.sampling.temperature),
+            jnp.int32(req.sampling.top_k),
+            sub,
+            need_sample=req.sampling.temperature > 0,
+            need_topk=req.sampling.top_k > 0,
+        )
+        self.tokens = self.tokens.at[i].set(first)
+        self.slots[i] = _Slot(req)
+        self.admitted += 1
+        self._absorb(i, int(first), out)
+
+    def step(self) -> list[GenerationResult]:
+        """Admit what fits, run one decode step; return finished requests."""
+        out: list[GenerationResult] = []
+        while self.queue:
+            i = self._free_slot()
+            if i is None:
+                break
+            self._admit(self.queue.popleft(), i, out)
+        active = np.array([s is not None for s in self.slots])
+        if not active.any():
+            return out
+        self.key, sub = jax.random.split(self.key)
+        temps = jnp.asarray(
+            [s.sampling.temperature if s else 0.0 for s in self.slots], jnp.float32
+        )
+        topks = jnp.asarray(
+            [s.sampling.top_k if s else 0 for s in self.slots], jnp.int32
+        )
+        flags = dict(
+            need_sample=any(
+                s is not None and s.sampling.temperature > 0 for s in self.slots
+            ),
+            need_topk=any(
+                s is not None and s.sampling.top_k > 0 for s in self.slots
+            ),
+        )
+        args = (
+            self.params, self.tokens, self.cache, temps, topks,
+            jnp.asarray(active), sub,
+        )
+        sig = (flags["need_sample"], flags["need_topk"])
+        if sig not in self._warmed:
+            # untimed warmup: trace+compile of this variant must not land in
+            # decode_wall_s (it would dominate ms_per_decode_step on short
+            # runs); the result is discarded and the timed call recomputes
+            jax.block_until_ready(self._decode(*args, **flags))
+            self._warmed.add(sig)
+        t0 = time.perf_counter()
+        tok, _, self.cache = self._decode(*args, **flags)
+        tok.block_until_ready()
+        self.decode_wall_s += time.perf_counter() - t0
+        self.decode_steps += 1
+        self.tokens = tok
+        host_tok = np.asarray(tok)
+        for i in range(self.max_batch):
+            if self.slots[i] is not None:
+                self._absorb(i, int(host_tok[i]), out, from_decode=True)
+        return out
+
+    def run(self) -> dict[int, GenerationResult]:
+        """Drain the queue and all active slots; results keyed by uid."""
+        results: dict[int, GenerationResult] = {}
+        while self.queue or any(s is not None for s in self.slots):
+            for r in self.step():
+                results[r.uid] = r
+        return results
+
+    # -- reporting -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        # throughput counts only decode-produced tokens over decode wall time;
+        # each request's first token comes from (untimed) prefill and would
+        # otherwise inflate tokens/s
+        return {
+            "decode_steps": self.decode_steps,
+            "admitted": self.admitted,
+            "tokens_generated": self.tokens_generated,
+            "decode_tokens": self.decode_tokens,
+            "decode_wall_s": self.decode_wall_s,
+            "ms_per_decode_step": (
+                self.decode_wall_s / self.decode_steps * 1e3
+                if self.decode_steps
+                else 0.0
+            ),
+            "tokens_per_s": (
+                self.decode_tokens / self.decode_wall_s
+                if self.decode_wall_s > 0
+                else 0.0
+            ),
+        }

@@ -1,0 +1,57 @@
+"""Per-request token sampling, vectorized over the decode batch.
+
+Each slot in the engine's batch carries its own ``(temperature, top_k)``;
+this module samples the whole batch in one jittable call so heterogeneous
+requests share a single decode step. ``temperature == 0`` means greedy
+(argmax) and ``top_k == 0`` disables the top-k filter — both resolved with
+``jnp.where`` so the function stays trace-stable across request mixes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding policy."""
+
+    temperature: float = 0.0  # 0 = greedy
+    top_k: int = 0  # 0 = no top-k filtering
+    max_new_tokens: int = 32
+    eos_id: int = -1  # -1 = never stop on a token
+
+
+def sample_tokens(
+    logits: jnp.ndarray,  # (B, V)
+    temperature: jnp.ndarray,  # (B,) f32; 0 = greedy
+    top_k: jnp.ndarray,  # (B,) int32; 0 = disabled
+    key: jax.Array,
+    *,
+    need_sample: bool = True,  # static: False = every row is greedy
+    need_topk: bool = True,  # static: False = no row filters by top-k
+) -> jnp.ndarray:
+    """Sample one token per batch row under per-row (temperature, top_k).
+
+    The ``need_*`` flags are static (the engine computes them host-side from
+    the current request mix) so all-greedy batches — the common serving
+    case — compile to a bare argmax with no O(B·V·logV) sort and no
+    categorical draw in the decode hot path.
+    """
+    lf = logits.astype(jnp.float32)
+    v = lf.shape[-1]
+    if need_topk:
+        # per-row top-k cutoff: the k-th largest logit (row-sorted descending)
+        sorted_desc = jnp.sort(lf, axis=-1)[:, ::-1]
+        kidx = jnp.clip(top_k - 1, 0, v - 1)
+        kth = jnp.take_along_axis(sorted_desc, kidx[:, None], axis=-1)  # (B, 1)
+        cut = (top_k[:, None] > 0) & (lf < kth)
+        lf = jnp.where(cut, -jnp.inf, lf)
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    if not need_sample:
+        return greedy
+    safe_t = jnp.where(temperature > 0, temperature, 1.0)
+    sampled = jax.random.categorical(key, lf / safe_t[:, None], axis=-1)
+    return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)

@@ -1,16 +1,26 @@
-"""Deployable N:M-compressed model export (the inference artifact).
+"""Deployable N:M-compressed model export — the tree the serving engine runs on.
 
 ``compress_params`` converts a trained parameter tree + SparsityConfig into
 a tree where every maskable leaf is replaced by a :class:`CompressedTensor`
-(values + packed indices). This is what a serving fleet would load: HBM
-weight footprint drops to ~N/M (+1 byte/kept-element of index), and the
-``kernels.nm_spmm`` Pallas kernel consumes the compressed form directly —
-the TPU-native analogue of deploying onto Ampere Sparse Tensor Cores
-(DESIGN.md §3).
+(values + packed indices). This tree is *served directly*: the model's
+matmul dispatch point (``models.layers.matmul``) recognizes compressed
+leaves and routes them through ``kernels.ops.nm_spmm`` (Pallas on TPU,
+jnp reference elsewhere), so ``model.prefill`` / ``model.decode_step`` and
+the ``repro.serving`` engine consume the compressed form with no dense
+rehydration in HBM. Weight footprint drops to ~N/M (+1 byte/kept-element of
+index) — the TPU-native analogue of deploying onto Ampere Sparse Tensor
+Cores (DESIGN.md §3). ``decompress_params`` remains only as a debugging /
+parity-test utility.
+
+``CompressedTensor`` is a registered pytree whose children are the two
+arrays and whose (n, m, group_axis, shape) metadata is static aux data, so
+compressed trees flow through ``jax.jit``, ``lax.scan`` over stacked layer
+blocks, and ``jax.vmap`` without the metadata being traced.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -20,17 +30,43 @@ from repro.core.sparsity_config import SparsityConfig
 from repro.utils.tree import tree_map_with_name
 
 
-class CompressedTensor(NamedTuple):
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)  # array fields: no __eq__
+class CompressedTensor:
+    """An N:M-compressed weight: kept values + uint8 in-group offsets.
+
+    Pytree children: ``(values, indices)``. Static aux: ``(n, m, group_axis,
+    shape)`` — ``shape`` records the dense shape at construction time (for
+    reporting; transformations like ``lax.scan`` that slice the children
+    leave it untouched, so derive live shapes from ``values`` when needed).
+    """
+
     values: jnp.ndarray
     indices: jnp.ndarray  # uint8 in-group offsets
     n: int
     m: int
     group_axis: int
-    shape: tuple  # original dense shape
+    shape: tuple  # dense shape at construction
+
+    def tree_flatten(self):
+        return (self.values, self.indices), (self.n, self.m, self.group_axis, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, indices = children
+        n, m, group_axis, shape = aux
+        return cls(values, indices, n, m, group_axis, shape)
 
     def dense(self) -> jnp.ndarray:
         return nm_decompress(
             self.values, self.indices, self.n, self.m, self.group_axis
+        )
+
+    @property
+    def nbytes(self) -> int:
+        return int(
+            self.values.size * self.values.dtype.itemsize
+            + self.indices.size * self.indices.dtype.itemsize
         )
 
 
@@ -48,7 +84,8 @@ def compress_params(params: Any, cfg: SparsityConfig) -> Any:
 
 
 def decompress_params(params: Any) -> Any:
-    """Rehydrate a compressed tree to dense (reference serving path)."""
+    """Rehydrate a compressed tree to dense (debug / parity-test utility —
+    the serving path never calls this; see ``models.layers.matmul``)."""
     return jax.tree_util.tree_map(
         lambda x: x.dense() if isinstance(x, CompressedTensor) else x,
         params,
@@ -68,7 +105,7 @@ def compression_report(params: Any, compressed: Any) -> dict:
         compressed, is_leaf=lambda x: isinstance(x, CompressedTensor)
     ):
         if isinstance(leaf, CompressedTensor):
-            comp_b += nbytes(leaf.values) + nbytes(leaf.indices)
+            comp_b += leaf.nbytes
         else:
             comp_b += nbytes(leaf)
     return {

@@ -1,9 +1,13 @@
-"""Unit + property tests for the N:M masking math (paper Eq. 8/9 substrate)."""
+"""Unit + property tests for the N:M masking math (paper Eq. 8/9 substrate).
+
+hypothesis is an optional dependency: without it the fixed-case tests still
+run and the property sweeps are skipped.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis, or a skip shim
 
 from repro.core import masking as mk
 
