@@ -1,6 +1,9 @@
 """Benchmark harness entry point: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+The serving suite additionally appends machine-readable records to
+``BENCH_serve.json`` (batch, µs/decode-step, tokens/s, HBM ratios,
+slab-vs-paged concurrency) so the perf trajectory accumulates across runs.
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
 """

@@ -1,16 +1,32 @@
-"""Serving-engine benchmark: dense vs compressed-native decode, batch sweep.
+"""Serving-engine benchmark: dense vs compressed, slab vs paged KV cache.
 
-For each batch size the same request load is served twice through
-``repro.serving.DecodeEngine`` — once on the masked-dense tree, once on the
-N:M-compressed tree (the ``nm_spmm`` dispatch path) — and we report
-µs/decode-step (the ``us_per_call`` column) plus tokens/s and the HBM
-weight-bytes ratio. On CPU the compressed path pays a decompress per
-matmul (the jnp reference); the HBM ratio column is the quantity the TPU
-Pallas kernel converts into decode-step time.
+Two sweeps through ``repro.serving.DecodeEngine``:
+
+1. **dense vs compressed** (slab layout, homogeneous prompts): the same
+   request load served on the masked-dense tree and on the N:M-compressed
+   tree (the ``nm_spmm`` dispatch path), reporting µs/decode-step plus
+   tokens/s and the HBM weight-bytes ratio.  On CPU the compressed path
+   pays a decompress per matmul (the jnp reference); the HBM ratio column
+   is the quantity the TPU Pallas kernel converts into decode-step time.
+
+2. **slab vs paged** (compressed tree, heterogeneous prompt lengths): the
+   slab engine allocates ``max_batch × max_len`` token slots per layer no
+   matter the request mix; the paged engine is given the *same HBM cache
+   budget* (``num_pages × page_size == max_batch × max_len``) but hands
+   pages out block-granularly, so short requests stop reserving worst-case
+   slabs and more requests decode concurrently.  Reported per engine:
+   admitted concurrency, KV-cache bytes, cache token-utilization,
+   preemptions, tokens/s.
+
+Every row is also appended to a machine-readable ``BENCH_serve.json``
+(list of record dicts) so the perf trajectory accumulates across runs.
 
     PYTHONPATH=src python -m benchmarks.run --only serve
 """
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 
@@ -21,14 +37,10 @@ from repro.models.model import TransformerLM
 from repro.serving import DecodeEngine, SamplingParams
 from repro.sparse_infer import compress_params, compression_report
 
+OUT_JSON = "BENCH_serve.json"
 
-def run(
-    arch: str = "gpt2-paper",
-    nm=(2, 4),
-    batches=(1, 2, 4),
-    prompt_len: int = 8,
-    gen: int = 16,
-) -> None:
+
+def _serving_trees(arch: str, nm):
     cfg = get_config(arch, smoke=True)
     model = TransformerLM(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -39,23 +51,147 @@ def run(
     sparse = recipe.export_sparse(params)
     comp = compress_params(sparse, recipe.sparsity)
     ratio = compression_report(sparse, comp)["ratio"]
+    return cfg, model, sparse, comp, ratio
 
+
+def _drain(engine, prompts, gen: int) -> dict:
+    sp = SamplingParams(max_new_tokens=gen)
+    for p in prompts:
+        engine.submit(p, sp)
+    engine.run()
+    return engine.stats()
+
+
+def _hetero_prompts(cfg, n_requests: int, max_prompt: int) -> list[list[int]]:
+    """Short-heavy heterogeneous mix: the regime where slabs waste HBM."""
+    out = []
+    for r in range(n_requests):
+        plen = 4 + (r * 7) % max(1, max_prompt - 4)  # 4 .. max_prompt-1
+        toks = jax.random.randint(
+            jax.random.PRNGKey(500 + r), (plen,), 0, cfg.vocab
+        )
+        out.append([int(t) for t in toks])
+    return out
+
+
+def run(
+    arch: str = "gpt2-paper",
+    nm=(2, 4),
+    batches=(1, 2, 4),
+    prompt_len: int = 8,
+    gen: int = 16,
+    out_json: str = OUT_JSON,
+) -> list[dict]:
+    cfg, model, sparse, comp, ratio = _serving_trees(arch, nm)
+    n, m = nm
+    records: list[dict] = []
+
+    # -- sweep 1: dense vs compressed (slab), homogeneous batch ----------------
     for batch in batches:
         for mode, tree in (("dense", sparse), ("compressed", comp)):
             engine = DecodeEngine(
                 model, tree, max_batch=batch, max_len=prompt_len + gen + 1
             )
-            sp = SamplingParams(max_new_tokens=gen)
-            for r in range(2 * batch):  # 2x oversubscribed: slot reuse on
-                prompt = jax.random.randint(
-                    jax.random.PRNGKey(100 + r), (prompt_len,), 0, cfg.vocab
-                )
-                engine.submit([int(t) for t in prompt], sp)
-            engine.run()
-            st = engine.stats()
+            prompts = [
+                [
+                    int(t)
+                    for t in jax.random.randint(
+                        jax.random.PRNGKey(100 + r), (prompt_len,), 0, cfg.vocab
+                    )
+                ]
+                for r in range(2 * batch)  # 2x oversubscribed: slot reuse on
+            ]
+            st = _drain(engine, prompts, gen)
             emit(
                 f"serve/{arch}/{n}:{m}/{mode}/b{batch}",
                 st["ms_per_decode_step"] * 1e3,
                 f"tok/s={st['tokens_per_s']:.1f} "
                 f"steps={st['decode_steps']} hbm_ratio={ratio:.3f}",
             )
+            records.append(
+                {
+                    "suite": "serve",
+                    "sweep": "dense_vs_compressed",
+                    "arch": arch,
+                    "nm": f"{n}:{m}",
+                    "mode": mode,
+                    "layout": "slab",
+                    "batch": batch,
+                    "us_per_decode_step": st["ms_per_decode_step"] * 1e3,
+                    "tokens_per_s": st["tokens_per_s"],
+                    "decode_steps": st["decode_steps"],
+                    "hbm_weight_ratio": ratio,
+                    "kv_cache_bytes": st["kv_cache_bytes"],
+                }
+            )
+
+    # -- sweep 2: slab vs paged at equal HBM cache budget ----------------------
+    slab_batch, page_size = 2, 8
+    max_len = prompt_len + gen + 9  # headroom for the longest hetero prompt
+    budget_tokens = slab_batch * max_len
+    num_pages = budget_tokens // page_size
+    prompts = _hetero_prompts(cfg, 6 * slab_batch, max_prompt=prompt_len + 8)
+    for layout, kwargs in (
+        ("slab", {"max_batch": slab_batch}),
+        (
+            "paged",
+            {
+                "max_batch": 4 * slab_batch,
+                "num_pages": num_pages,
+                "page_size": page_size,
+            },
+        ),
+    ):
+        engine = DecodeEngine(model, comp, max_len=max_len, **kwargs)
+        st = _drain(engine, prompts, gen)
+        util = st["hbm_cache_utilization"]
+        emit(
+            f"serve/{arch}/{n}:{m}/paged_sweep/{layout}",
+            st["ms_per_decode_step"] * 1e3,
+            f"tok/s={st['tokens_per_s']:.1f} "
+            f"concurrency={st['max_concurrency']} util={util:.2f} "
+            f"kv_bytes={st['kv_cache_bytes']} preempt={st['preemptions']}",
+        )
+        records.append(
+            {
+                "suite": "serve",
+                "sweep": "slab_vs_paged",
+                "arch": arch,
+                "nm": f"{n}:{m}",
+                "mode": "compressed",
+                "layout": layout,
+                "batch": kwargs["max_batch"],
+                "budget_tokens": budget_tokens,
+                "us_per_decode_step": st["ms_per_decode_step"] * 1e3,
+                "tokens_per_s": st["tokens_per_s"],
+                "decode_steps": st["decode_steps"],
+                "max_concurrency": st["max_concurrency"],
+                "preemptions": st["preemptions"],
+                "hbm_weight_ratio": ratio,
+                "kv_cache_bytes": st["kv_cache_bytes"],
+                "hbm_cache_utilization": util,
+            }
+        )
+
+    paged_rec = next(r for r in records if r.get("layout") == "paged")
+    slab_rec = next(
+        r for r in records if r.get("sweep") == "slab_vs_paged"
+        and r["layout"] == "slab"
+    )
+    emit(
+        f"serve/{arch}/{n}:{m}/paged_sweep/concurrency_gain",
+        0.0,
+        f"paged={paged_rec['max_concurrency']} slab={slab_rec['max_concurrency']}",
+    )
+
+    if out_json:
+        existing: list[dict] = []
+        if os.path.exists(out_json):
+            try:
+                with open(out_json) as f:
+                    existing = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                existing = []
+        with open(out_json, "w") as f:
+            json.dump(existing + records, f, indent=1)
+    return records

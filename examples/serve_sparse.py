@@ -8,7 +8,9 @@ weight compression, and a continuous-batching decode loop that consumes the
 ``CompressedTensor`` tree directly — every weight read goes through the
 ``nm_spmm`` compressed-matmul path (the HBM-bandwidth win on TPU), with no
 dense rehydration. Submits more requests than decode lanes so slot reuse
-(continuous batching) is exercised.
+(continuous batching) is exercised, and serves from the paged KV-cache
+pool (`--paged --page-size/--num-pages`) with bucketed batched prefill —
+drop the flags for the contiguous-slab baseline.
 """
 import sys
 
@@ -17,5 +19,7 @@ from repro.launch.serve import main
 if __name__ == "__main__":
     main(
         sys.argv[1:]
-        or ["--arch", "gpt2-paper", "--batch", "2", "--requests", "5", "--gen", "12"]
+        or ["--arch", "gpt2-paper", "--batch", "2", "--requests", "5",
+            "--gen", "12", "--paged", "--page-size", "8",
+            "--prefill-buckets", "8,16,32"]
     )

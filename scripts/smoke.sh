@@ -23,4 +23,9 @@ echo "== serve smoke (dense A/B) =="
 python -m repro.launch.serve --arch gpt2-paper --batch 2 --requests 2 \
     --prompt-len 8 --gen 4 --dense
 
+echo "== serve smoke (paged KV pool, undersized: exercises preemption) =="
+python -m repro.launch.serve --arch gpt2-paper --batch 2 --requests 4 \
+    --prompt-len 6 --gen 10 --paged --page-size 2 --num-pages 10 \
+    --prefill-buckets 8,16
+
 echo "smoke OK"

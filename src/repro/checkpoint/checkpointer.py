@@ -184,6 +184,23 @@ class Checkpointer:
             raise FileNotFoundError(f"no valid checkpoint under {self.root}")
         return load_pytree(self._step_dir(step), like, shardings)
 
+    def restore_latest(
+        self, skeleton: Any, shardings: Any = None
+    ) -> Optional[tuple[Any, dict, int]]:
+        """Load the newest verified checkpoint into ``skeleton``'s structure.
+
+        Returns ``(tree, meta, step)``, or ``None`` when the directory holds
+        no valid checkpoint — the caller keeps its freshly initialized state.
+        ``skeleton`` may be a *subtree* of what was saved (leaves are matched
+        by name), e.g. ``{"params": params}`` reads just the parameters out
+        of a full-TrainState checkpoint.
+        """
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, meta = load_pytree(self._step_dir(step), skeleton, shardings)
+        return tree, meta, step
+
     def _gc(self) -> None:
         steps = self.steps()
         keep = set(steps[-self.keep_last :])

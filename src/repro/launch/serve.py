@@ -1,7 +1,8 @@
 """Serving launcher: compressed-native continuous-batching decode.
 
     python -m repro.launch.serve --arch gpt2-paper --batch 4 --prompt-len 16 \
-        --gen 32 [--ckpt-dir /tmp/run1] [--dense] [--temperature 0.8 --top-k 40]
+        --gen 32 [--ckpt-dir /tmp/run1] [--dense] [--temperature 0.8 --top-k 40] \
+        [--paged --page-size 16 --num-pages 64] [--prefill-buckets 16,32,64]
 
 Loads (or initializes) params, applies the final Π_T mask (Algorithm 1,
 line 23-24), exports the N:M-compressed artifact, and hands the *compressed
@@ -9,7 +10,11 @@ tree itself* to ``repro.serving.DecodeEngine`` — prefill and every decode
 step run directly on ``CompressedTensor`` leaves via the ``nm_spmm`` kernel
 path (Pallas on TPU); the dense weights are never rehydrated in HBM.
 ``--dense`` serves the masked-dense tree instead, as an A/B baseline for
-the same engine.
+the same engine.  ``--paged`` switches the KV cache from the per-lane slab
+to the block-granular paged pool (``--page-size``/``--num-pages``; an
+undersized pool preempts-and-requeues instead of truncating), and
+``--prefill-buckets`` overrides the static prompt-pad lengths used by
+bucketed batched prefill.
 """
 from __future__ import annotations
 
@@ -38,12 +43,9 @@ def build_serving_state(args) -> tuple:
         # train.py checkpoints store the whole TrainState; NamedTuple fields
         # flatten by field name, so a {"params": ...} skeleton reads just the
         # parameter subtree out of the full-state npz.
-        ck = Checkpointer(args.ckpt_dir)
-        step = ck.latest_step()
-        if step is not None:
-            from repro.checkpoint.checkpointer import load_pytree
-
-            tree, _ = load_pytree(ck._step_dir(step), {"params": params})
+        restored = Checkpointer(args.ckpt_dir).restore_latest({"params": params})
+        if restored is not None:
+            tree, _, step = restored
             params = tree["params"]
             print(f"# restored params from step {step}")
 
@@ -74,18 +76,40 @@ def main(argv=None) -> dict:
     ap.add_argument("--dense", action="store_true",
                     help="serve the masked-dense tree (A/B baseline)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV-cache pool instead of the per-lane slab")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="total pages in the pool (default: slab-equivalent "
+                         "batch*ceil(max_len/page_size))")
+    ap.add_argument("--prefill-buckets", default=None,
+                    help="comma-separated static prompt-pad lengths for "
+                         "bucketed batched prefill (default: powers of two)")
     args = ap.parse_args(argv)
 
     model, serving_tree, rep = build_serving_state(args)
     cfg = model.cfg
     print(json.dumps({"compression": rep}))
 
+    max_len = args.prompt_len + args.gen + 1
+    num_pages = args.num_pages
+    if args.paged and num_pages is None:
+        num_pages = args.batch * (-(-max_len // args.page_size))
+    buckets = (
+        [int(b) for b in args.prefill_buckets.split(",")]
+        if args.prefill_buckets
+        else None
+    )
     engine = DecodeEngine(
         model,
         serving_tree,
         max_batch=args.batch,
-        max_len=args.prompt_len + args.gen + 1,
+        max_len=max_len,
         seed=0,
+        num_pages=num_pages if args.paged else None,
+        page_size=args.page_size,
+        prefill_buckets=buckets,
     )
     n_requests = args.batch if args.requests is None else args.requests
     sampling = SamplingParams(
@@ -102,11 +126,16 @@ def main(argv=None) -> dict:
     summary = {
         "arch": cfg.name,
         "compressed": not args.dense,
+        "layout": st["layout"],
         "n_requests": len(results),
         "generated_tokens": st["tokens_generated"],
         "tokens_per_s": st["tokens_per_s"],
         "ms_per_decode_step": st["ms_per_decode_step"],
         "decode_steps": st["decode_steps"],
+        "prefill_batches": st["prefill_batches"],
+        "max_concurrency": st["max_concurrency"],
+        "preemptions": st["preemptions"],
+        "kv_cache_bytes": st["kv_cache_bytes"],
         "hbm_weight_ratio": round(rep["ratio"], 3),
     }
     print(json.dumps({"summary": summary}))

@@ -2,8 +2,8 @@
 # (configs.base needs the sub-config dataclasses from leaf modules;
 #  models.model needs ArchConfig from configs.base).
 _EXPORTS = ("TransformerLM", "init_params", "model_flops_per_token", "forward",
-            "loss_fn", "decode_step", "prefill", "init_cache", "param_count",
-            "active_param_count", "layer_plan", "frontend_dim")
+            "loss_fn", "decode_step", "prefill", "init_cache", "write_prefill",
+            "param_count", "active_param_count", "layer_plan", "frontend_dim")
 
 
 def __getattr__(name):

@@ -1,0 +1,346 @@
+"""Cache layouts: the seam between decode math and KV-cache storage.
+
+The model's decode/prefill math is layout-agnostic: every read or write of
+an attention (or MLA-latent) cache entry goes through one of the two
+``CacheLayout`` implementations below, so the same ``decode_step`` serves
+
+- :class:`SlabLayout` — the contiguous ``(B, max_len, ...)`` per-lane slab
+  the training/tests path has always used, and
+- :class:`PagedLayout` — a block-granular pool: each layer owns a
+  ``(num_pages, page_size, ...)`` array, and per-request *page tables*
+  (``(B, pages)`` int32, device-resident, updated host-side by
+  ``repro.serving.kv_pool.PagedKVPool``) map logical token positions to
+  physical pages.  Reads gather the logical view through the table; writes
+  scatter one token into its page.  Unmapped table slots hold the sentinel
+  ``num_pages`` — out of bounds, so scatters drop and gathers clip to
+  garbage that the attention length-mask zeroes exactly.
+
+Logical addressing is **append-only** in both layouts, which is what makes
+paged decode bit-identical to slab decode: the gathered paged view lists
+entries in the same oldest-to-newest order the slab stores them, and the
+extra masked positions contribute exact zeros to the softmax.
+
+Sliding-window layers use a *modular* page table of
+``ceil(window/page_size) + 1`` slots: position ``p`` lives in table slot
+``(p // page_size) % n_slots``, so as the window slides past a page
+boundary the expired page's slot is reclaimed and the page itself is
+returned to the free list (whole-page eviction).  The gathered view is
+rebuilt in logical order from the lane's rolling window, matching the
+slab's per-lane ``jnp.roll`` content element for element.
+
+SSM / RG-LRU states are O(1) per lane and are *not* paged — they stay
+``(B, ...)`` slot-indexed under both layouts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlabLayout:
+    """Contiguous ``(B, max_len, ...)`` per-lane cache (training/tests)."""
+
+    max_len: int = 0  # only needed for allocation, not for read/write
+
+    kind = "slab"
+
+    # -- allocation ---------------------------------------------------------
+
+    def attn_alloc(self, batch: int, window: Optional[int], n_kv: int,
+                   hd: int, dtype) -> dict:
+        s = self.max_len if window is None else min(self.max_len, window)
+        shp = (batch, s, n_kv, hd)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+    def mla_alloc(self, batch: int, kv_lora: int, rope_dim: int, dtype) -> dict:
+        return {
+            "ckv": jnp.zeros((batch, self.max_len, kv_lora), dtype),
+            "krope": jnp.zeros((batch, self.max_len, rope_dim), dtype),
+        }
+
+    def tables(self, batch: int) -> Optional[dict]:
+        return None
+
+    # -- decode-step read/write --------------------------------------------
+
+    def attn_rw(self, c: dict, k_new, v_new, pos, tables, window):
+        """Write one token at ``pos`` per lane; return the logical view.
+
+        ``k_new``/``v_new``: (B, n_kv, hd).  Returns
+        ``(k_view, v_view, new_entry)`` where the views are ``(B, S, ...)``
+        in oldest-to-newest logical order.
+        """
+        b = k_new.shape[0]
+        s_cache = c["k"].shape[1]
+        if window is not None and window <= s_cache:
+            # ring-free rolling window, gated per lane: continuous batching
+            # gives every lane its own position
+            full = pos >= s_cache  # (B,)
+            kc = jnp.where(
+                full[:, None, None, None], jnp.roll(c["k"], -1, axis=1), c["k"]
+            )
+            vc = jnp.where(
+                full[:, None, None, None], jnp.roll(c["v"], -1, axis=1), c["v"]
+            )
+            slot = jnp.minimum(pos, s_cache - 1)
+        else:
+            kc, vc = c["k"], c["v"]
+            slot = pos
+        bidx = jnp.arange(b)
+        kc = kc.at[bidx, slot].set(k_new)
+        vc = vc.at[bidx, slot].set(v_new)
+        return kc, vc, {"k": kc, "v": vc}
+
+    def mla_rw(self, c: dict, ckv_new, krope_new, pos, tables):
+        b = ckv_new.shape[0]
+        bidx = jnp.arange(b)
+        ckv = c["ckv"].at[bidx, pos].set(ckv_new)
+        krope = c["krope"].at[bidx, pos].set(krope_new)
+        return ckv, krope, {"ckv": ckv, "krope": krope}
+
+    # -- batched prefill writes --------------------------------------------
+
+    def attn_write_rows(self, c: dict, k_rows, v_rows, lanes, lens,
+                        tables, window):
+        """Write freshly prefilled rows into lanes (sentinel lanes drop).
+
+        ``k_rows``: (N, Lp, n_kv, hd) — the full (possibly padded) prompt K;
+        row ``r`` holds valid entries at positions ``< lens[r]``.
+        """
+        s = c["k"].shape[1]
+        lp = k_rows.shape[1]
+        if s < lp:
+            # windowed slab shorter than the padded prompt: keep each row's
+            # last min(len, s) entries, oldest first (the slab's rolled order)
+            j = jnp.arange(s)[None, :]
+            start = jnp.maximum(0, lens - s)[:, None]
+            idx = jnp.clip(start + j, 0, lp - 1)
+            k_rows = jnp.take_along_axis(k_rows, idx[..., None, None], axis=1)
+            v_rows = jnp.take_along_axis(v_rows, idx[..., None, None], axis=1)
+        elif s > lp:
+            pad = ((0, 0), (0, s - lp), (0, 0), (0, 0))
+            k_rows = jnp.pad(k_rows, pad)
+            v_rows = jnp.pad(v_rows, pad)
+        return {
+            "k": c["k"].at[lanes].set(k_rows.astype(c["k"].dtype), mode="drop"),
+            "v": c["v"].at[lanes].set(v_rows.astype(c["v"].dtype), mode="drop"),
+        }
+
+    def mla_write_rows(self, c: dict, ckv_rows, krope_rows, lanes, lens, tables):
+        s = c["ckv"].shape[1]
+        lp = ckv_rows.shape[1]
+        if lp < s:
+            ckv_rows = jnp.pad(ckv_rows, ((0, 0), (0, s - lp), (0, 0)))
+            krope_rows = jnp.pad(krope_rows, ((0, 0), (0, s - lp), (0, 0)))
+        return {
+            "ckv": c["ckv"].at[lanes].set(
+                ckv_rows.astype(c["ckv"].dtype), mode="drop"
+            ),
+            "krope": c["krope"].at[lanes].set(
+                krope_rows.astype(c["krope"].dtype), mode="drop"
+            ),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Block-granular paged cache behind per-request page tables.
+
+    ``max_len`` is the *logical* per-request capacity (the full-attention
+    page-table width is ``ceil(max_len / page_size)``); physical capacity
+    is ``num_pages`` pages shared by all lanes — one page id is backed in
+    every paged layer's pool, so "allocating a page" reserves a token block
+    across the whole model at once.
+    """
+
+    page_size: int
+    num_pages: int
+    max_len: int
+    win: int = 0  # min(max_len, local_window) when the arch has windowed attn
+    has_full: bool = True  # any non-windowed attn / MLA layer present
+
+    kind = "paged"
+
+    @property
+    def pages_full(self) -> int:
+        return cdiv(self.max_len, self.page_size) if self.has_full else 0
+
+    @property
+    def pages_win(self) -> int:
+        return (cdiv(self.win, self.page_size) + 1) if self.win else 0
+
+    @property
+    def sentinel(self) -> int:
+        return self.num_pages  # out of bounds: scatters drop, gathers clip
+
+    # -- allocation ---------------------------------------------------------
+
+    def attn_alloc(self, batch: int, window: Optional[int], n_kv: int,
+                   hd: int, dtype) -> dict:
+        shp = (self.num_pages, self.page_size, n_kv, hd)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+    def mla_alloc(self, batch: int, kv_lora: int, rope_dim: int, dtype) -> dict:
+        shp = (self.num_pages, self.page_size)
+        return {
+            "ckv": jnp.zeros(shp + (kv_lora,), dtype),
+            "krope": jnp.zeros(shp + (rope_dim,), dtype),
+        }
+
+    def tables(self, batch: int) -> Optional[dict]:
+        t = {}
+        if self.pages_full:
+            t["full"] = jnp.full((batch, self.pages_full), self.sentinel, jnp.int32)
+        if self.pages_win:
+            t["win"] = jnp.full((batch, self.pages_win), self.sentinel, jnp.int32)
+        return t or None
+
+    def _windowed(self, window: Optional[int]) -> bool:
+        return window is not None and window <= self.max_len
+
+    def _view_index(self, pos, window):
+        """(abs positions (B, S_view), table-slot indices (B, S_view), table key)."""
+        ps = self.page_size
+        if self._windowed(window):
+            s_view = min(self.max_len, window)
+            start = jnp.maximum(0, pos - s_view + 1)  # (B,)
+            a = start[:, None] + jnp.arange(s_view)[None, :]
+            return a, (a // ps) % self.pages_win, "win"
+        s_view = self.pages_full * ps
+        a = jnp.broadcast_to(jnp.arange(s_view)[None, :], (pos.shape[0], s_view))
+        return a, a // ps, "full"
+
+    def _write_slot(self, pt, pos, window):
+        """Flat pool index of each lane's write at ``pos`` (sentinel drops)."""
+        ps = self.page_size
+        page = pos // ps
+        if self._windowed(window):
+            page = page % self.pages_win
+        bidx = jnp.arange(pos.shape[0])
+        phys = pt[bidx, page]  # (B,) — sentinel when unmapped (idle lane)
+        return phys * ps + pos % ps
+
+    def _gather(self, flat, pt, a, tslot):
+        phys = jnp.take_along_axis(pt, tslot, axis=1)  # (B, S_view)
+        idx = phys * self.page_size + a % self.page_size
+        return jnp.take(flat, idx, axis=0, mode="clip")
+
+    # -- decode-step read/write --------------------------------------------
+
+    def attn_rw(self, c: dict, k_new, v_new, pos, tables, window):
+        a, tslot, key = self._view_index(pos, window)
+        pt = tables[key]
+        kf = c["k"].reshape((-1,) + c["k"].shape[2:])
+        vf = c["v"].reshape((-1,) + c["v"].shape[2:])
+        widx = self._write_slot(pt, pos, window)
+        kf = kf.at[widx].set(k_new, mode="drop")
+        vf = vf.at[widx].set(v_new, mode="drop")
+        k_view = self._gather(kf, pt, a, tslot)
+        v_view = self._gather(vf, pt, a, tslot)
+        return k_view, v_view, {
+            "k": kf.reshape(c["k"].shape),
+            "v": vf.reshape(c["v"].shape),
+        }
+
+    def mla_rw(self, c: dict, ckv_new, krope_new, pos, tables):
+        a, tslot, key = self._view_index(pos, None)
+        pt = tables[key]
+        cf = c["ckv"].reshape((-1,) + c["ckv"].shape[2:])
+        rf = c["krope"].reshape((-1,) + c["krope"].shape[2:])
+        widx = self._write_slot(pt, pos, None)
+        cf = cf.at[widx].set(ckv_new, mode="drop")
+        rf = rf.at[widx].set(krope_new, mode="drop")
+        ckv_view = self._gather(cf, pt, a, tslot)
+        krope_view = self._gather(rf, pt, a, tslot)
+        return ckv_view, krope_view, {
+            "ckv": cf.reshape(c["ckv"].shape),
+            "krope": rf.reshape(c["krope"].shape),
+        }
+
+    # -- batched prefill writes --------------------------------------------
+
+    def _row_write_idx(self, lanes, lens, lp, tables, window):
+        """Flat pool indices (N, Lp) for prompt rows (invalid → sentinel)."""
+        ps = self.page_size
+        a = jnp.broadcast_to(jnp.arange(lp)[None, :], (lens.shape[0], lp))
+        valid = a < lens[:, None]
+        if self._windowed(window):
+            s_view = min(self.max_len, window)
+            valid = valid & (a >= jnp.maximum(0, lens - s_view)[:, None])
+            tslot = (a // ps) % self.pages_win
+            pt = tables["win"]
+        else:
+            tslot = a // ps
+            pt = tables["full"]
+        rows_pt = jnp.take(pt, lanes, axis=0, mode="clip")  # (N, table_w)
+        phys = jnp.take_along_axis(rows_pt, tslot, axis=1)  # (N, Lp)
+        # padding rows carry a sentinel lane: their table row gathers as
+        # clip-garbage, but valid is all-False there (lens == 0)
+        valid = valid & (lanes < pt.shape[0])[:, None]
+        return jnp.where(valid, phys * ps + a % ps, self.num_pages * ps)
+
+    def attn_write_rows(self, c: dict, k_rows, v_rows, lanes, lens,
+                        tables, window):
+        lp = k_rows.shape[1]
+        widx = self._row_write_idx(lanes, lens, lp, tables, window).reshape(-1)
+        kf = c["k"].reshape((-1,) + c["k"].shape[2:])
+        vf = c["v"].reshape((-1,) + c["v"].shape[2:])
+        kf = kf.at[widx].set(
+            k_rows.astype(c["k"].dtype).reshape((-1,) + k_rows.shape[2:]),
+            mode="drop",
+        )
+        vf = vf.at[widx].set(
+            v_rows.astype(c["v"].dtype).reshape((-1,) + v_rows.shape[2:]),
+            mode="drop",
+        )
+        return {"k": kf.reshape(c["k"].shape), "v": vf.reshape(c["v"].shape)}
+
+    def mla_write_rows(self, c: dict, ckv_rows, krope_rows, lanes, lens, tables):
+        lp = ckv_rows.shape[1]
+        widx = self._row_write_idx(lanes, lens, lp, tables, None).reshape(-1)
+        cf = c["ckv"].reshape((-1,) + c["ckv"].shape[2:])
+        rf = c["krope"].reshape((-1,) + c["krope"].shape[2:])
+        cf = cf.at[widx].set(
+            ckv_rows.astype(c["ckv"].dtype).reshape((-1,) + ckv_rows.shape[2:]),
+            mode="drop",
+        )
+        rf = rf.at[widx].set(
+            krope_rows.astype(c["krope"].dtype).reshape((-1,) + krope_rows.shape[2:]),
+            mode="drop",
+        )
+        return {"ckv": cf.reshape(c["ckv"].shape), "krope": rf.reshape(c["krope"].shape)}
+
+
+CacheLayout = (SlabLayout, PagedLayout)  # for isinstance checks
+
+
+def paged_layout_for(cfg, max_len: int, *, page_size: int, num_pages: int) -> PagedLayout:
+    """Derive the PagedLayout an arch needs at a given logical capacity.
+
+    A layer is *windowed* iff ``local_window <= max_len`` — the same
+    condition under which the slab rolls — otherwise its window never
+    slides within the logical capacity and it pages like full attention.
+    """
+    from repro.models.model import _block_mixer_mlp, layer_plan
+
+    plan = layer_plan(cfg)
+    kinds = list(plan.head) + list(plan.period) * plan.n_body + list(plan.tail)
+    mixers = {_block_mixer_mlp(k, cfg)[0] for k in kinds}
+    windowed = (
+        "attn" in mixers
+        and cfg.local_window is not None
+        and cfg.local_window <= max_len
+    )
+    has_full = "mla" in mixers or ("attn" in mixers and not windowed)
+    win = min(max_len, cfg.local_window) if windowed else 0
+    return PagedLayout(
+        page_size=page_size, num_pages=num_pages, max_len=max_len,
+        win=win, has_full=has_full,
+    )

@@ -16,6 +16,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.models.cache import SlabLayout
 from repro.models.layers import apply_rope, chunked_attention, decode_attention, matmul
 
 
@@ -99,38 +100,44 @@ def mla_decode(
     p: dict,
     n_heads: int,
     cfg: MLAConfig,
-    cache_ckv: jnp.ndarray,  # (B, S_max, kv_lora)
-    cache_krope: jnp.ndarray,  # (B, S_max, rd)
+    cache: dict,  # {"ckv", "krope"} — slab (B,S,..) or paged (P,ps,..)
     cache_len,  # (B,) int32
     rope_theta: float = 10000.0,
-) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    layout=None,
+    tables=None,
+) -> tuple[jnp.ndarray, dict]:
     """One decode step; re-expands K/V from the latent cache.
 
-    Returns (out, new_cache_ckv, new_cache_krope). The caller advances
-    cache_len."""
+    The cache entry is read and written through ``layout``
+    (``models.cache.SlabLayout`` by default, or a ``PagedLayout`` whose
+    page ``tables`` map logical positions to pool pages).  Returns
+    (out, new_cache_entry); the caller advances cache_len.
+    """
+    if layout is None:
+        layout = SlabLayout()
     b = x.shape[0]
     nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
-    pos = jnp.reshape(jnp.asarray(cache_len), (-1, 1))  # (B,1)
+    pos = jnp.reshape(jnp.asarray(cache_len), (-1,))  # (B,)
     q, c_kv_new, k_rope_new = _project_qkv(x, p, n_heads, cfg)
     q_nope, q_rope = q[..., :nd], q[..., nd:]
-    q_rope = apply_rope(q_rope, pos, rope_theta)
-    k_rope_new = apply_rope(k_rope_new[:, :, None, :], pos, rope_theta)[:, :, 0, :]
+    q_rope = apply_rope(q_rope, pos[:, None], rope_theta)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], pos[:, None], rope_theta)[
+        :, :, 0, :
+    ]
 
-    # write the new latent into the cache at position cache_len
-    bidx = jnp.arange(b)
-    cache_ckv = cache_ckv.at[bidx, jnp.reshape(cache_len, (-1,))].set(c_kv_new[:, 0])
-    cache_krope = cache_krope.at[bidx, jnp.reshape(cache_len, (-1,))].set(
-        k_rope_new[:, 0]
+    # write the new latent at position cache_len; read back the logical view
+    ckv_view, krope_view, new_cache = layout.mla_rw(
+        cache, c_kv_new[:, 0], k_rope_new[:, 0], pos, tables
     )
 
-    # expand the whole latent cache to per-head K/V (bandwidth → compute)
-    k_nope, v = _expand_kv(cache_ckv, p, n_heads, cfg)  # (B,S,H,nd/vd)
-    s = cache_ckv.shape[1]
+    # expand the whole latent view to per-head K/V (bandwidth → compute)
+    k_nope, v = _expand_kv(ckv_view, p, n_heads, cfg)  # (B,S,H,nd/vd)
+    s = ckv_view.shape[1]
     kf = jnp.concatenate(
-        [k_nope, jnp.broadcast_to(cache_krope[:, :, None, :], (b, s, n_heads, rd))],
+        [k_nope, jnp.broadcast_to(krope_view[:, :, None, :], (b, s, n_heads, rd))],
         axis=-1,
     )
     qf = jnp.concatenate([q_nope, q_rope], axis=-1)
-    out = decode_attention(qf, kf, v_pad(v, nd + rd), jnp.reshape(cache_len, (-1,)) + 1)
+    out = decode_attention(qf, kf, v_pad(v, nd + rd), pos + 1)
     out = out[..., :vd].reshape(b, 1, n_heads * vd)
-    return matmul(out, p["w_o"]), cache_ckv, cache_krope
+    return matmul(out, p["w_o"]), new_cache

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.models import cache as C
 from repro.models import layers as L
 from repro.models import mla as MLA
 from repro.models import moe as MOE
@@ -412,24 +413,31 @@ def loss_fn(
 # ---------------------------------------------------------------------------
 
 
-def init_cache(cfg: ArchConfig, batch_size: int, max_len: int, dtype=None) -> dict:
-    """Allocate the decode cache for every layer."""
+def init_cache(
+    cfg: ArchConfig, batch_size: int, max_len: int, dtype=None, layout=None
+) -> dict:
+    """Allocate the decode cache for every layer.
+
+    ``layout`` (default :class:`models.cache.SlabLayout`) owns the storage
+    geometry of attention / MLA entries — contiguous per-lane slabs or a
+    paged ``(num_pages, page_size, ...)`` pool with page tables.  SSM and
+    RG-LRU states are O(1) per lane and stay slot-indexed either way.
+    """
     dtype = dtype or jnp.dtype(cfg.param_dtype)
+    if layout is None:
+        layout = C.SlabLayout(max_len)
     plan = layer_plan(cfg)
 
     def one(kind: str) -> Any:
         mixer, _ = _block_mixer_mlp(kind, cfg)
         if mixer == "attn":
-            s = max_len if cfg.local_window is None else min(max_len, cfg.local_window)
-            shp = (batch_size, s, cfg.n_kv, cfg.hd)
-            return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+            return layout.attn_alloc(
+                batch_size, cfg.local_window, cfg.n_kv, cfg.hd, dtype
+            )
         if mixer == "mla":
-            return {
-                "ckv": jnp.zeros((batch_size, max_len, cfg.mla.kv_lora), dtype),
-                "krope": jnp.zeros(
-                    (batch_size, max_len, cfg.mla.rope_head_dim), dtype
-                ),
-            }
+            return layout.mla_alloc(
+                batch_size, cfg.mla.kv_lora, cfg.mla.rope_head_dim, dtype
+            )
         if mixer == "ssm":
             dims = SSM.ssm_dims(cfg.d_model, cfg.ssm)
             conv_dim = dims["d_inner"] + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
@@ -462,28 +470,83 @@ def init_cache(cfg: ArchConfig, batch_size: int, max_len: int, dtype=None) -> di
         )
     for i, kind in enumerate(plan.tail):
         cache[f"tail_{i}"] = one(kind)
+    tables = layout.tables(batch_size)
+    if tables is not None:
+        cache["tables"] = tables
     return cache
 
 
-def write_cache_slot(pool: dict, single: dict, slot) -> dict:
-    """Write a batch-1 cache ``single`` into lane ``slot`` of a pooled cache.
+def write_prefill(
+    cache: dict, cfg: ArchConfig, produced: dict, lanes, lens, layout=None
+) -> dict:
+    """Write a batch of freshly prefilled rows into the serving cache pool.
 
-    Owns the pool's axis layout so callers (the serving engine) don't have
-    to: top-level leaves are ``(B, ...)``; the scanned ``"body"`` stack is
-    ``(L, B, ...)`` — its batch axis sits behind the layer axis.
+    ``produced`` is the per-layer cache tuple tree from
+    ``forward(want_cache=True)`` over the (possibly padded) prompt batch;
+    row ``r`` is valid up to ``lens[r]`` tokens and lands in lane
+    ``lanes[r]`` (a lane index ≥ the pool's batch size marks a padding row
+    and is dropped).  The layout owns the attention/MLA storage geometry;
+    SSM / RG-LRU states scatter into their lanes directly, so recurrent
+    rows must be *exact length* (``lens[r] == prompt length``) — the
+    engine pads only attention-family archs.
     """
-    out = dict(pool)
-    for k in pool:
-        axis_write = (
-            (lambda pl, one: pl.at[:, slot].set(one[:, 0]))
-            if k == "body"
-            else (lambda pl, one: pl.at[slot].set(one[0]))
-        )
-        out[k] = jax.tree_util.tree_map(axis_write, pool[k], single[k])
+    if layout is None:
+        layout = C.SlabLayout()
+    plan = layer_plan(cfg)
+    tables = cache.get("tables")
+
+    def wr(kind: str, c, pr):
+        mixer, _ = _block_mixer_mlp(kind, cfg)
+        if mixer == "attn":
+            k, v = pr
+            return layout.attn_write_rows(
+                c, k, v, lanes, lens, tables, cfg.local_window
+            )
+        if mixer == "mla":
+            ckv, krope = pr
+            return layout.mla_write_rows(c, ckv, krope, lanes, lens, tables)
+        if mixer == "ssm":
+            st, tail = pr
+            # short prompts: left-pad the conv tail with zeros
+            w1 = c["conv"].shape[1]
+            tail = tail.astype(c["conv"].dtype)
+            if tail.shape[1] < w1:
+                pad = jnp.zeros(
+                    (tail.shape[0], w1 - tail.shape[1], tail.shape[2]), tail.dtype
+                )
+                tail = jnp.concatenate([pad, tail], axis=1)
+            return {
+                "state": c["state"].at[lanes].set(st, mode="drop"),
+                "conv": c["conv"].at[lanes].set(tail, mode="drop"),
+            }
+        if mixer == "rec":
+            st, cv = pr
+            return {
+                "state": c["state"].at[lanes].set(st, mode="drop"),
+                "conv": c["conv"].at[lanes].set(
+                    cv.astype(c["conv"].dtype), mode="drop"
+                ),
+            }
+        raise AssertionError(mixer)
+
+    out = dict(cache)
+    out["len"] = cache["len"].at[lanes].set(lens, mode="drop")
+    for i, kind in enumerate(plan.head):
+        out[f"head_{i}"] = wr(kind, cache[f"head_{i}"], produced[f"head_{i}"])
+    if plan.n_body:
+        def wr_sb(c_sb, pr_sb):
+            return {
+                f"sb_{j}": wr(kind, c_sb[f"sb_{j}"], pr_sb[f"sb_{j}"])
+                for j, kind in enumerate(plan.period)
+            }
+
+        out["body"] = jax.vmap(wr_sb)(cache["body"], produced["body"])
+    for i, kind in enumerate(plan.tail):
+        out[f"tail_{i}"] = wr(kind, cache[f"tail_{i}"], produced[f"tail_{i}"])
     return out
 
 
-def _attn_decode(x, p, cfg: ArchConfig, c: dict, pos):
+def _attn_decode(x, p, cfg: ArchConfig, c: dict, pos, layout, tables):
     """x: (B,1,d). pos: (B,) positions of the new token."""
     b = x.shape[0]
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
@@ -504,38 +567,29 @@ def _attn_decode(x, p, cfg: ArchConfig, c: dict, pos):
         q = L.apply_mrope(q, p3, theta=cfg.rope_theta)
         k = L.apply_mrope(k, p3, theta=cfg.rope_theta)
 
-    s_cache = c["k"].shape[1]
-    if cfg.local_window is not None and cfg.local_window <= s_cache:
-        # ring-free rolling window, gated per lane: continuous batching gives
-        # every lane its own position (jnp.roll on axis 1 is lane-independent)
-        full = pos >= s_cache  # (B,)
-        kc = jnp.where(full[:, None, None, None], jnp.roll(c["k"], -1, axis=1), c["k"])
-        vc = jnp.where(full[:, None, None, None], jnp.roll(c["v"], -1, axis=1), c["v"])
-        slot = jnp.minimum(pos, s_cache - 1)
-    else:
-        kc, vc = c["k"], c["v"]
-        slot = pos
-    bidx = jnp.arange(b)
-    kc = kc.at[bidx, slot].set(k[:, 0])
-    vc = vc.at[bidx, slot].set(v[:, 0])
-    out = L.decode_attention(q, kc, vc, jnp.minimum(pos, s_cache - 1) + 1)
+    # write the new token, read the logical (oldest→newest) view back —
+    # through the slab or the page table, the decode math is the same
+    k_view, v_view, new_c = layout.attn_rw(
+        c, k[:, 0], v[:, 0], pos, tables, cfg.local_window
+    )
+    s_view = k_view.shape[1]
+    out = L.decode_attention(q, k_view, v_view, jnp.minimum(pos, s_view - 1) + 1)
     out = L.matmul(out.reshape(b, 1, h * hd), p["wo"])
     if cfg.o_bias:
         out = out + p["bias_o"]
-    return out, {"k": kc, "v": vc}
+    return out, new_c
 
 
-def _block_decode(x, p, kind: str, cfg: ArchConfig, c, pos):
+def _block_decode(x, p, kind: str, cfg: ArchConfig, c, pos, layout, tables):
     mixer, mlp = _block_mixer_mlp(kind, cfg)
     h = _apply_norm(cfg, p["pre"], x)
     if mixer == "attn":
-        mix_out, c = _attn_decode(h, p["attn"], cfg, c, pos)
+        mix_out, c = _attn_decode(h, p["attn"], cfg, c, pos, layout, tables)
     elif mixer == "mla":
-        mix_out, ckv, krope = MLA.mla_decode(
-            h, p["attn"], cfg.n_heads, cfg.mla, c["ckv"], c["krope"], pos,
-            cfg.rope_theta,
+        mix_out, c = MLA.mla_decode(
+            h, p["attn"], cfg.n_heads, cfg.mla, c, pos, cfg.rope_theta,
+            layout=layout, tables=tables,
         )
-        c = {"ckv": ckv, "krope": krope}
     elif mixer == "ssm":
         mix_out, st, cv = SSM.ssm_decode_step(
             h, p["mixer"], cfg.d_model, cfg.ssm, c["state"], c["conv"]
@@ -560,16 +614,29 @@ def _block_decode(x, p, kind: str, cfg: ArchConfig, c, pos):
 
 
 def decode_step(
-    params: dict, cfg: ArchConfig, tokens: jnp.ndarray, cache: dict
+    params: dict, cfg: ArchConfig, tokens: jnp.ndarray, cache: dict, layout=None
 ) -> tuple[jnp.ndarray, dict]:
-    """One serving step: tokens (B,) int32 -> (logits (B,V), new cache)."""
+    """One serving step: tokens (B,) int32 -> (logits (B,V), new cache).
+
+    ``layout`` selects the cache storage geometry (slab default / paged);
+    a paged cache carries its page tables in ``cache["tables"]``, which
+    pass through unchanged (the host-side pool manager owns them).
+    """
+    if layout is None:
+        layout = C.SlabLayout()
     plan = layer_plan(cfg)
     pos = cache["len"]  # (B,)
+    tables = cache.get("tables")
     x = params["embed"]["tok_embed"][tokens][:, None, :]  # (B,1,d)
     new_cache: dict = {"len": cache["len"] + 1}
+    if tables is not None:
+        new_cache["tables"] = tables
 
     for i, kind in enumerate(plan.head):
-        x, c = _block_decode(x, params[f"head_{i}"], kind, cfg, cache[f"head_{i}"], pos)
+        x, c = _block_decode(
+            x, params[f"head_{i}"], kind, cfg, cache[f"head_{i}"], pos,
+            layout, tables,
+        )
         new_cache[f"head_{i}"] = c
 
     if plan.n_body:
@@ -577,7 +644,10 @@ def decode_step(
             p_sb, c_sb = pc
             cs = {}
             for j, kind in enumerate(plan.period):
-                x, cj = _block_decode(x, p_sb[f"sb_{j}"], kind, cfg, c_sb[f"sb_{j}"], pos)
+                x, cj = _block_decode(
+                    x, p_sb[f"sb_{j}"], kind, cfg, c_sb[f"sb_{j}"], pos,
+                    layout, tables,
+                )
                 cs[f"sb_{j}"] = cj
             return x, cs
 
@@ -585,7 +655,10 @@ def decode_step(
         new_cache["body"] = body_cache
 
     for i, kind in enumerate(plan.tail):
-        x, c = _block_decode(x, params[f"tail_{i}"], kind, cfg, cache[f"tail_{i}"], pos)
+        x, c = _block_decode(
+            x, params[f"tail_{i}"], kind, cfg, cache[f"tail_{i}"], pos,
+            layout, tables,
+        )
         new_cache[f"tail_{i}"] = c
 
     x = _apply_norm(cfg, params["final"], x)
@@ -725,10 +798,11 @@ class TransformerLM:
     def prefill(self, params, batch, max_len, **kw):
         return prefill(params, self.cfg, batch, max_len, **kw)
 
-    def decode_step(self, params, tokens, cache):
-        return decode_step(params, self.cfg, tokens, cache)
+    def decode_step(self, params, tokens, cache, layout=None):
+        return decode_step(params, self.cfg, tokens, cache, layout)
 
-    def init_cache(self, batch_size, max_len, dtype=None):
-        return init_cache(self.cfg, batch_size, max_len, dtype)
+    def init_cache(self, batch_size, max_len, dtype=None, layout=None):
+        return init_cache(self.cfg, batch_size, max_len, dtype, layout)
 
-    write_cache_slot = staticmethod(write_cache_slot)
+    def write_prefill(self, cache, produced, lanes, lens, layout=None):
+        return write_prefill(cache, self.cfg, produced, lanes, lens, layout)

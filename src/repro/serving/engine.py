@@ -1,24 +1,53 @@
 """Continuous-batching decode engine over a (compressed or dense) model tree.
 
 The engine is the serving counterpart of ``launch/train.py``'s Trainer: it
-owns a preallocated KV-cache pool of ``max_batch`` slots, a FIFO request
-queue, and the jitted prefill/decode executables, and it serves the
-parameter tree it is given *as is*. Hand it the N:M-compressed artifact
-from ``sparse_infer.compress_params`` and every weight matmul inside
-``model.prefill`` / ``model.decode_step`` routes through the compressed
+owns the KV-cache (a per-lane slab, or a block-granular paged pool — see
+below), a FIFO request queue, and the jitted prefill/decode executables,
+and it serves the parameter tree it is given *as is*.  Hand it the
+N:M-compressed artifact from ``sparse_infer.compress_params`` and every
+weight matmul inside prefill / decode routes through the compressed
 ``nm_spmm`` path (see ``models.layers.matmul``) — the dense weights never
 materialize in HBM.
 
-Scheduling is continuous batching: whenever a slot frees up (a request hit
-its stop condition) the next queued request is admitted *between decode
-steps* — one prefill writes its cache into the free slot and the following
-decode step carries the new request alongside the in-flight ones. Per-slot
-``cache["len"]`` keeps heterogeneous sequence positions correct (including
-per-lane rolling-window shifts on sliding-window archs); idle slots are
-pinned to length 0 and their sampled tokens discarded.
+Scheduling is continuous batching: whenever capacity frees up (a request
+hit its stop condition) queued requests are admitted *between decode
+steps*, and the following decode step carries the new requests alongside
+the in-flight ones.  Per-slot ``cache["len"]`` keeps heterogeneous sequence
+positions correct (including per-lane rolling-window shifts on
+sliding-window archs); idle slots are pinned to length 0 and their sampled
+tokens discarded.
 
-Prefill retraces per distinct prompt length (shapes are static under jit);
-serve traffic with a small set of prompt lengths, or pad client-side.
+Cache layouts
+-------------
+``DecodeEngine`` runs over either cache layout behind the
+``models.cache.CacheLayout`` seam:
+
+- **slab** (default): one contiguous ``(max_batch, max_len, ...)`` slab per
+  attention/MLA layer.  Admission = a free lane; a request that outgrows
+  ``max_len`` finishes with ``finish_reason="cache_full"``.
+- **paged** (pass ``num_pages``/``page_size`` or a prebuilt
+  ``kv_pool.PagedKVPool``): each layer owns a ``(num_pages, page_size, ...)``
+  pool and per-lane *page tables* map logical token positions to physical
+  pages (append-only for full attention and MLA; modular with whole-page
+  eviction for sliding-window layers).  Admission requires a free lane
+  *and* enough free pages for the prompt; page tables grow on demand as
+  lanes decode.  When the pool runs dry mid-decode the engine **preempts**
+  the youngest lane instead of truncating: its pages are freed, and the
+  request is re-queued at the front with its generated-so-far tokens as a
+  resume prefix — on re-admission it re-prefills ``prompt + prefix`` and
+  continues.  ``finish_reason="cache_full"`` survives only for the logical
+  per-request capacity ``max_len`` (the page-table width), never for pool
+  pressure.  The host-side allocator lives in ``serving.kv_pool``.
+
+Prefill is **bucketed and batched**: queued prompts admitted in the same
+scheduling step are padded to a small static set of bucket lengths (powers
+of two up to ``max_len`` by default) and each bucket group is prefilled in
+one jitted call, so distinct prompt lengths no longer retrace per length
+and admission no longer dispatches one prefill per request.  Compiled
+prefill variants are bounded by #buckets × #group-sizes (group sizes are
+padded to powers of two).  Architectures with recurrent state (SSM /
+RG-LRU) cannot absorb padding tokens into their state, so they group by
+*exact* prompt length instead — still one batched prefill per group.
 """
 from __future__ import annotations
 
@@ -31,7 +60,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import TransformerLM
+from repro.models.cache import SlabLayout
+from repro.models.model import TransformerLM, _block_mixer_mlp, layer_plan
+from repro.serving.kv_pool import PagedKVPool
 from repro.serving.sampling import SamplingParams, sample_tokens
 
 
@@ -50,30 +81,50 @@ class _Request:
     uid: int
     prompt: list[int]
     sampling: SamplingParams
+    # tokens generated before a preemption; on admission the engine
+    # prefills prompt + prefix and generation continues after them
+    prefix: list[int] = dataclasses.field(default_factory=list)
 
 
 class _Slot:
     """Host-side bookkeeping for one active batch lane."""
 
-    __slots__ = ("uid", "prompt", "sampling", "generated")
+    __slots__ = ("uid", "prompt", "sampling", "generated", "pos", "seq")
 
-    def __init__(self, req: _Request):
+    def __init__(self, req: _Request, pos: int, seq: int):
         self.uid = req.uid
         self.prompt = req.prompt
         self.sampling = req.sampling
-        self.generated: list[int] = []
+        self.generated: list[int] = list(req.prefix)
+        self.pos = pos  # host mirror of cache["len"][lane]
+        self.seq = seq  # admission order; preemption evicts youngest first
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 class DecodeEngine:
-    """Batched decode over a fixed-size slot pool with continuous batching.
+    """Batched decode over a slab or paged cache with continuous batching.
 
     Parameters
     ----------
-    model: the ``TransformerLM`` wrapper (provides prefill/decode_step).
+    model: the ``TransformerLM`` wrapper.
     params: the serving tree — dense arrays and/or ``CompressedTensor``
         leaves; served directly, no rehydration.
-    max_batch: number of concurrent decode lanes (cache pool size).
-    max_len: per-slot cache capacity (prompt + generated tokens).
+    max_batch: number of concurrent decode lanes.
+    max_len: logical per-request cache capacity (prompt + generated).
+    kv_pool / num_pages / page_size: enable the paged layout — pass a
+        prebuilt ``PagedKVPool`` or just ``num_pages`` (+ optional
+        ``page_size``, default 16) to have the engine build one.
+    prefill_buckets: static prompt-pad lengths for batched prefill
+        (default: powers of two up to ``max_len``).  Ignored for archs
+        with recurrent state, which group by exact prompt length.
+    max_prefill_batch: cap on requests prefetched into one batched
+        prefill (default ``max_batch``).
     """
 
     def __init__(
@@ -84,26 +135,68 @@ class DecodeEngine:
         max_batch: int = 8,
         max_len: int = 128,
         seed: int = 0,
+        kv_pool: Optional[PagedKVPool] = None,
+        num_pages: Optional[int] = None,
+        page_size: int = 16,
+        prefill_buckets: Optional[Sequence[int]] = None,
+        max_prefill_batch: Optional[int] = None,
     ):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        self.cache = model.init_cache(max_batch, max_len)
+        if kv_pool is None and num_pages is not None:
+            kv_pool = PagedKVPool(
+                model, max_batch=max_batch, max_len=max_len,
+                num_pages=num_pages, page_size=page_size,
+            )
+        self.pool = kv_pool
+        if self.pool is not None:
+            self.layout = self.pool.layout
+            self.cache = self.pool.cache
+        else:
+            self.layout = SlabLayout(max_len)
+            self.cache = model.init_cache(max_batch, max_len)
         self.slots: list[Optional[_Slot]] = [None] * max_batch
         self.queue: deque[_Request] = deque()
         self.tokens = jnp.zeros((max_batch,), jnp.int32)
         self.key = jax.random.PRNGKey(seed)
         self._next_uid = 0
+        self._admit_seq = 0
         self.decode_steps = 0
         self.admitted = 0
+        self.preemptions = 0
+        self.max_concurrency = 0
+        self.prefill_batches = 0
         self.tokens_generated = 0
         self.decode_tokens = 0  # tokens produced by decode steps (not prefill)
         self.decode_wall_s = 0.0
+        self._util_sum = 0.0
+        self._util_n = 0
+
+        # recurrent state cannot absorb pad tokens: group by exact length
+        plan = layer_plan(model.cfg)
+        kinds = list(plan.head) + list(plan.period) * plan.n_body + list(plan.tail)
+        self._exact_prefill = any(
+            _block_mixer_mlp(k, model.cfg)[0] in ("ssm", "rec") for k in kinds
+        )
+        if prefill_buckets:
+            buckets = sorted(int(b) for b in prefill_buckets if 0 < int(b) <= max_len)
+        else:
+            buckets, b = [], 8
+            while b < max_len:
+                buckets.append(b)
+                b *= 2
+        if not buckets or buckets[-1] < max_len:
+            buckets.append(max_len)
+        self.prefill_buckets = tuple(buckets)
+        self.max_prefill_batch = max_prefill_batch or max_batch
+
+        layout = self.layout
 
         def _decode(params, tok, cache, temps, topks, active, key,
                     need_sample, need_topk):
-            logits, cache = model.decode_step(params, tok, cache)
+            logits, cache = model.decode_step(params, tok, cache, layout)
             # idle lanes: pin position so a freed slot cannot creep past the
             # cache bound while it waits for its next request
             cache["len"] = jnp.where(active, cache["len"], 0)
@@ -113,19 +206,22 @@ class DecodeEngine:
             )
             return jnp.where(active, nxt, 0), logits, cache
 
-        def _insert(params, pool, prompt, slot, temp, topk, key,
-                    need_sample, need_topk):
-            # single-request prefill, written into the pool at `slot`
-            # (model.write_cache_slot owns the pool's axis layout)
-            logits, c1 = model.prefill(
-                params, {"tokens": prompt[None, :]}, max_len=max_len
+        def _prefill(params, tokens, lens, lanes, cache, temps, topks, key,
+                     need_sample, need_topk):
+            # one jitted call per (bucket_len, group_size): forward the whole
+            # padded group, write each row's cache into its lane through the
+            # layout, and sample each row's first token at position len-1
+            logits_all, _, produced = model.forward(
+                params, {"tokens": tokens}, remat=False, want_cache=True
             )
-            pool = model.write_cache_slot(pool, c1, slot)
+            idx = jnp.clip(lens - 1, 0, tokens.shape[1] - 1)
+            logits = jnp.take_along_axis(logits_all, idx[:, None, None], axis=1)[:, 0]
+            cache = model.write_prefill(cache, produced, lanes, lens, layout)
             first = sample_tokens(
-                logits, temp[None], topk[None], key,
+                logits, temps, topks, key,
                 need_sample=need_sample, need_topk=need_topk,
             )
-            return first[0], pool
+            return first, cache
 
         # the need_* flags are static so all-greedy batches compile to a
         # bare argmax (no vocab sort / categorical in the decode hot path);
@@ -133,8 +229,8 @@ class DecodeEngine:
         self._decode = jax.jit(
             _decode, static_argnames=("need_sample", "need_topk")
         )
-        self._insert = jax.jit(
-            _insert, static_argnames=("need_sample", "need_topk")
+        self._prefill = jax.jit(
+            _prefill, static_argnames=("need_sample", "need_topk")
         )
         self._warmed: set[tuple[bool, bool]] = set()
 
@@ -145,15 +241,25 @@ class DecodeEngine:
     ) -> int:
         """Enqueue a request; returns its uid."""
         prompt = [int(t) for t in prompt]
+        sampling = sampling or SamplingParams()
         if not prompt:
             raise ValueError("empty prompt")
         if len(prompt) >= self.max_len:
             raise ValueError(
                 f"prompt length {len(prompt)} >= cache capacity {self.max_len}"
             )
+        if self.pool is not None:
+            cap = min(len(prompt) + sampling.max_new_tokens, self.max_len)
+            need = self.pool.pages_for_request(cap)
+            if need > self.pool.layout.num_pages:
+                raise ValueError(
+                    f"request needs up to {need} pages but the pool has only "
+                    f"{self.pool.layout.num_pages}; raise --num-pages or "
+                    "lower max_new_tokens"
+                )
         uid = self._next_uid
         self._next_uid += 1
-        self.queue.append(_Request(uid, prompt, sampling or SamplingParams()))
+        self.queue.append(_Request(uid, prompt, sampling))
         return uid
 
     # -- scheduling ----------------------------------------------------------
@@ -169,6 +275,8 @@ class DecodeEngine:
         out.append(GenerationResult(s.uid, s.prompt, s.generated, reason))
         self.tokens_generated += len(s.generated)
         self.slots[i] = None
+        if self.pool is not None:
+            self.pool.release(i)
 
     def _absorb(
         self, i: int, token: int, out: list[GenerationResult], *,
@@ -186,38 +294,123 @@ class DecodeEngine:
         if len(s.generated) >= sp.max_new_tokens:
             self._finish(i, "length", out)
         elif len(s.prompt) + len(s.generated) >= self.max_len:
-            # the cache has no room to ingest this token — stop here
+            # the request hit its logical capacity (page-table width /
+            # slab length) — distinct from pool pressure, which preempts
             self._finish(i, "cache_full", out)
 
-    def _admit(self, req: _Request, i: int, out: list[GenerationResult]) -> None:
-        self.key, sub = jax.random.split(self.key)
-        first, self.cache = self._insert(
-            self.params,
-            self.cache,
-            jnp.asarray(req.prompt, jnp.int32),
-            i,
-            jnp.float32(req.sampling.temperature),
-            jnp.int32(req.sampling.top_k),
-            sub,
-            need_sample=req.sampling.temperature > 0,
-            need_topk=req.sampling.top_k > 0,
+    def _preempt(self, i: int, out: list[GenerationResult]) -> None:
+        """Evict lane i: free its pages, requeue it with a resume prefix."""
+        s = self.slots[i]
+        self.slots[i] = None
+        self.pool.release(i)
+        self.preemptions += 1
+        self.queue.appendleft(
+            _Request(s.uid, s.prompt, s.sampling, prefix=list(s.generated))
         )
-        self.tokens = self.tokens.at[i].set(first)
-        self.slots[i] = _Slot(req)
-        self.admitted += 1
-        self._absorb(i, int(first), out)
+
+    def _bucket(self, n: int) -> int:
+        if self._exact_prefill:
+            return n
+        for b in self.prefill_buckets:
+            if b >= n:
+                return b
+        return self.prefill_buckets[-1]
+
+    def _admit(self, out: list[GenerationResult]) -> None:
+        """Move queued requests into lanes; one batched prefill per bucket."""
+        picked: list[tuple[_Request, int, int]] = []
+        while self.queue and len(picked) < self.max_prefill_batch:
+            i = self._free_slot()
+            if i is None:
+                break
+            req = self.queue[0]
+            length = len(req.prompt) + len(req.prefix)
+            if self.pool is not None and not self.pool.alloc_prefill(i, length):
+                break  # pool pressure: retry next step, after frees/evictions
+            self.queue.popleft()
+            self.slots[i] = _Slot(req, pos=length, seq=self._admit_seq)
+            self._admit_seq += 1
+            picked.append((req, i, length))
+        if not picked:
+            return
+        groups: dict[int, list[tuple[_Request, int, int]]] = {}
+        for item in picked:
+            groups.setdefault(self._bucket(item[2]), []).append(item)
+        for lb in sorted(groups):
+            self._prefill_group(lb, groups[lb], out)
+
+    def _prefill_group(
+        self, lb: int, items: list[tuple[_Request, int, int]],
+        out: list[GenerationResult],
+    ) -> None:
+        nb = _next_pow2(len(items))
+        tokens = np.zeros((nb, lb), np.int32)
+        lens = np.zeros((nb,), np.int32)
+        lanes = np.full((nb,), self.max_batch, np.int32)  # sentinel = pad row
+        temps = np.zeros((nb,), np.float32)
+        topks = np.zeros((nb,), np.int32)
+        for r, (req, i, length) in enumerate(items):
+            tokens[r, :length] = req.prompt + req.prefix
+            lens[r] = length
+            lanes[r] = i
+            temps[r] = req.sampling.temperature
+            topks[r] = req.sampling.top_k
+        flags = dict(
+            need_sample=any(req.sampling.temperature > 0 for req, _, _ in items),
+            need_topk=any(req.sampling.top_k > 0 for req, _, _ in items),
+        )
+        self.key, sub = jax.random.split(self.key)
+        if self.pool is not None:
+            self.cache["tables"] = self.pool.device_tables()
+        first, self.cache = self._prefill(
+            self.params, jnp.asarray(tokens), jnp.asarray(lens),
+            jnp.asarray(lanes), self.cache, jnp.asarray(temps),
+            jnp.asarray(topks), sub, **flags,
+        )
+        self.tokens = self.tokens.at[lanes].set(first, mode="drop")
+        self.prefill_batches += 1
+        host_first = np.asarray(first)
+        for r, (req, i, _) in enumerate(items):
+            self.admitted += 1
+            self._absorb(i, int(host_first[r]), out)
+
+    def _ensure_capacity(self, out: list[GenerationResult]) -> None:
+        """Back every active lane's next decode write; preempt on pressure.
+
+        Lanes are served oldest-first and victims chosen youngest-first, so
+        the oldest request always makes progress (a request that could
+        never fit alone is rejected at submit)."""
+        if self.pool is None:
+            return
+        order = sorted(
+            (i for i, s in enumerate(self.slots) if s is not None),
+            key=lambda i: self.slots[i].seq,
+        )
+        for i in order:
+            while self.slots[i] is not None and not self.pool.ensure_step(
+                i, self.slots[i].pos
+            ):
+                victim = max(
+                    (j for j, t in enumerate(self.slots) if t is not None),
+                    key=lambda j: self.slots[j].seq,
+                )
+                self._preempt(victim, out)
+                if victim == i:
+                    break
 
     def step(self) -> list[GenerationResult]:
         """Admit what fits, run one decode step; return finished requests."""
         out: list[GenerationResult] = []
-        while self.queue:
-            i = self._free_slot()
-            if i is None:
-                break
-            self._admit(self.queue.popleft(), i, out)
+        self._admit(out)
+        self._ensure_capacity(out)
         active = np.array([s is not None for s in self.slots])
+        self.max_concurrency = max(self.max_concurrency, int(active.sum()))
         if not active.any():
             return out
+        self._util_sum += self._cache_utilization()
+        self._util_n += 1
+        if self.pool is not None:
+            self.cache["tables"] = self.pool.device_tables()
         self.key, sub = jax.random.split(self.key)
         temps = jnp.asarray(
             [s.sampling.temperature if s else 0.0 for s in self.slots], jnp.float32
@@ -253,6 +446,9 @@ class DecodeEngine:
         host_tok = np.asarray(tok)
         for i in range(self.max_batch):
             if self.slots[i] is not None:
+                self.slots[i].pos += 1  # mirror cache["len"] advancing
+        for i in range(self.max_batch):
+            if self.slots[i] is not None:
                 self._absorb(i, int(host_tok[i]), out, from_decode=True)
         return out
 
@@ -266,16 +462,60 @@ class DecodeEngine:
 
     # -- reporting -----------------------------------------------------------
 
+    def _cache_utilization(self) -> float:
+        """Fraction of *reserved* cache token-slots holding live tokens.
+
+        The slab reserves ``max_batch × max_len`` slots unconditionally;
+        the paged pool reserves only its allocated pages — this ratio is
+        what block-granular allocation buys on heterogeneous traffic.
+        """
+        lane_lens = {i: s.pos for i, s in enumerate(self.slots) if s is not None}
+        if self.pool is not None:
+            denom = self.pool.used_pages * self.pool.layout.page_size
+            live = self.pool.live_tokens(lane_lens)
+        else:
+            denom = self.max_batch * self.max_len
+            live = sum(min(p, self.max_len) for p in lane_lens.values())
+        return live / denom if denom else 0.0
+
+    def kv_cache_bytes(self) -> int:
+        """Device bytes held by attention/MLA cache storage (slab or pool)."""
+        plan = layer_plan(self.model.cfg)
+        total = 0
+
+        def entry_bytes(entry) -> int:
+            return sum(x.nbytes for x in jax.tree_util.tree_leaves(entry))
+
+        for i, kind in enumerate(plan.head):
+            if _block_mixer_mlp(kind, self.model.cfg)[0] in ("attn", "mla"):
+                total += entry_bytes(self.cache[f"head_{i}"])
+        if plan.n_body:
+            for j, kind in enumerate(plan.period):
+                if _block_mixer_mlp(kind, self.model.cfg)[0] in ("attn", "mla"):
+                    total += entry_bytes(self.cache["body"][f"sb_{j}"])
+        for i, kind in enumerate(plan.tail):
+            if _block_mixer_mlp(kind, self.model.cfg)[0] in ("attn", "mla"):
+                total += entry_bytes(self.cache[f"tail_{i}"])
+        return total
+
     def stats(self) -> dict:
         # throughput counts only decode-produced tokens over decode wall time;
         # each request's first token comes from (untimed) prefill and would
         # otherwise inflate tokens/s
-        return {
+        st = {
+            "layout": self.layout.kind,
             "decode_steps": self.decode_steps,
             "admitted": self.admitted,
+            "preemptions": self.preemptions,
+            "max_concurrency": self.max_concurrency,
+            "prefill_batches": self.prefill_batches,
             "tokens_generated": self.tokens_generated,
             "decode_tokens": self.decode_tokens,
             "decode_wall_s": self.decode_wall_s,
+            "kv_cache_bytes": self.kv_cache_bytes(),
+            "hbm_cache_utilization": (
+                self._util_sum / self._util_n if self._util_n else 0.0
+            ),
             "ms_per_decode_step": (
                 self.decode_wall_s / self.decode_steps * 1e3
                 if self.decode_steps
@@ -287,3 +527,18 @@ class DecodeEngine:
                 else 0.0
             ),
         }
+        if self.pool is not None:
+            lane_lens = {
+                i: s.pos for i, s in enumerate(self.slots) if s is not None
+            }
+            used = self.pool.used_pages
+            st["num_pages"] = self.pool.layout.num_pages
+            st["page_size"] = self.pool.layout.page_size
+            st["used_pages"] = used
+            st["evicted_pages"] = self.pool.evicted_pages
+            st["page_utilization"] = used / max(1, self.pool.layout.num_pages)
+            live = self.pool.live_tokens(lane_lens)
+            st["token_utilization"] = (
+                live / (used * self.pool.layout.page_size) if used else 0.0
+            )
+        return st

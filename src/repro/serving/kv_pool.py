@@ -1,0 +1,222 @@
+"""Host-side paged KV-cache pool manager for the serving engine.
+
+``PagedKVPool`` owns
+
+- the device cache tree (one ``(num_pages, page_size, ...)`` pool array per
+  attention/MLA layer, allocated via ``model.init_cache(layout=PagedLayout)``;
+  SSM / RG-LRU states stay per-lane),
+- the free-page list (page ids are *global*: one id reserves a
+  ``page_size``-token block in **every** paged layer's pool at once), and
+- the per-lane page tables, mirrored host-side in numpy and shipped to the
+  device (``cache["tables"]``) whenever they change.
+
+Two tables exist, depending on what the architecture needs:
+
+- ``full`` — append-only, ``ceil(max_len / page_size)`` slots per lane,
+  used by non-windowed attention and MLA layers.  Slot ``p`` maps logical
+  positions ``[p·ps, (p+1)·ps)``.
+- ``win`` — modular, ``ceil(window / page_size) + 1`` slots per lane, used
+  by sliding-window layers.  Position ``pos`` lives in slot
+  ``(pos // ps) % n_slots``; when the window slides wholly past a page the
+  page is evicted (returned to the free list) and its slot reused.
+
+The pool performs no scheduling itself: the engine asks ``can_admit`` /
+``alloc_prefill`` at admission, ``ensure_step`` before every decode write
+(growing tables on demand), and ``release`` on finish or preemption.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cache import PagedLayout, cdiv, paged_layout_for
+
+
+class PagedKVPool:
+    """Free-page list + per-lane page tables over a shared device pool."""
+
+    def __init__(
+        self,
+        model,
+        *,
+        max_batch: int,
+        max_len: int,
+        num_pages: int,
+        page_size: int = 16,
+        dtype=None,
+    ):
+        self.layout: PagedLayout = paged_layout_for(
+            model.cfg, max_len, page_size=page_size, num_pages=num_pages
+        )
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache = model.init_cache(max_batch, max_len, dtype, layout=self.layout)
+        lo = self.layout
+        self._pt_full = np.full((max_batch, lo.pages_full), lo.sentinel, np.int32)
+        self._pt_win = np.full((max_batch, lo.pages_win), lo.sentinel, np.int32)
+        self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        # per-lane bookkeeping: logical page no. -> page id
+        self._full_pages: list[dict[int, int]] = [dict() for _ in range(max_batch)]
+        self._win_pages: list[dict[int, int]] = [dict() for _ in range(max_batch)]
+        self._dirty = True
+        self._dev_tables: Optional[dict] = None
+        self.evicted_pages = 0  # whole pages freed by window sliding
+
+    # -- accounting ----------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.layout.num_pages - len(self._free)
+
+    def _win_span_pages(self, length: int) -> int:
+        """Distinct pages covering the live window of a length-`length` seq."""
+        if not self.layout.win or length <= 0:
+            return 0
+        ps = self.layout.page_size
+        start = max(0, length - self.layout.win)
+        return (length - 1) // ps - start // ps + 1
+
+    def prefill_pages(self, prompt_len: int) -> int:
+        """Pages a prompt needs *through its first decode write* at
+        position ``prompt_len`` — reserving the next-write page up front
+        keeps ``ensure_step`` from preempting a freshly prefilled lane
+        (which would waste the whole batched prefill)."""
+        ps = self.layout.page_size
+        boundary = 1 if prompt_len % ps == 0 else 0  # pos prompt_len opens a page
+        full = (cdiv(prompt_len, ps) + boundary) if self.layout.has_full else 0
+        win = self._win_span_pages(prompt_len)
+        if self.layout.win:
+            win += boundary
+        return full + win
+
+    def pages_for_request(self, cache_len_cap: int) -> int:
+        """Worst-case concurrent pages over a request's whole lifetime."""
+        ps = self.layout.page_size
+        full = cdiv(cache_len_cap, ps) if self.layout.has_full else 0
+        win = min(cdiv(cache_len_cap, ps), self.layout.pages_win)
+        return full + (win if self.layout.win else 0)
+
+    def live_tokens(self, lane_lens: dict[int, int]) -> int:
+        """Cache tokens actually referenced, for utilization reporting."""
+        tot = 0
+        for length in lane_lens.values():
+            if self.layout.has_full:
+                tot += length
+            if self.layout.win:
+                tot += min(length, self.layout.win)
+        return tot
+
+    # -- allocation ----------------------------------------------------------
+
+    def can_admit(self, prompt_len: int) -> bool:
+        return self.prefill_pages(prompt_len) <= len(self._free)
+
+    def _take(self) -> int:
+        return self._free.pop()
+
+    def alloc_prefill(self, lane: int, prompt_len: int) -> bool:
+        """Map every page the prompt's cache entries land in, plus the page
+        backing the first decode write at ``prompt_len``; False if short.
+
+        No window eviction happens here: the prefill still scatters into
+        the oldest window page, so it must stay mapped until the first
+        ``ensure_step`` (whose eviction runs after the prefill wrote)."""
+        if self.prefill_pages(prompt_len) > len(self._free):
+            return False
+        lo, ps = self.layout, self.layout.page_size
+        next_pg = prompt_len // ps  # page of the first decode write
+        if lo.has_full:
+            for pg in range(cdiv(prompt_len, ps)):
+                pid = self._take()
+                self._full_pages[lane][pg] = pid
+                self._pt_full[lane, pg] = pid
+            if next_pg not in self._full_pages[lane]:
+                pid = self._take()
+                self._full_pages[lane][next_pg] = pid
+                self._pt_full[lane, next_pg] = pid
+        if lo.win and prompt_len > 0:
+            start = max(0, prompt_len - lo.win)
+            for pg in range(start // ps, (prompt_len - 1) // ps + 1):
+                pid = self._take()
+                self._win_pages[lane][pg] = pid
+                self._pt_win[lane, pg % lo.pages_win] = pid
+            if next_pg not in self._win_pages[lane]:
+                pid = self._take()
+                self._win_pages[lane][next_pg] = pid
+                self._pt_win[lane, next_pg % lo.pages_win] = pid
+        self._dirty = True
+        return True
+
+    def ensure_step(self, lane: int, pos: int) -> bool:
+        """Make the next decode write at ``pos`` backed; False = pool full.
+
+        Also evicts whole window pages the sliding window has moved past
+        (eager, so another lane can claim them this very step).
+        """
+        lo, ps = self.layout, self.layout.page_size
+        if lo.win:
+            self._evict_win(lane, pos)
+        need = 0
+        pg = pos // ps
+        if lo.has_full and pg not in self._full_pages[lane]:
+            need += 1
+        if lo.win and pg not in self._win_pages[lane]:
+            need += 1
+        if need > len(self._free):
+            return False
+        if lo.has_full and pg not in self._full_pages[lane]:
+            pid = self._take()
+            self._full_pages[lane][pg] = pid
+            self._pt_full[lane, pg] = pid
+            self._dirty = True
+        if lo.win and pg not in self._win_pages[lane]:
+            pid = self._take()
+            self._win_pages[lane][pg] = pid
+            self._pt_win[lane, pg % lo.pages_win] = pid
+            self._dirty = True
+        return True
+
+    def _evict_win(self, lane: int, pos: int) -> None:
+        lo, ps = self.layout, self.layout.page_size
+        start = max(0, pos - lo.win + 1)  # oldest live position after this write
+        expired = [pg for pg in self._win_pages[lane] if (pg + 1) * ps - 1 < start]
+        for pg in expired:
+            pid = self._win_pages[lane].pop(pg)
+            self._free.append(pid)
+            self.evicted_pages += 1
+            if self._pt_win[lane, pg % lo.pages_win] == pid:
+                self._pt_win[lane, pg % lo.pages_win] = lo.sentinel
+            self._dirty = True
+
+    def release(self, lane: int) -> None:
+        """Free every page a lane holds (request finished or preempted)."""
+        for pg, pid in self._full_pages[lane].items():
+            self._free.append(pid)
+        for pg, pid in self._win_pages[lane].items():
+            self._free.append(pid)
+        if self._full_pages[lane] or self._win_pages[lane]:
+            self._dirty = True
+        self._full_pages[lane] = {}
+        self._win_pages[lane] = {}
+        self._pt_full[lane, :] = self.layout.sentinel
+        self._pt_win[lane, :] = self.layout.sentinel
+
+    # -- device view ---------------------------------------------------------
+
+    def device_tables(self) -> dict:
+        """The page tables as device arrays (re-uploaded only when dirty)."""
+        if self._dirty or self._dev_tables is None:
+            t = {}
+            if self.layout.pages_full:
+                t["full"] = jnp.asarray(self._pt_full)
+            if self.layout.pages_win:
+                t["win"] = jnp.asarray(self._pt_win)
+            self._dev_tables = t
+            self._dirty = False
+        return self._dev_tables

@@ -106,3 +106,26 @@ def test_atomic_no_partial_on_failure(tmp_path, monkeypatch):
     assert verify(p)
     _, meta = load_pytree(p, _tree())
     assert meta["step"] == 1
+
+
+def test_restore_latest_public_api(tmp_path):
+    """restore_latest: newest verified step, subtree skeletons, None when
+    empty — the serve launcher's restore path, no private-API reach-in."""
+    ck = Checkpointer(str(tmp_path / "run"))
+    assert ck.restore_latest(_tree()) is None
+
+    full = {"params": _tree(), "opt": {"m": jnp.ones((3,))}}
+    ck.save(3, full, {"note": "a"})
+    ck.save(9, full)
+    # a {"params": ...} skeleton reads just the parameter subtree
+    restored = ck.restore_latest({"params": _tree()})
+    assert restored is not None
+    tree, meta, step = restored
+    assert step == 9 and meta["step"] == 9
+    for a, b in zip(
+        jax.tree_util.tree_leaves(full["params"]),
+        jax.tree_util.tree_leaves(tree["params"]),
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )

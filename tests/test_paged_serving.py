@@ -1,0 +1,284 @@
+"""Paged KV-cache pool + bucketed batched prefill.
+
+Load-bearing guarantees of the paged serving stack:
+
+1. **Parity** — paged decode is bit-identical to slab decode on the same
+   request stream (same tokens, same finish reasons) across full
+   attention, MLA, and sliding-window archs, for greedy and sampled lanes.
+2. **Preemption replaces truncation** — under a deliberately undersized
+   pool, requests are preempted, re-queued with their generated prefix,
+   and resumed to the *same* greedy tokens; nothing finishes
+   ``cache_full`` from pool pressure.
+3. **Scheduling** — block-granular admission lets the paged engine run
+   strictly more concurrent requests than a slab of equal HBM budget on
+   heterogeneous prompt lengths.
+4. ``sample_tokens`` row isolation and the static all-greedy path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.configs import get_config
+from repro.models.model import TransformerLM
+from repro.serving import DecodeEngine, PagedKVPool, SamplingParams
+from repro.serving.sampling import sample_tokens
+from repro.sparse_infer import compress_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _compressed(arch: str, seed=0):
+    cfg = get_config(arch, smoke=True)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    recipe = core.make_recipe(
+        "step", core.SparsityConfig(default=core.NMSparsity(2, 4))
+    )
+    return cfg, model, compress_params(recipe.export_sparse(params), recipe.sparsity)
+
+
+def _stream(eng, prompts, sps):
+    uids = [eng.submit(p, sp) for p, sp in zip(prompts, sps)]
+    res = eng.run()
+    return (
+        [res[u].tokens for u in uids],
+        [res[u].finish_reason for u in uids],
+    )
+
+
+def _rand_prompt(seed, n, vocab):
+    return [int(t) for t in jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, vocab)]
+
+
+# ---------------------------------------------------------------------------
+# parity: paged decode ≡ slab decode on the same request stream
+# ---------------------------------------------------------------------------
+
+
+def test_paged_parity_attn_greedy_and_sampled():
+    """gpt2 (full attention): 4 heterogeneous requests over 2 lanes, one
+    sampled lane — the paged engine reproduces the slab engine exactly."""
+    cfg, model, comp = _compressed("gpt2-paper")
+    prompts = [_rand_prompt(100 + r, 3 + 3 * r, cfg.vocab) for r in range(4)]
+    sps = [SamplingParams(max_new_tokens=4 + r) for r in range(4)]
+    sps[2] = SamplingParams(temperature=1.0, top_k=5, max_new_tokens=5)
+
+    slab = DecodeEngine(model, comp, max_batch=2, max_len=32, seed=3)
+    t_slab, r_slab = _stream(slab, prompts, sps)
+    paged = DecodeEngine(
+        model, comp, max_batch=2, max_len=32, seed=3, num_pages=16, page_size=8
+    )
+    t_paged, r_paged = _stream(paged, prompts, sps)
+    assert t_paged == t_slab
+    assert r_paged == r_slab
+    assert paged.layout.kind == "paged" and slab.layout.kind == "slab"
+
+
+def test_paged_parity_mla():
+    """DeepSeek MLA: the latent (ckv, krope) cache pages like attention."""
+    cfg, model, comp = _compressed("deepseek-v2-lite-16b")
+    prompts = [_rand_prompt(9, 5, cfg.vocab), _rand_prompt(10, 11, cfg.vocab)]
+    sps = [SamplingParams(max_new_tokens=6)] * 2
+    slab = DecodeEngine(model, comp, max_batch=2, max_len=24, seed=0)
+    t_slab, _ = _stream(slab, prompts, sps)
+    paged = DecodeEngine(
+        model, comp, max_batch=2, max_len=24, seed=0, num_pages=24, page_size=4
+    )
+    t_paged, _ = _stream(paged, prompts, sps)
+    assert t_paged == t_slab
+
+
+def test_windowed_decode_past_boundary_heterogeneous_and_paged():
+    """Sliding window (RecurrentGemma, window=16): misaligned lanes decode
+    well past the window boundary.  Locks in the per-lane rolling-window
+    gating (batched == solo) and the paged modular table (paged == slab,
+    with whole expired pages actually evicted back to the free list)."""
+    cfg, model, comp = _compressed("recurrentgemma-9b")
+    max_len = 40  # > window: both lanes roll; lane 1 crosses pos 16 mid-run
+    prompts = [_rand_prompt(9, 5, cfg.vocab), _rand_prompt(10, 11, cfg.vocab)]
+    sps = [SamplingParams(max_new_tokens=20)] * 2  # ends at pos 25 / 31
+
+    solo = []
+    for p, sp in zip(prompts, sps):
+        eng = DecodeEngine(model, comp, max_batch=1, max_len=max_len)
+        solo.append(_stream(eng, [p], [sp])[0][0])
+
+    slab = DecodeEngine(model, comp, max_batch=2, max_len=max_len)
+    t_slab, _ = _stream(slab, prompts, sps)
+    assert t_slab == solo  # per-lane window gating at and past the boundary
+
+    paged = DecodeEngine(
+        model, comp, max_batch=2, max_len=max_len, num_pages=32, page_size=4
+    )
+    t_paged, _ = _stream(paged, prompts, sps)
+    assert t_paged == solo
+    # the window slid past whole pages: they went back to the free list
+    assert paged.pool.evicted_pages > 0
+
+
+# ---------------------------------------------------------------------------
+# preemption-and-resume replaces cache_full truncation
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_resume_matches_unpreempted_greedy():
+    """A pool too small for two full requests preempts the youngest lane
+    and resumes it from its prompt + generated prefix: same greedy tokens
+    as the un-preempted slab run, and no pool-pressure cache_full."""
+    cfg, model, comp = _compressed("gpt2-paper")
+    prompts = [_rand_prompt(100 + r, 5, cfg.vocab) for r in range(2)]
+    sps = [SamplingParams(max_new_tokens=8)] * 2
+
+    ref = DecodeEngine(model, comp, max_batch=2, max_len=16, seed=0)
+    t_ref, r_ref = _stream(ref, prompts, sps)
+
+    # each request grows to 13 tokens = 7 pages of 2; 8 total forces a preempt
+    eng = DecodeEngine(
+        model, comp, max_batch=2, max_len=16, seed=0, num_pages=8, page_size=2
+    )
+    t, r = _stream(eng, prompts, sps)
+    assert eng.preemptions > 0
+    assert t == t_ref
+    assert r == r_ref and all(x == "length" for x in r)
+
+
+def test_submit_rejects_request_larger_than_whole_pool():
+    _, model, comp = _compressed("gpt2-paper")
+    eng = DecodeEngine(
+        model, comp, max_batch=2, max_len=32, num_pages=3, page_size=2
+    )
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(list(range(1, 11)), SamplingParams(max_new_tokens=20))
+
+
+# ---------------------------------------------------------------------------
+# scheduling: block granularity buys concurrency at equal HBM budget
+# ---------------------------------------------------------------------------
+
+
+def test_paged_admits_more_concurrency_at_equal_budget():
+    cfg, model, comp = _compressed("gpt2-paper")
+    max_len, page_size, slab_batch = 32, 8, 2
+    budget_tokens = slab_batch * max_len
+    prompts = [_rand_prompt(500 + r, 4 + (r * 5) % 12, cfg.vocab) for r in range(8)]
+    sps = [SamplingParams(max_new_tokens=6)] * len(prompts)
+
+    slab = DecodeEngine(model, comp, max_batch=slab_batch, max_len=max_len)
+    _stream(slab, prompts, sps)
+    paged = DecodeEngine(
+        model, comp, max_batch=4 * slab_batch, max_len=max_len,
+        num_pages=budget_tokens // page_size, page_size=page_size,
+    )
+    _stream(paged, prompts, sps)
+    assert paged.kv_cache_bytes() <= slab.kv_cache_bytes()  # equal HBM budget
+    assert paged.max_concurrency > slab.max_concurrency
+
+
+def test_bucketed_prefill_batches_one_group_per_bucket():
+    """4 distinct prompt lengths in one bucket = one jitted prefill call
+    (the per-prompt-length retrace/dispatch is gone)."""
+    cfg, model, comp = _compressed("gpt2-paper")
+    eng = DecodeEngine(
+        model, comp, max_batch=4, max_len=32, prefill_buckets=(8, 16)
+    )
+    assert eng._bucket(3) == 8 and eng._bucket(9) == 16
+    prompts = [_rand_prompt(40 + r, 3 + r, cfg.vocab) for r in range(4)]  # 3..6
+    sps = [SamplingParams(max_new_tokens=2)] * 4
+    t, _ = _stream(eng, prompts, sps)
+    assert eng.prefill_batches == 1
+    assert all(len(x) == 2 for x in t)
+
+
+# ---------------------------------------------------------------------------
+# PagedKVPool accounting
+# ---------------------------------------------------------------------------
+
+
+def test_kv_pool_alloc_ensure_release_accounting():
+    _, model, _ = _compressed("gpt2-paper")
+    pool = PagedKVPool(model, max_batch=2, max_len=16, num_pages=10, page_size=2)
+    assert pool.free_pages == 10
+    assert pool.alloc_prefill(0, 5)  # positions 0..4 -> pages 0..2
+    assert pool.used_pages == 3
+    assert pool.ensure_step(0, 5)  # page 2 already mapped
+    assert pool.used_pages == 3
+    assert pool.ensure_step(0, 6)  # crosses into page 3
+    assert pool.used_pages == 4
+    assert pool.alloc_prefill(1, 5)
+    assert pool.used_pages == 7
+    pool.release(0)
+    assert pool.used_pages == 3 and pool.free_pages == 7
+    pool.release(1)
+    assert pool.used_pages == 0 and pool.free_pages == 10
+    # tables are sentinel-clean after release
+    assert (pool.device_tables()["full"] >= pool.layout.num_pages).all()
+
+
+def test_kv_pool_window_eviction_frees_whole_pages():
+    _, model, _ = _compressed("recurrentgemma-9b")  # smoke window = 16
+    pool = PagedKVPool(model, max_batch=1, max_len=40, num_pages=16, page_size=4)
+    assert pool.layout.win == 16 and not pool.layout.has_full
+    assert pool.alloc_prefill(0, 10)  # window pages 0..2
+    assert pool.used_pages == 3
+    before = pool.used_pages
+    for pos in range(10, 30):
+        assert pool.ensure_step(0, pos)
+    # live window spans <= pages_win pages; everything older was evicted
+    assert pool.used_pages <= pool.layout.pages_win
+    assert pool.evicted_pages > 0
+    assert pool.used_pages <= before + pool.layout.pages_win
+
+
+# ---------------------------------------------------------------------------
+# sample_tokens: row isolation + the static all-greedy path
+# ---------------------------------------------------------------------------
+
+
+def test_sample_tokens_topk_zero_rows_unaffected_by_filtering_rows():
+    """A top_k=0 row must sample identically whether or not *other* rows
+    in the batch filter by top-k."""
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(jax.random.PRNGKey(1), (2, 32))
+    temps = jnp.asarray([1.0, 1.0], jnp.float32)
+    mixed = sample_tokens(
+        logits, temps, jnp.asarray([0, 2], jnp.int32), key,
+        need_sample=True, need_topk=True,
+    )
+    unfiltered = sample_tokens(
+        logits, temps, jnp.asarray([0, 0], jnp.int32), key,
+        need_sample=True, need_topk=False,
+    )
+    assert int(mixed[0]) == int(unfiltered[0])
+    # the filtering row respects its own cutoff: one of its top-2 logits
+    top2 = set(np.argsort(np.asarray(logits[1]))[-2:].tolist())
+    assert int(mixed[1]) in top2
+
+    # a greedy row (temperature 0) is exact argmax even when a sibling
+    # row filters
+    greedy_mix = sample_tokens(
+        logits, jnp.asarray([0.0, 1.0], jnp.float32),
+        jnp.asarray([0, 2], jnp.int32), key,
+        need_sample=True, need_topk=True,
+    )
+    assert int(greedy_mix[0]) == int(jnp.argmax(logits[0]))
+
+
+def test_sample_tokens_static_all_greedy_path_is_argmax():
+    """need_sample=False (the compiled all-greedy fast path) must equal
+    exact argmax — and agree with the dynamic path at temperature 0."""
+    logits = jax.random.normal(jax.random.PRNGKey(2), (4, 64))
+    key = jax.random.PRNGKey(3)
+    zeros_f = jnp.zeros((4,), jnp.float32)
+    zeros_i = jnp.zeros((4,), jnp.int32)
+    static = sample_tokens(
+        logits, zeros_f, zeros_i, key, need_sample=False, need_topk=False
+    )
+    np.testing.assert_array_equal(
+        np.asarray(static), np.asarray(jnp.argmax(logits, axis=-1))
+    )
+    dynamic = sample_tokens(
+        logits, zeros_f, zeros_i, key, need_sample=True, need_topk=True
+    )
+    np.testing.assert_array_equal(np.asarray(static), np.asarray(dynamic))
