@@ -1,6 +1,8 @@
 """Shared benchmark harness utilities."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -18,6 +20,20 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.2f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def append_json(path: str, records: list[dict]) -> None:
+    """Append record dicts to a JSON list file (corrupt/missing -> fresh),
+    so perf trajectories accumulate across runs (BENCH_*.json)."""
+    existing: list[dict] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            existing = []
+    with open(path, "w") as f:
+        json.dump(existing + records, f, indent=1)
 
 
 def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:

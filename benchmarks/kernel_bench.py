@@ -1,12 +1,15 @@
-"""Kernel microbenchmarks: nm_mask / nm_spmm vs jnp reference.
+"""Kernel microbenchmarks: nm_mask / nm_spmm / paged_attn vs references.
 
-CPU wall-times of the jitted *reference* paths (the production CPU path),
-plus interpret-mode correctness deltas for the Pallas kernels (TPU-target
-timing is structural — see §Roofline; interpret mode timing is meaningless
-and not reported as perf).
+CPU wall-times of the jitted *production CPU* paths (the XLA routes the
+dispatch layer selects off-TPU), plus interpret-mode correctness deltas for
+the Pallas kernels (TPU-target timing is structural — see §Roofline;
+interpret mode timing is meaningless and not reported as perf).
 
-Derived column reports the analytic HBM-traffic ratio of the compressed
-serving matmul — the quantity the TPU kernel exists to win (DESIGN.md §3).
+Derived columns report the analytic HBM-traffic quantities the TPU kernels
+exist to win: the compressed-matmul weight ratio (DESIGN.md §3) and the
+live-pages-vs-full-gather byte ratio of paged decode attention.  The
+paged-attn sweep also appends machine-readable records to
+``BENCH_paged_attn.json``.
 """
 from __future__ import annotations
 
@@ -16,11 +19,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import append_json, emit, time_fn
 from repro.core import masking
 from repro.kernels import ref
 from repro.kernels.nm_mask import nm_mask_apply_pallas
-from repro.kernels.nm_spmm import nm_spmm_pallas
+from repro.kernels.nm_spmm import nm_spmm_pallas, nm_spmm_xla
+from repro.kernels.paged_attn import paged_attn_pallas, paged_attn_xla
+from repro.models.layers import decode_attention
+
+PAGED_OUT_JSON = "BENCH_paged_attn.json"
 
 
 def bench_mask(shapes=((1024, 1024), (4096, 1024)), nm=((2, 4), (1, 8))):
@@ -59,9 +66,128 @@ def bench_spmm(cases=((64, 2048, 2048), (8, 4096, 4096))):
             )
 
 
+def bench_spmm_xla(cases=((1, 2048, 2048), (64, 2048, 2048))):
+    """The dispatch-selected CPU path (gather / decompress regimes) vs the
+    dense matmul it must beat-or-match off-TPU."""
+    for b, k, o in cases:
+        x = jax.random.normal(jax.random.PRNGKey(0), (b, k), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, o), jnp.float32)
+        v, i = ref.nm_compress(w, 2, 4, 0)
+        us_d = time_fn(jax.jit(lambda x, w: x @ w), x, w)
+        us_c = time_fn(
+            jax.jit(functools.partial(nm_spmm_xla, n=2, m=4)), x, v, i
+        )
+        emit(
+            f"kernel_nm_spmm_xla/{b}x{k}x{o}/2:4",
+            us_c,
+            f"dense_us={us_d:.1f};ratio={us_c / us_d:.2f}",
+        )
+
+
+def _paged_case(seed, b, hkv, g, d, ps, n_slots, lens):
+    """Random pool + append-only tables for heterogeneous lane lengths."""
+    live = sum(-(-ln // ps) for ln in lens)
+    num_pages = live + 2
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, hkv, g, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (num_pages, ps, hkv, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (num_pages, ps, hkv, d), jnp.float32)
+    t = np.full((b, n_slots), num_pages, np.int32)
+    nxt = 0
+    for i, ln in enumerate(lens):
+        for pg in range(-(-ln // ps)):
+            t[i, pg] = nxt
+            nxt += 1
+    return q, kp, vp, jnp.asarray(t), jnp.asarray(lens, jnp.int32), num_pages
+
+
+def bench_paged_attn(out_json: str = PAGED_OUT_JSON) -> list[dict]:
+    """Paged decode attention: table-direct kernel vs the full-view gather.
+
+    CPU times compare the two *XLA* formulations (production off-TPU): the
+    legacy contiguous ``(B, S_max, ...)`` gather + ``decode_attention``
+    against the kernel's oracle.  The structural quantity is the bytes
+    column: live pages touched per step vs the full logical view the
+    gather materializes — on TPU that ratio bounds the kernel's win.
+    Interpret-mode parity of the Pallas kernel is asserted per case.
+    """
+    records: list[dict] = []
+    cases = [
+        # (B, Hkv, G, D, ps, max_len, mean fill fraction)
+        (4, 2, 4, 64, 16, 256, 0.25),
+        (8, 2, 4, 64, 16, 512, 0.125),
+        (8, 1, 8, 128, 16, 512, 0.25),
+    ]
+    for b, hkv, g, d, ps, max_len, fill in cases:
+        n_slots = max_len // ps
+        lens = [
+            max(1, int(max_len * fill * (0.5 + (i % 4) / 2))) for i in range(b)
+        ]
+        q, kp, vp, tables, lengths, num_pages = _paged_case(
+            7, b, hkv, g, d, ps, n_slots, lens
+        )
+        scale = d ** -0.5
+
+        def gathered(q, kp, vp, tables, lengths):
+            phys = jnp.minimum(tables, num_pages - 1)
+            kv = kp[phys].reshape(b, n_slots * ps, hkv, d)
+            vv = vp[phys].reshape(b, n_slots * ps, hkv, d)
+            return decode_attention(
+                q.reshape(b, 1, hkv * g, d), kv, vv, lengths
+            )
+
+        f_gather = jax.jit(gathered)
+        f_kernel = jax.jit(functools.partial(paged_attn_xla, scale=scale))
+        us_gather = time_fn(f_gather, q, kp, vp, tables, lengths)
+        us_kernel = time_fn(f_kernel, q, kp, vp, tables, lengths)
+        y_itp = paged_attn_pallas(
+            q, kp, vp, tables, lengths, scale=scale, interpret=True
+        )
+        err = float(
+            jnp.max(jnp.abs(y_itp - f_kernel(q, kp, vp, tables, lengths)))
+        )
+        assert err < 1e-4, f"paged_attn interpret parity broke: {err:.1e}"
+        row_bytes = 2 * hkv * d * 4  # K+V f32
+        bytes_live = sum(-(-ln // ps) for ln in lens) * ps * row_bytes
+        bytes_gather = b * n_slots * ps * row_bytes
+        name = f"kernel_paged_attn/b{b}h{hkv}g{g}d{d}/ps{ps}x{n_slots}"
+        emit(
+            name,
+            us_kernel,
+            f"gather_us={us_gather:.1f};pallas_err={err:.1e};"
+            f"bytes_live={bytes_live};bytes_gather={bytes_gather};"
+            f"byte_ratio={bytes_live / bytes_gather:.3f}",
+        )
+        records.append(
+            {
+                "suite": "paged_attn",
+                "case": name,
+                "batch": b,
+                "heads_kv": hkv,
+                "group": g,
+                "head_dim": d,
+                "page_size": ps,
+                "n_slots": n_slots,
+                "lane_lens": lens,
+                "us_kernel_xla": us_kernel,
+                "us_full_gather": us_gather,
+                "pallas_interpret_err": err,
+                "kv_bytes_live_per_step": bytes_live,
+                "kv_bytes_full_gather": bytes_gather,
+                "kv_byte_ratio": bytes_live / bytes_gather,
+            }
+        )
+    if out_json:
+        append_json(out_json, records)
+    return records
+
+
 def run() -> None:
     bench_mask()
     bench_spmm()
+    bench_spmm_xla()
+    bench_paged_attn()
 
 
 if __name__ == "__main__":

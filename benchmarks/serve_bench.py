@@ -5,9 +5,18 @@ Two sweeps through ``repro.serving.DecodeEngine``:
 1. **dense vs compressed** (slab layout, homogeneous prompts): the same
    request load served on the masked-dense tree and on the N:M-compressed
    tree (the ``nm_spmm`` dispatch path), reporting µs/decode-step plus
-   tokens/s and the HBM weight-bytes ratio.  On CPU the compressed path
-   pays a decompress per matmul (the jnp reference); the HBM ratio column
-   is the quantity the TPU Pallas kernel converts into decode-step time.
+   tokens/s and the HBM weight-bytes ratio.  On CPU dispatch selects the
+   vectorized XLA path (``kernels.nm_spmm.nm_spmm_xla``): at smoke sizes
+   compressed decode matches-or-beats dense at batch 1 and stays within
+   2x above (was 8x slower on the seed's scatter-decompress route); the
+   HBM ratio column is the quantity the TPU Pallas kernel converts into
+   decode-step time.
+
+Each record also carries the decode-step roofline inputs
+(``weight_bytes_per_step`` / ``kv_bytes_per_step`` /
+``bytes_read_per_step``): what one step must stream from HBM, with
+compressed leaves at stored size and only *live* KV tokens counted (the
+paged fast path's read set).
 
 2. **slab vs paged** (compressed tree, heterogeneous prompt lengths): the
    slab engine allocates ``max_batch × max_len`` token slots per layer no
@@ -25,13 +34,10 @@ Every row is also appended to a machine-readable ``BENCH_serve.json``
 """
 from __future__ import annotations
 
-import json
-import os
-
 import jax
 
 import repro.core as core
-from benchmarks.common import emit
+from benchmarks.common import append_json, emit
 from repro.configs import get_config
 from repro.models.model import TransformerLM
 from repro.serving import DecodeEngine, SamplingParams
@@ -122,6 +128,10 @@ def run(
                     "decode_steps": st["decode_steps"],
                     "hbm_weight_ratio": ratio,
                     "kv_cache_bytes": st["kv_cache_bytes"],
+                    # roofline inputs: what one decode step must read
+                    "weight_bytes_per_step": st["weight_bytes_per_step"],
+                    "kv_bytes_per_step": st["kv_bytes_per_step"],
+                    "bytes_read_per_step": st["bytes_read_per_step"],
                 }
             )
 
@@ -170,6 +180,9 @@ def run(
                 "hbm_weight_ratio": ratio,
                 "kv_cache_bytes": st["kv_cache_bytes"],
                 "hbm_cache_utilization": util,
+                "weight_bytes_per_step": st["weight_bytes_per_step"],
+                "kv_bytes_per_step": st["kv_bytes_per_step"],
+                "bytes_read_per_step": st["bytes_read_per_step"],
             }
         )
 
@@ -185,13 +198,5 @@ def run(
     )
 
     if out_json:
-        existing: list[dict] = []
-        if os.path.exists(out_json):
-            try:
-                with open(out_json) as f:
-                    existing = json.load(f)
-            except (json.JSONDecodeError, OSError):
-                existing = []
-        with open(out_json, "w") as f:
-            json.dump(existing + records, f, indent=1)
+        append_json(out_json, records)
     return records

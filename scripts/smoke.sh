@@ -28,4 +28,9 @@ python -m repro.launch.serve --arch gpt2-paper --batch 2 --requests 4 \
     --prompt-len 6 --gen 10 --paged --page-size 2 --num-pages 10 \
     --prefill-buckets 8,16
 
+echo "== serve smoke (dispatch forced to XLA: override plumbing) =="
+REPRO_KERNEL_MODE=xla python -m repro.launch.serve --arch gpt2-paper \
+    --batch 2 --requests 3 --prompt-len 8 --gen 6 --paged --page-size 4 \
+    --num-pages 24
+
 echo "smoke OK"

@@ -1,8 +1,12 @@
 # Pallas TPU kernels for the paper's compute hot-spots:
-#   nm_mask — fused per-step N:M mask computation + application (training)
-#   nm_spmm — compressed N:M matmul (serving; HBM-bandwidth win, DESIGN.md §3)
-# ops.py holds the jit'd public wrappers with CPU fallback; ref.py the
-# pure-jnp oracles used by the allclose test sweeps.
+#   nm_mask    — fused per-step N:M mask computation + application (training)
+#   nm_spmm    — compressed N:M matmul (serving; HBM-bandwidth win, DESIGN.md §3)
+#   paged_attn — paged decode attention walking the KV page table directly
+# dispatch.py is the single routing point (Pallas-TPU / Pallas-interpret /
+# vectorized XLA, by backend + shape + override); ops.py holds the legacy
+# jit'd wrappers; ref.py the pure-jnp oracles for the allclose test sweeps.
+from repro.kernels import dispatch
 from repro.kernels.ops import nm_mask_apply, nm_spmm, on_tpu
 from repro.kernels.nm_mask import nm_mask_apply_pallas
-from repro.kernels.nm_spmm import nm_spmm_pallas
+from repro.kernels.nm_spmm import nm_spmm_pallas, nm_spmm_xla
+from repro.kernels.paged_attn import paged_attn_pallas, paged_attn_xla

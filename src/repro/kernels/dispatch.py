@@ -1,0 +1,162 @@
+"""Backend-aware kernel dispatch: one registry for every kernel call.
+
+Why this exists: the seed wired ``nm_spmm_pallas(..., interpret=True)``
+defaults straight into the serving matmul and left the CPU production path
+on a ``put_along_axis`` scatter-decompress — running either a Pallas kernel
+under the Python interpreter or an XLA scatter inside the decode hot loop.
+That is how compressed decode measured ~8x *slower* than dense at batch 1
+(``BENCH_serve.json``, PR 2).  Kernel routing belongs in one place, decided
+by backend + shape, never hardcoded at a call site.
+
+Modes
+-----
+- ``"pallas"``    — the compiled Pallas-TPU kernel (backend == "tpu").
+- ``"interpret"`` — the same kernel body under the Pallas interpreter.
+  Correctness-only: tests and debugging.  Never a production route.
+- ``"xla"``       — a vectorized pure-XLA implementation.  The production
+  path on CPU/GPU and the parity oracle everywhere.
+
+Resolution order, first hit wins:
+
+1. an explicit ``mode=...`` argument at the call site,
+2. the innermost active :func:`force_mode` context (tests),
+3. the ``REPRO_KERNEL_MODE`` environment variable (CI / smoke runs),
+4. a per-kernel *shape guard* — shapes the Pallas grid cannot tile
+   efficiently (e.g. a reduction dim whose only valid block size is
+   degenerate) fall back to ``"xla"`` even on TPU,
+5. the backend default: ``tpu -> "pallas"``, anything else ``-> "xla"``.
+
+Resolution happens at trace time: a jitted caller bakes the route into its
+executable, so flipping the env var after an engine compiled its decode
+step does not re-route that engine (build a new one, as ``scripts/smoke.sh``
+does for the forced-XLA serve invocation).
+
+Registered kernels: ``nm_spmm`` (compressed N:M matmul),
+``paged_attn`` (paged decode attention).  ``nm_mask`` keeps its legacy
+wrapper in ``kernels.ops`` until its training-loop call sites migrate.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Callable, Optional
+
+import jax
+
+ENV_VAR = "REPRO_KERNEL_MODE"
+MODES = ("pallas", "interpret", "xla")
+
+_REGISTRY: dict[str, dict[str, Callable]] = {}
+_GUARDS: dict[str, Callable[..., bool]] = {}
+_FORCED: list[str] = []
+
+
+def register(kernel: str, mode: str, fn: Callable) -> None:
+    """Register ``fn`` as the ``mode`` implementation of ``kernel``."""
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+    _REGISTRY.setdefault(kernel, {})[mode] = fn
+
+
+def register_guard(kernel: str, guard: Callable[..., bool]) -> None:
+    """``guard(**shape_info) -> bool``: may the Pallas route take this shape?"""
+    _GUARDS[kernel] = guard
+
+
+def registered() -> dict[str, tuple[str, ...]]:
+    """kernel name -> modes with an implementation (introspection / tests)."""
+    _ensure_registered()
+    return {k: tuple(sorted(v)) for k, v in _REGISTRY.items()}
+
+
+@contextlib.contextmanager
+def force_mode(mode: str):
+    """Force every dispatch inside the context to ``mode`` (tests)."""
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+    _FORCED.append(mode)
+    try:
+        yield
+    finally:
+        _FORCED.pop()
+
+
+def _env_mode() -> Optional[str]:
+    mode = os.environ.get(ENV_VAR, "").strip().lower()
+    if not mode:
+        return None
+    if mode not in MODES:
+        raise ValueError(f"{ENV_VAR}={mode!r}; expected one of {MODES}")
+    return mode
+
+
+def _ensure_registered(kernel: str = "") -> None:
+    """Implementations self-register at import; pull their modules in."""
+    if "nm_spmm" not in _REGISTRY or "paged_attn" not in _REGISTRY:
+        import repro.kernels.nm_spmm  # noqa: F401
+        import repro.kernels.paged_attn  # noqa: F401
+
+
+def resolve(kernel: str, mode: Optional[str] = None, **shape_info) -> tuple[str, Callable]:
+    """Pick ``(mode, impl)`` for one kernel call.  See module docstring."""
+    _ensure_registered(kernel)
+    impls = _REGISTRY[kernel]
+    picked = mode or (_FORCED[-1] if _FORCED else None) or _env_mode()
+    if picked is None:
+        picked = "pallas" if jax.default_backend() == "tpu" else "xla"
+        guard = _GUARDS.get(kernel)
+        if picked == "pallas" and guard is not None and not guard(**shape_info):
+            picked = "xla"  # shape the Pallas grid can't tile: use XLA even on TPU
+    if picked not in impls:
+        raise NotImplementedError(f"kernel {kernel!r} has no {picked!r} impl")
+    return picked, impls[picked]
+
+
+def uses_kernel(kernel: str, mode: Optional[str] = None, **shape_info) -> bool:
+    """True when dispatch would run the fused Pallas kernel body (compiled
+    or interpreted) rather than the XLA reference.  Call sites that must
+    *restructure* around the kernel (e.g. paged decode skipping the
+    contiguous gather) branch on this at trace time."""
+    return resolve(kernel, mode, **shape_info)[0] != "xla"
+
+
+# ---------------------------------------------------------------------------
+# public kernel entry points
+# ---------------------------------------------------------------------------
+
+
+def nm_spmm(
+    x, values, indices, n: int, m: int, *, o_true: Optional[int] = None,
+    mode: Optional[str] = None,
+):
+    """Compressed N:M matmul ``y = x @ decompress(values, indices)``.
+
+    ``o_true`` slices off compress-time MXU padding on the output dim
+    (``sparse_infer.compress_params`` stores lane-aligned buffers; the true
+    width rides on ``CompressedTensor.pad``).
+    """
+    _, fn = resolve(
+        "nm_spmm", mode, b=x.shape[0], k=x.shape[-1], o=values.shape[-1],
+        n=n, m=m,
+    )
+    return fn(x, values, indices, n, m, o_true=o_true)
+
+
+def paged_attn(
+    q, k_pages, v_pages, tables, lengths, *, scale: float,
+    window: int = 0, win_slots: int = 0, q2=None, k2_pages=None,
+    v_is_k: bool = False, mode: Optional[str] = None,
+):
+    """Paged decode attention over a ``(P, ps, Hkv, D)`` pool + page table.
+
+    See ``kernels.paged_attn`` for the argument contract (GQA and
+    MLA-latent layouts, sentinel slots, windowed modular tables).
+    """
+    _, fn = resolve(
+        "paged_attn", mode, b=q.shape[0], n_slots=tables.shape[1],
+        page_size=k_pages.shape[1],
+    )
+    return fn(
+        q, k_pages, v_pages, tables, lengths, scale=scale, window=window,
+        win_slots=win_slots, q2=q2, k2_pages=k2_pages, v_is_k=v_is_k,
+    )

@@ -1,26 +1,37 @@
-"""jit'd public wrappers for the Pallas kernels, with automatic fallback.
+"""jit'd public wrappers for the Pallas kernels.
 
-``use_pallas(...)`` decides per-platform: on TPU the compiled kernels run
-natively; on CPU (this container) they run in interpret mode inside tests
-and benchmarks, while the hot training path uses the jnp reference (the
-kernels are the TPU *target*, not a CPU win).
+Routing lives in ``kernels.dispatch`` (backend + shape + override); these
+wrappers keep the historical call signatures and translate the legacy
+``prefer_pallas``/``interpret`` knobs onto dispatch modes.  ``nm_mask`` is
+a training-time kernel and keeps its local TPU-or-reference switch until
+it migrates into the registry (registered as "future nm_mask" there).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import masking as ref_masking
+from repro.kernels import dispatch
 from repro.kernels.nm_mask import nm_mask_apply_pallas
-from repro.kernels.nm_spmm import nm_spmm_pallas
-from repro.kernels import ref
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _legacy_mode(
+    prefer_pallas: Optional[bool], interpret: Optional[bool]
+) -> Optional[str]:
+    """Map the legacy knobs onto a dispatch mode (None = dispatch decides)."""
+    if prefer_pallas is None:
+        return None
+    if not prefer_pallas:
+        return "xla"
+    itp = (not on_tpu()) if interpret is None else interpret
+    return "interpret" if itp else "pallas"
 
 
 def nm_mask_apply(
@@ -52,12 +63,16 @@ def nm_spmm(
     n: int,
     m: int,
     *,
+    o_true: Optional[int] = None,
     prefer_pallas: Optional[bool] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Compressed N:M matmul (serving path)."""
-    use = prefer_pallas if prefer_pallas is not None else on_tpu()
-    if use:
-        itp = (not on_tpu()) if interpret is None else interpret
-        return nm_spmm_pallas(x, values, indices, n, m, interpret=itp)
-    return ref.nm_spmm_ref(x, values, indices, n, m)
+    """Compressed N:M matmul (serving path), routed by ``kernels.dispatch``.
+
+    Off-TPU this runs the vectorized XLA path (``nm_spmm_xla``) — never the
+    Pallas interpreter, which is how the seed's compressed decode came in
+    ~8x slower than dense on CPU."""
+    return dispatch.nm_spmm(
+        x, values, indices, n, m, o_true=o_true,
+        mode=_legacy_mode(prefer_pallas, interpret),
+    )

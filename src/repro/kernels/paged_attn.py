@@ -1,0 +1,313 @@
+"""Pallas paged decode-attention: the kernel walks the page table directly.
+
+The PR-2 paged KV pool stored pages device-side but the decode step still
+*gathered* every lane's logical ``(B, S_max, ...)`` view contiguous before
+``layers.decode_attention`` — per step, per layer, the full logical cache
+was rewritten through HBM.  This kernel consumes the pool and the page
+table as-is: the grid's innermost dimension walks one lane's table slots,
+each step's BlockSpec index map reads ``tables[b, p]`` (scalar-prefetched,
+so the address is known before the body runs) and DMAs exactly that
+physical page HBM→VMEM, and a flash-style online softmax accumulates across
+pages in f32 VMEM scratch.  Sentinel (unmapped) slots clamp their DMA to a
+resident page and skip all compute under ``pl.when``; sliding-window lanes
+visit only slots whose logical page intersects the live window.
+
+Bytes per decode step (the quantity this kernel exists to shrink; measured
+fields ``kv_bytes_per_step`` / ``bytes_read_per_step`` in
+``BENCH_serve.json`` and ``kv_byte_ratio`` in ``BENCH_paged_attn.json``):
+the gathered path materializes every lane's full ``S_max`` logical view
+per layer per step; the kernel reads each lane's ``ceil(len/ps)`` live
+pages once.  Measured: the slab-vs-paged serve sweep averages ~24.3 KB of
+live KV per step (up to 5 concurrent heterogeneous lanes) where the
+gathered view is ~328 KB — a 13x byte gap — and the
+``kernel_bench`` paged-attn cases at 12.5–25% occupancy read 0.156x–0.312x
+of the gathered bytes.  The gap widens linearly with ``S_max / len``.
+
+Operand contract (kernel layout — callers reshape, see
+``models.cache.PagedLayout.attn_decode`` / ``models.mla.mla_decode``):
+
+    q         (B, Hkv, G, D)   queries grouped per KV head
+    k_pages   (P, ps, Hkv, D)  physical pool (P = num_pages, sentinel = P)
+    v_pages   (P, ps, Hkv, Dv) pool; pass ``v_is_k=True`` to reuse
+                               ``k_pages`` (MLA: V *is* the latent)
+    tables    (B, n_slots) int32 page table; slot value P means unmapped
+    lengths   (B,)        int32 live tokens per lane (pos + 1)
+    q2/k2_pages            optional second score stream, added into the
+                           logits pre-softmax (MLA: the RoPE key part)
+    window/win_slots       sliding-window width and modular table slots;
+                           slot ``s`` holds logical page ``pg`` with
+                           ``pg ≡ s (mod win_slots)``
+
+Two shapes cover the zoo:
+
+- **GQA**: ``G = H // Hkv``, ``D = Dv = head_dim``.
+- **MLA-latent** (absorbed decode): ``Hkv = 1``, ``G = H``,
+  ``D = kv_lora``, ``q2/k2`` carry the shared RoPE key, ``v_is_k=True``
+  so the latent pool is streamed once and ``o = p @ c_kv`` comes back in
+  latent space (the caller up-projects with the absorbed ``W_uv``).
+
+``paged_attn_xla`` is the parity oracle: the same masking math on the
+table-gathered view (it *does* materialize ``(B, n_slots·ps, ...)`` — that
+is the point of reference, not a production route).  Accumulation order
+differs (per-page flash vs one softmax), so parity is fp-tolerance, not
+bit-level; see ``tests/test_paged_attn.py`` for the locked tolerances.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import dispatch
+
+_NEG = -1e30  # finite -inf stand-in: keeps masked lanes exp()-safe
+
+
+def _paged_attn_kernel(
+    tables_ref,  # (B, n_slots) int32, scalar-prefetched
+    lengths_ref,  # (B,) int32, scalar-prefetched
+    *refs,
+    page_size: int,
+    window: int,
+    win_slots: int,
+    scale: float,
+    sentinel: int,
+    has_k2: bool,
+    v_is_k: bool,
+):
+    it = iter(refs)
+    q_ref = next(it)
+    q2_ref = next(it) if has_k2 else None
+    k_ref = next(it)
+    k2_ref = next(it) if has_k2 else None
+    v_ref = k_ref if v_is_k else next(it)
+    o_ref = next(it)
+    m_scr, l_scr, acc_scr = it
+
+    b, h, p = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+    phys = tables_ref[b, p]
+    ps = page_size
+    if window:
+        # modular table: slot p holds the newest logical page ≡ p (mod slots)
+        cur_pg = jnp.maximum(length - 1, 0) // ps
+        pg = cur_pg - jnp.mod(cur_pg - p, win_slots)
+        lo = jnp.maximum(length - window, 0)
+    else:
+        pg = p
+        lo = 0
+    base = pg * ps
+    live = (
+        (phys != sentinel)
+        & (length > 0)
+        & (base < length)
+        & (base + ps > lo)
+    )
+    if window:
+        live &= pg >= 0  # slot not yet reached by this lane
+
+    @pl.when(live)
+    def _page():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (ps, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (G, ps)
+        if has_k2:
+            q2 = q2_ref[0, 0].astype(jnp.float32)
+            k2 = k2_ref[0, :, 0, :].astype(jnp.float32)
+            s = s + jax.lax.dot_general(
+                q2, k2, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        s = s * scale
+        apos = base + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        ok = (apos < length) & (apos >= lo)
+        s = jnp.where(ok, s, _NEG)
+        m_prev = m_scr[:, :1]  # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        pexp = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_scr[:, :1] + jnp.sum(pexp, axis=-1, keepdims=True)
+        v = k if v_is_k else v_ref[0, :, 0, :].astype(jnp.float32)  # (ps, Dv)
+        acc_scr[...] = corr * acc_scr[...] + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(p == pl.num_programs(2) - 1)
+    def _flush():
+        # dead lanes (l == 0) flush exact zeros, not NaNs
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.maximum(l_scr[:, :1], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "scale", "window", "win_slots", "v_is_k", "interpret",
+    ),
+)
+def paged_attn_pallas(
+    q: jnp.ndarray,  # (B, Hkv, G, D)
+    k_pages: jnp.ndarray,  # (P, ps, Hkv, D)
+    v_pages: Optional[jnp.ndarray],  # (P, ps, Hkv, Dv) or None when v_is_k
+    tables: jnp.ndarray,  # (B, n_slots) int32
+    lengths: jnp.ndarray,  # (B,) int32
+    *,
+    scale: float,
+    window: int = 0,
+    win_slots: int = 0,
+    q2: Optional[jnp.ndarray] = None,  # (B, Hkv, G, D2)
+    k2_pages: Optional[jnp.ndarray] = None,  # (P, ps, Hkv, D2)
+    v_is_k: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused paged decode attention; returns ``(B, Hkv, G, Dv)``.
+
+    Grid ``(B, Hkv, n_slots)`` with the table slot innermost; page blocks
+    are addressed through the scalar-prefetched table so only mapped pages
+    move HBM→VMEM (consecutive sentinel slots clamp to the same resident
+    page and re-use the previous DMA).
+    """
+    b, hkv, g, d = q.shape
+    p_pages, ps = k_pages.shape[0], k_pages.shape[1]
+    n_slots = tables.shape[1]
+    has_k2 = q2 is not None
+    dv = d if v_is_k else v_pages.shape[-1]
+
+    def q_index(b_, h_, p_, tables_, lengths_):
+        return (b_, h_, 0, 0)
+
+    def page_index(b_, h_, p_, tables_, lengths_):
+        return (jnp.minimum(tables_[b_, p_], p_pages - 1), 0, h_, 0)
+
+    in_specs = [pl.BlockSpec((1, 1, g, d), q_index)]
+    operands = [q]
+    if has_k2:
+        in_specs.append(pl.BlockSpec((1, 1, g, q2.shape[-1]), q_index))
+        operands.append(q2)
+    in_specs.append(pl.BlockSpec((1, ps, 1, d), page_index))
+    operands.append(k_pages)
+    if has_k2:
+        in_specs.append(pl.BlockSpec((1, ps, 1, k2_pages.shape[-1]), page_index))
+        operands.append(k2_pages)
+    if not v_is_k:
+        in_specs.append(pl.BlockSpec((1, ps, 1, dv), page_index))
+        operands.append(v_pages)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_slots),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, dv), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),  # running max
+            pltpu.VMEM((g, 128), jnp.float32),  # running denominator
+            pltpu.VMEM((g, dv), jnp.float32),  # output accumulator
+        ],
+    )
+    kernel = functools.partial(
+        _paged_attn_kernel,
+        page_size=ps,
+        window=window,
+        win_slots=win_slots,
+        scale=scale,
+        sentinel=p_pages,
+        has_k2=has_k2,
+        v_is_k=v_is_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), *operands)
+
+
+# ---------------------------------------------------------------------------
+# XLA oracle: identical masking math on the table-gathered view
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "win_slots", "v_is_k")
+)
+def paged_attn_xla(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: Optional[jnp.ndarray],
+    tables: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    scale: float,
+    window: int = 0,
+    win_slots: int = 0,
+    q2: Optional[jnp.ndarray] = None,
+    k2_pages: Optional[jnp.ndarray] = None,
+    v_is_k: bool = False,
+) -> jnp.ndarray:
+    """Gathered reference: materializes the ``(B, n_slots·ps, ...)`` view
+    (exactly what the kernel exists to avoid) and applies the same
+    per-position masks.  Parity oracle + off-TPU fallback for callers that
+    already hold kernel-layout operands."""
+    b, hkv, g, d = q.shape
+    p_pages, ps = k_pages.shape[0], k_pages.shape[1]
+    n_slots = tables.shape[1]
+    lengths = lengths.reshape(b, 1).astype(jnp.int32)
+    slot = jnp.arange(n_slots)[None, :]  # (1, S)
+    if window:
+        cur_pg = jnp.maximum(lengths - 1, 0) // ps
+        pg = cur_pg - jnp.mod(cur_pg - slot, win_slots)
+        lo = jnp.maximum(lengths - window, 0)
+    else:
+        pg = jnp.broadcast_to(slot, (b, n_slots))
+        lo = jnp.zeros((b, 1), jnp.int32)
+    base = pg * ps
+    apos = base[..., None] + jnp.arange(ps)[None, None, :]  # (B, S, ps)
+    valid = (
+        (apos < lengths[..., None])
+        & (apos >= lo[..., None])
+        & (tables[..., None] != p_pages)
+        & (pg[..., None] >= 0)
+    )
+    phys = jnp.minimum(tables, p_pages - 1)  # (B, S)
+    kg = k_pages[phys]  # (B, S, ps, Hkv, D) — the gather
+    s = jnp.einsum(
+        "bhgd,bsphd->bhgsp", q.astype(jnp.float32), kg.astype(jnp.float32)
+    )
+    if q2 is not None:
+        k2g = k2_pages[phys]
+        s = s + jnp.einsum(
+            "bhgd,bsphd->bhgsp", q2.astype(jnp.float32), k2g.astype(jnp.float32)
+        )
+    s = jnp.where(valid[:, None, None], s * scale, _NEG)
+    m = jnp.max(s, axis=(-2, -1), keepdims=True)
+    pexp = jnp.exp(s - m) * valid[:, None, None]
+    denom = jnp.maximum(jnp.sum(pexp, axis=(-2, -1), keepdims=True), 1e-30)
+    vg = kg if v_is_k else v_pages[phys]
+    out = jnp.einsum("bhgsp,bsphd->bhgd", pexp / denom, vg.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+dispatch.register(
+    "paged_attn", "pallas", functools.partial(paged_attn_pallas, interpret=False)
+)
+dispatch.register(
+    "paged_attn", "interpret", functools.partial(paged_attn_pallas, interpret=True)
+)
+dispatch.register("paged_attn", "xla", paged_attn_xla)

@@ -205,6 +205,20 @@ class PagedLayout:
     def _windowed(self, window: Optional[int]) -> bool:
         return window is not None and window <= self.max_len
 
+    # -- kernel-facing geometry --------------------------------------------
+    #
+    # The Pallas paged-attention fast path (kernels.paged_attn, routed by
+    # kernels.dispatch) consumes the raw pool + page table; these helpers
+    # hand it the table and its modular-window parameters without the
+    # caller re-deriving layout internals.
+
+    def table_key(self, window: Optional[int]) -> str:
+        return "win" if self._windowed(window) else "full"
+
+    def view_window(self, window: Optional[int]) -> int:
+        """Live-window width for the kernel (0 = full / append-only)."""
+        return min(self.max_len, window) if self._windowed(window) else 0
+
     def _view_index(self, pos, window):
         """(abs positions (B, S_view), table-slot indices (B, S_view), table key)."""
         ps = self.page_size
@@ -234,35 +248,56 @@ class PagedLayout:
 
     # -- decode-step read/write --------------------------------------------
 
-    def attn_rw(self, c: dict, k_new, v_new, pos, tables, window):
-        a, tslot, key = self._view_index(pos, window)
-        pt = tables[key]
+    def attn_write(self, c: dict, k_new, v_new, pos, tables, window) -> dict:
+        """Scatter one token per lane into its page; no logical view built.
+
+        This is the whole device-side cache mutation of the paged fast
+        path: the Pallas kernel reads the pool through the table directly,
+        so — unlike :meth:`attn_rw` — no contiguous ``(B, S, ...)`` view is
+        ever materialized.
+        """
+        pt = tables[self.table_key(window)]
         kf = c["k"].reshape((-1,) + c["k"].shape[2:])
         vf = c["v"].reshape((-1,) + c["v"].shape[2:])
         widx = self._write_slot(pt, pos, window)
         kf = kf.at[widx].set(k_new, mode="drop")
         vf = vf.at[widx].set(v_new, mode="drop")
-        k_view = self._gather(kf, pt, a, tslot)
-        v_view = self._gather(vf, pt, a, tslot)
-        return k_view, v_view, {
-            "k": kf.reshape(c["k"].shape),
-            "v": vf.reshape(c["v"].shape),
-        }
+        return {"k": kf.reshape(c["k"].shape), "v": vf.reshape(c["v"].shape)}
 
-    def mla_rw(self, c: dict, ckv_new, krope_new, pos, tables):
-        a, tslot, key = self._view_index(pos, None)
-        pt = tables[key]
+    def mla_write(self, c: dict, ckv_new, krope_new, pos, tables) -> dict:
+        """Latent-cache analogue of :meth:`attn_write` (append-only table)."""
+        pt = tables["full"]
         cf = c["ckv"].reshape((-1,) + c["ckv"].shape[2:])
         rf = c["krope"].reshape((-1,) + c["krope"].shape[2:])
         widx = self._write_slot(pt, pos, None)
         cf = cf.at[widx].set(ckv_new, mode="drop")
         rf = rf.at[widx].set(krope_new, mode="drop")
-        ckv_view = self._gather(cf, pt, a, tslot)
-        krope_view = self._gather(rf, pt, a, tslot)
-        return ckv_view, krope_view, {
+        return {
             "ckv": cf.reshape(c["ckv"].shape),
             "krope": rf.reshape(c["krope"].shape),
         }
+
+    def attn_rw(self, c: dict, k_new, v_new, pos, tables, window):
+        """Write + *gathered* logical view — the parity reference path
+        (bit-identical to the slab; see module docstring)."""
+        new = self.attn_write(c, k_new, v_new, pos, tables, window)
+        a, tslot, key = self._view_index(pos, window)
+        pt = tables[key]
+        kf = new["k"].reshape((-1,) + new["k"].shape[2:])
+        vf = new["v"].reshape((-1,) + new["v"].shape[2:])
+        k_view = self._gather(kf, pt, a, tslot)
+        v_view = self._gather(vf, pt, a, tslot)
+        return k_view, v_view, new
+
+    def mla_rw(self, c: dict, ckv_new, krope_new, pos, tables):
+        new = self.mla_write(c, ckv_new, krope_new, pos, tables)
+        a, tslot, key = self._view_index(pos, None)
+        pt = tables[key]
+        cf = new["ckv"].reshape((-1,) + new["ckv"].shape[2:])
+        rf = new["krope"].reshape((-1,) + new["krope"].shape[2:])
+        ckv_view = self._gather(cf, pt, a, tslot)
+        krope_view = self._gather(rf, pt, a, tslot)
+        return ckv_view, krope_view, new
 
     # -- batched prefill writes --------------------------------------------
 

@@ -9,9 +9,10 @@ Conventions
   single dispatch point that makes the layer stack polymorphic over dense
   arrays and N:M-compressed ``sparse_infer.CompressedTensor`` leaves: the
   serving engine passes the compressed tree straight into
-  ``prefill``/``decode_step`` and compressed weights route through the
-  ``kernels.ops.nm_spmm`` path (Pallas on TPU) with no dense
-  rehydration in HBM.
+  ``prefill``/``decode_step`` and compressed weights route through
+  ``kernels.ops.nm_spmm`` — backend-routed by ``kernels.dispatch`` to the
+  Pallas kernel on TPU or the vectorized XLA path elsewhere — with no
+  dense rehydration in HBM.
 - Attention is implemented with an online-softmax scan over KV chunks
   (flash-attention style) so the 32k-prefill cells never materialize a
   (S, S) score matrix — this is the TPU-native memory-hierarchy adaptation
@@ -54,15 +55,20 @@ def _compressed_matmul(x: jnp.ndarray, w: CompressedTensor) -> jnp.ndarray:
     v, idx = w.values, w.indices
     # groups must run along the contraction axis (axis -2 of the weight)
     assert w.group_axis % v.ndim == v.ndim - 2, (w.group_axis, v.shape)
+    o_true = w.out_features  # strips compress-time MXU alignment columns
     if v.ndim == 2:
         lead = x.shape[:-1]
-        y = kernel_ops.nm_spmm(x.reshape(-1, x.shape[-1]), v, idx, w.n, w.m)
-        return y.reshape(lead + (v.shape[-1],))
+        y = kernel_ops.nm_spmm(
+            x.reshape(-1, x.shape[-1]), v, idx, w.n, w.m, o_true=o_true
+        )
+        return y.reshape(lead + (o_true,))
     if v.ndim == 3 and x.ndim == 3:
         # stacked weights (experts (E, in, out) / scan blocks): map the
         # 2-D kernel over the leading axis
         return jax.vmap(
-            lambda xe, ve, ie: kernel_ops.nm_spmm(xe, ve, ie, w.n, w.m)
+            lambda xe, ve, ie: kernel_ops.nm_spmm(
+                xe, ve, ie, w.n, w.m, o_true=o_true
+            )
         )(x, v, idx)
     raise ValueError(
         f"unsupported compressed matmul: x {x.shape} @ values {v.shape}"

@@ -16,8 +16,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models.cache import SlabLayout
+from repro.kernels import dispatch
+from repro.models.cache import PagedLayout, SlabLayout
 from repro.models.layers import apply_rope, chunked_attention, decode_attention, matmul
+from repro.sparse_infer.compress import CompressedTensor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +63,23 @@ def _expand_kv(c_kv, p, n_heads: int, cfg: MLAConfig):
     nd, vd = cfg.nope_head_dim, cfg.v_head_dim
     ukv = matmul(c_kv, p["w_ukv"]).reshape(b, s, n_heads, nd + vd)
     return ukv[..., :nd], ukv[..., nd:]  # k_nope, v
+
+
+def _absorbed_ukv(p, n_heads: int, cfg: MLAConfig):
+    """``(W_uk, W_uv)`` as ``(kv_lora, H, nd)`` / ``(kv_lora, H, vd)`` for
+    the latent-space (absorbed) decode.
+
+    A compressed ``w_ukv`` is decompressed here *inside the jitted step*:
+    that trades one weight's worth of decompress work for skipping the
+    per-token ``(B, S, H, nd+vd)`` K/V expansion — strictly less compute
+    and HBM traffic than the reference path, which reads the same weight
+    *and* runs the expansion matmul over every cached token.
+    """
+    w = p["w_ukv"]
+    wd = w.dense() if isinstance(w, CompressedTensor) else w
+    nd, vd = cfg.nope_head_dim, cfg.v_head_dim
+    wd = wd.reshape(cfg.kv_lora, n_heads, nd + vd)
+    return wd[..., :nd], wd[..., nd:]
 
 
 def mla_attention(
@@ -125,7 +144,41 @@ def mla_decode(
         :, :, 0, :
     ]
 
-    # write the new latent at position cache_len; read back the logical view
+    if isinstance(layout, PagedLayout) and dispatch.uses_kernel(
+        "paged_attn", b=b, n_slots=tables["full"].shape[1],
+        page_size=layout.page_size,
+    ):
+        # fast path: attend *in latent space* through the page table.
+        # W_ukv is absorbed into the query / output projections
+        # (DeepSeek-V2's decode identity: q·(c W_uk) = (q W_ukᵀ)·c and
+        # Σ p·(c W_uv) = (Σ p·c) W_uv), so the per-token K/V expansion —
+        # and the contiguous (B, S, H, nd+vd) views it fed — vanish; the
+        # kernel streams each live latent page exactly once (V *is* the
+        # latent: ``v_is_k``).
+        new_cache = layout.mla_write(
+            cache, c_kv_new[:, 0], k_rope_new[:, 0], pos, tables
+        )
+        wk, wv = _absorbed_ukv(p, n_heads, cfg)
+        q_lat = jnp.einsum(
+            "bhd,lhd->bhl",
+            q_nope[:, 0].astype(jnp.float32), wk.astype(jnp.float32),
+        )  # (B, H, kv_lora)
+        o_lat = dispatch.paged_attn(
+            q_lat[:, None],  # (B, 1, H, kv_lora): Hkv=1, G=H
+            new_cache["ckv"][:, :, None, :], None, tables["full"], pos + 1,
+            scale=(nd + rd) ** -0.5,
+            q2=q_rope[:, 0].astype(jnp.float32)[:, None],
+            k2_pages=new_cache["krope"][:, :, None, :],
+            v_is_k=True,
+        )  # (B, 1, H, kv_lora)
+        out = jnp.einsum(
+            "bhl,lhv->bhv", o_lat[:, 0], wv.astype(jnp.float32)
+        ).astype(x.dtype)
+        out = out.reshape(b, 1, n_heads * vd)
+        return matmul(out, p["w_o"]), new_cache
+
+    # reference path: write the new latent at position cache_len; read back
+    # the logical view and re-expand K/V per token
     ckv_view, krope_view, new_cache = layout.mla_rw(
         cache, c_kv_new[:, 0], k_rope_new[:, 0], pos, tables
     )

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels import dispatch
 from repro.models import cache as C
 from repro.models import layers as L
 from repro.models import mla as MLA
@@ -567,13 +568,36 @@ def _attn_decode(x, p, cfg: ArchConfig, c: dict, pos, layout, tables):
         q = L.apply_mrope(q, p3, theta=cfg.rope_theta)
         k = L.apply_mrope(k, p3, theta=cfg.rope_theta)
 
-    # write the new token, read the logical (oldest→newest) view back —
-    # through the slab or the page table, the decode math is the same
-    k_view, v_view, new_c = layout.attn_rw(
-        c, k[:, 0], v[:, 0], pos, tables, cfg.local_window
-    )
-    s_view = k_view.shape[1]
-    out = L.decode_attention(q, k_view, v_view, jnp.minimum(pos, s_view - 1) + 1)
+    if isinstance(layout, C.PagedLayout) and dispatch.uses_kernel(
+        "paged_attn", b=b, n_slots=tables[layout.table_key(cfg.local_window)].shape[1],
+        page_size=layout.page_size,
+    ):
+        # fast path: scatter the new token into its page, then attend
+        # through the page table directly — no contiguous (B, S, ...) K/V
+        # view is gathered per step (kernels/paged_attn.py)
+        new_c = layout.attn_write(
+            c, k[:, 0], v[:, 0], pos, tables, cfg.local_window
+        )
+        win = layout.view_window(cfg.local_window)
+        qg = q[:, 0].reshape(b, kv, h // kv, hd)
+        out = dispatch.paged_attn(
+            qg, new_c["k"], new_c["v"],
+            tables[layout.table_key(cfg.local_window)], pos + 1,
+            scale=hd ** -0.5, window=win,
+            win_slots=layout.pages_win if win else 0,
+        )
+        out = out.reshape(b, 1, h, hd)
+    else:
+        # reference path: write the new token, read the logical
+        # (oldest→newest) view back — through the slab or the page table,
+        # the decode math is the same
+        k_view, v_view, new_c = layout.attn_rw(
+            c, k[:, 0], v[:, 0], pos, tables, cfg.local_window
+        )
+        s_view = k_view.shape[1]
+        out = L.decode_attention(
+            q, k_view, v_view, jnp.minimum(pos, s_view - 1) + 1
+        )
     out = L.matmul(out.reshape(b, 1, h * hd), p["wo"])
     if cfg.o_bias:
         out = out + p["bias_o"]

@@ -64,6 +64,7 @@ from repro.models.cache import SlabLayout
 from repro.models.model import TransformerLM, _block_mixer_mlp, layer_plan
 from repro.serving.kv_pool import PagedKVPool
 from repro.serving.sampling import SamplingParams, sample_tokens
+from repro.sparse_infer.compress import CompressedTensor
 
 
 @dataclasses.dataclass
@@ -173,6 +174,8 @@ class DecodeEngine:
         self.decode_wall_s = 0.0
         self._util_sum = 0.0
         self._util_n = 0
+        self._kv_bytes_sum = 0.0  # live KV bytes summed over decode steps
+        self._kv_row_b: Optional[tuple[int, int]] = None  # _kv_row_bytes cache
 
         # recurrent state cannot absorb pad tokens: group by exact length
         plan = layer_plan(model.cfg)
@@ -409,6 +412,7 @@ class DecodeEngine:
             return out
         self._util_sum += self._cache_utilization()
         self._util_n += 1
+        self._kv_bytes_sum += self._live_kv_bytes()
         if self.pool is not None:
             self.cache["tables"] = self.pool.device_tables()
         self.key, sub = jax.random.split(self.key)
@@ -478,6 +482,66 @@ class DecodeEngine:
             live = sum(min(p, self.max_len) for p in lane_lens.values())
         return live / denom if denom else 0.0
 
+    def weight_bytes_per_step(self) -> int:
+        """HBM weight bytes one decode step must read: every parameter leaf
+        once, ``CompressedTensor`` leaves at their *stored* (compressed)
+        size — the numerator of the N:M bandwidth win.  MoE archs overcount
+        by the unrouted experts (all experts are resident; a step reads
+        only top-k), so treat this as the dense-roofline bound.
+        """
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(
+            self.params, is_leaf=lambda x: isinstance(x, CompressedTensor)
+        ):
+            total += int(leaf.nbytes)
+        return total
+
+    def _kv_row_bytes(self) -> tuple[int, int]:
+        """(append-only, windowed) cache bytes per token per lane, summed
+        over layers.  Constant for the engine's lifetime — computed once
+        (step() calls this per decode step)."""
+        if self._kv_row_b is not None:
+            return self._kv_row_b
+        cfg = self.model.cfg
+        itemsize = jnp.dtype(cfg.param_dtype).itemsize
+        plan = layer_plan(cfg)
+        kinds = list(plan.head) + list(plan.period) * plan.n_body + list(plan.tail)
+        full_b = win_b = 0
+        windowed = (
+            cfg.local_window is not None and cfg.local_window <= self.max_len
+        )
+        for kind in kinds:
+            mixer = _block_mixer_mlp(kind, cfg)[0]
+            if mixer == "attn":
+                rb = 2 * cfg.n_kv * cfg.hd * itemsize
+                if windowed:
+                    win_b += rb
+                else:
+                    full_b += rb
+            elif mixer == "mla":
+                full_b += (cfg.mla.kv_lora + cfg.mla.rope_head_dim) * itemsize
+        self._kv_row_b = (full_b, win_b)
+        return self._kv_row_b
+
+    def _live_kv_bytes(self) -> int:
+        """KV bytes the *paged fast path* reads this step: each active
+        lane's live tokens once.  (The gathered reference reads — and
+        rewrites — the full ``B × S_max`` view instead; the slab engine
+        has no choice.  This is the bytes-read-per-step roofline input
+        that ``benchmarks/serve_bench.py`` records.)"""
+        full_b, win_b = self._kv_row_bytes()
+        win = (
+            min(self.max_len, self.model.cfg.local_window)
+            if self.model.cfg.local_window is not None
+            else self.max_len
+        )
+        total = 0
+        for s in self.slots:
+            if s is not None:
+                total += full_b * min(s.pos + 1, self.max_len)
+                total += win_b * min(s.pos + 1, win)
+        return total
+
     def kv_cache_bytes(self) -> int:
         """Device bytes held by attention/MLA cache storage (slab or pool)."""
         plan = layer_plan(self.model.cfg)
@@ -502,6 +566,10 @@ class DecodeEngine:
         # throughput counts only decode-produced tokens over decode wall time;
         # each request's first token comes from (untimed) prefill and would
         # otherwise inflate tokens/s
+        wb = self.weight_bytes_per_step()
+        kvb = (
+            self._kv_bytes_sum / self.decode_steps if self.decode_steps else 0.0
+        )
         st = {
             "layout": self.layout.kind,
             "decode_steps": self.decode_steps,
@@ -521,6 +589,10 @@ class DecodeEngine:
                 if self.decode_steps
                 else 0.0
             ),
+            # decode-step roofline inputs: weight stream + mean live-KV read
+            "weight_bytes_per_step": wb,
+            "kv_bytes_per_step": kvb,
+            "bytes_read_per_step": wb + kvb,
             "tokens_per_s": (
                 self.decode_tokens / self.decode_wall_s
                 if self.decode_wall_s > 0

@@ -210,7 +210,15 @@ class PagedKVPool:
     # -- device view ---------------------------------------------------------
 
     def device_tables(self) -> dict:
-        """The page tables as device arrays (re-uploaded only when dirty)."""
+        """The page tables as device arrays (re-uploaded only when dirty).
+
+        The arrays are already in *kernel layout*: contiguous ``(max_batch,
+        n_slots)`` int32 with the out-of-bounds sentinel ``num_pages`` in
+        every unmapped slot — exactly the operand ``kernels.paged_attn``
+        scalar-prefetches to compute page addresses, and the same array the
+        gathered reference path indexes.  No per-step reshaping or
+        re-encoding happens between the host allocator and the kernel.
+        """
         if self._dirty or self._dev_tables is None:
             t = {}
             if self.layout.pages_full:

@@ -36,9 +36,14 @@ class CompressedTensor:
     """An N:M-compressed weight: kept values + uint8 in-group offsets.
 
     Pytree children: ``(values, indices)``. Static aux: ``(n, m, group_axis,
-    shape)`` — ``shape`` records the dense shape at construction time (for
-    reporting; transformations like ``lax.scan`` that slice the children
-    leave it untouched, so derive live shapes from ``values`` when needed).
+    shape, pad)`` — ``shape`` records the dense shape at construction time
+    (for reporting; transformations like ``lax.scan`` that slice the
+    children leave it untouched, so derive live shapes from ``values`` when
+    needed).  ``pad`` is the number of MXU-alignment columns appended to
+    the *last* axis at compress time (see :func:`compress_params`): the
+    kernels slice it off their result, so it never leaks into the math, and
+    because it is stored in the static aux it survives ``lax.scan`` /
+    ``vmap`` slicing of stacked layer blocks where ``shape`` goes stale.
     """
 
     values: jnp.ndarray
@@ -47,38 +52,76 @@ class CompressedTensor:
     m: int
     group_axis: int
     shape: tuple  # dense shape at construction
+    pad: int = 0  # alignment columns on the last axis of values/indices
 
     def tree_flatten(self):
-        return (self.values, self.indices), (self.n, self.m, self.group_axis, self.shape)
+        return (self.values, self.indices), (
+            self.n, self.m, self.group_axis, self.shape, self.pad,
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         values, indices = children
-        n, m, group_axis, shape = aux
-        return cls(values, indices, n, m, group_axis, shape)
+        return cls(values, indices, *aux)
 
     def dense(self) -> jnp.ndarray:
-        return nm_decompress(
+        d = nm_decompress(
             self.values, self.indices, self.n, self.m, self.group_axis
         )
+        return d[..., : d.shape[-1] - self.pad] if self.pad else d
+
+    @property
+    def out_features(self) -> int:
+        """True (unpadded) width of the last axis."""
+        return self.values.shape[-1] - self.pad
 
     @property
     def nbytes(self) -> int:
+        """Stored bytes — alignment padding included (it occupies HBM)."""
         return int(
             self.values.size * self.values.dtype.itemsize
             + self.indices.size * self.indices.dtype.itemsize
         )
 
 
-def compress_params(params: Any, cfg: SparsityConfig) -> Any:
-    """Replace every maskable leaf with its N:M-compressed form."""
+def compress_params(
+    params: Any, cfg: SparsityConfig, align: int | None = None
+) -> Any:
+    """Replace every maskable leaf with its N:M-compressed form.
+
+    ``align``: pad the last (output) axis of each compressed buffer to this
+    multiple at *compress time*, so the Pallas ``nm_spmm`` grid tiles the
+    artifact without a per-call ``jnp.pad`` in the decode hot loop.  The
+    true width rides on ``CompressedTensor.pad``.  Default: 128 (one MXU
+    lane tile) when exporting on TPU, 1 (no padding) elsewhere — off-TPU
+    the XLA path is alignment-indifferent and padding would only distort
+    the compression ratio of tiny smoke models.  The default is keyed to
+    the backend *compressing*, which matches the in-process flow
+    (``launch/serve.py`` compresses on the machine that serves); when
+    exporting a checkpoint on CPU for later TPU serving, pass
+    ``align=128`` explicitly — an unaligned artifact still runs on TPU
+    but re-enters ``nm_spmm_pallas``'s per-call pad fallback for
+    non-gcd-friendly widths.  Only reduction-axis compressions
+    (``group_axis == ndim-2``, the matmul layout) are padded.
+    """
+    if align is None:
+        align = 128 if jax.default_backend() == "tpu" else 1
 
     def leaf(name, p):
         pat = cfg.pattern_for(name, tuple(p.shape))
         if pat is None or p.ndim < 2:
             return p
         v, i = nm_compress(p, pat.n, pat.m, pat.group_axis)
-        return CompressedTensor(v, i, pat.n, pat.m, pat.group_axis, tuple(p.shape))
+        pad = 0
+        if align > 1 and pat.group_axis % p.ndim == p.ndim - 2:
+            pad = -v.shape[-1] % align
+            if pad:
+                widths = ((0, 0),) * (v.ndim - 1) + ((0, pad),)
+                v = jnp.pad(v, widths)
+                i = jnp.pad(i, widths)
+        return CompressedTensor(
+            v, i, pat.n, pat.m, pat.group_axis, tuple(p.shape), pad
+        )
 
     return tree_map_with_name(leaf, params)
 

@@ -1,0 +1,202 @@
+"""kernels.dispatch routing + the XLA nm_spmm production path + compress-
+time padding (the no-interpret-in-the-hot-loop satellites of the paged-
+attention PR)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core as core
+from repro.kernels import dispatch, ref
+from repro.kernels.nm_spmm import (
+    GATHER_ROWS,
+    nm_spmm_pallas,
+    nm_spmm_xla,
+    pallas_shape_ok,
+    pick_bk,
+)
+from repro.kernels.ops import nm_spmm
+from repro.sparse_infer import compress_params
+from repro.sparse_infer.compress import CompressedTensor
+from repro.models.layers import matmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_modes():
+    reg = dispatch.registered()
+    for kernel in ("nm_spmm", "paged_attn"):
+        assert set(reg[kernel]) == {"pallas", "interpret", "xla"}
+
+
+def test_default_off_tpu_is_xla_never_interpret():
+    """The seed pathology: no production route may hit the interpreter."""
+    assert jax.default_backend() != "tpu"
+    mode, _ = dispatch.resolve("nm_spmm", b=4, k=64, o=64, n=2, m=4)
+    assert mode == "xla"
+    mode, _ = dispatch.resolve("paged_attn", b=2, n_slots=4, page_size=8)
+    assert mode == "xla"
+    assert not dispatch.uses_kernel("paged_attn", b=2, n_slots=4, page_size=8)
+
+
+def test_force_mode_and_env_override(monkeypatch):
+    with dispatch.force_mode("interpret"):
+        assert dispatch.resolve("nm_spmm", b=1, k=64, o=64, n=2, m=4)[0] == "interpret"
+        with dispatch.force_mode("xla"):  # innermost wins
+            assert dispatch.resolve("nm_spmm", b=1, k=64, o=64, n=2, m=4)[0] == "xla"
+    monkeypatch.setenv(dispatch.ENV_VAR, "interpret")
+    assert dispatch.resolve("paged_attn", b=1, n_slots=2, page_size=8)[0] == "interpret"
+    monkeypatch.setenv(dispatch.ENV_VAR, "bogus")
+    with pytest.raises(ValueError):
+        dispatch.resolve("paged_attn", b=1, n_slots=2, page_size=8)
+
+
+def test_explicit_mode_beats_force():
+    with dispatch.force_mode("xla"):
+        assert dispatch.resolve("nm_spmm", mode="interpret")[0] == "interpret"
+
+
+def test_legacy_wrapper_mapping():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+    v, i = ref.nm_compress(w, 2, 4, 0)
+    yr = ref.nm_spmm_ref(x, v, i, 2, 4)
+    for kw in (dict(prefer_pallas=False), dict(prefer_pallas=True, interpret=True),
+               dict()):
+        y = nm_spmm(x, v, i, 2, 4, **kw)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gcd block pick + shape guard (no decrement scans, no degenerate grids)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k,n,m,expect", [
+    (512, 2, 4, 512), (384, 1, 4, 128), (768, 4, 8, 256),
+    (96, 2, 8, 32), (4096, 8, 32, 512),
+])
+def test_pick_bk_valid_and_large(k, n, m, expect):
+    bk = pick_bk(k, n, m)
+    assert k % bk == 0 and (bk * n) % m == 0
+    assert bk == expect
+
+
+def test_unaligned_o_uses_runtime_pad_fallback():
+    """An unpadded (CPU-exported) artifact with a non-gcd-friendly output
+    width still runs on the Pallas route via the runtime pad."""
+    assert pallas_shape_ok(4, 64, 300, 2, 4)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 300))
+    v, i = ref.nm_compress(w, 2, 4, 0)
+    y = nm_spmm_pallas(x, v, i, 2, 4, interpret=True)
+    assert y.shape == (4, 300)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ref.nm_spmm_ref(x, v, i, 2, 4)), atol=1e-4
+    )
+
+
+def test_degenerate_k_routes_to_xla():
+    # 514 = 2·257: the only valid blocks are 2 and 514 — old code scanned
+    # down to bk=2; the guard refuses the Pallas route instead
+    assert pick_bk(514, 2, 4) == 2
+    assert not pallas_shape_ok(1, 514, 256, 2, 4)
+    assert pallas_shape_ok(1, 512, 256, 2, 4)
+
+
+# ---------------------------------------------------------------------------
+# XLA production path: both regimes vs the oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b", [1, GATHER_ROWS, GATHER_ROWS + 1, 64])
+@pytest.mark.parametrize("n,m", [(2, 4), (1, 4), (4, 8)])
+def test_nm_spmm_xla_matches_ref(b, n, m):
+    k, o = 128, 96
+    x = jax.random.normal(jax.random.PRNGKey(b), (b, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, o), jnp.float32)
+    v, i = ref.nm_compress(w, n, m, 0)
+    np.testing.assert_allclose(
+        np.asarray(nm_spmm_xla(x, v, i, n, m)),
+        np.asarray(ref.nm_spmm_ref(x, v, i, n, m)),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+def test_nm_spmm_xla_bf16():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 64), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32), jnp.bfloat16)
+    v, i = ref.nm_compress(w, 2, 4, 0)
+    y = nm_spmm_xla(x, v, i, 2, 4)
+    assert y.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32),
+        np.asarray(ref.nm_spmm_ref(x, v, i, 2, 4), np.float32),
+        atol=0.3, rtol=1e-2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# compress-time MXU alignment (padding hoisted out of the kernel call)
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed=0, d=64, o=48):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (d, o), jnp.float32)
+    return {"blk": {"w_fc": w}}
+
+
+def test_compress_align_pads_and_slices():
+    params = _tree()
+    cfg = core.SparsityConfig(default=core.NMSparsity(2, 4))
+    comp = compress_params(params, cfg, align=128)
+    ct = comp["blk"]["w_fc"]
+    assert isinstance(ct, CompressedTensor)
+    assert ct.values.shape[-1] == 128 and ct.pad == 80
+    assert ct.out_features == 48 and ct.shape == (64, 48)
+    # padding never leaks: dense() and both kernel routes slice it off
+    np.testing.assert_allclose(
+        np.asarray(ct.dense()),
+        np.asarray(compress_params(params, cfg, align=1)["blk"]["w_fc"].dense()),
+    )
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 64))
+    y_ref = ref.nm_spmm_ref(
+        x, *ref.nm_compress(params["blk"]["w_fc"], 2, 4, 0), 2, 4
+    )
+    y_x = matmul(x, ct)
+    assert y_x.shape == (4, 48)
+    np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_ref), atol=1e-4)
+    y_p = nm_spmm_pallas(
+        x, ct.values, ct.indices, 2, 4, o_true=ct.out_features, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_ref), atol=1e-4)
+
+
+def test_compress_default_off_tpu_unpadded():
+    comp = compress_params(
+        _tree(), core.SparsityConfig(default=core.NMSparsity(2, 4))
+    )
+    ct = comp["blk"]["w_fc"]
+    assert ct.pad == 0 and ct.values.shape[-1] == 48
+
+
+def test_aligned_artifact_skips_runtime_pad(monkeypatch):
+    """With an MXU-aligned artifact the Pallas wrapper must not re-pad the
+    compressed operands per call (the hoist satellite)."""
+    import repro.kernels.nm_spmm as mod
+    params = _tree(o=128)
+    cfg = core.SparsityConfig(default=core.NMSparsity(2, 4))
+    ct = compress_params(params, cfg, align=128)["blk"]["w_fc"]
+    assert ct.pad == 0
+    called = []
+    orig = jnp.pad
+    monkeypatch.setattr(mod.jnp, "pad", lambda *a, **k: called.append(a) or orig(*a, **k))
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 64))
+    nm_spmm_pallas(x, ct.values, ct.indices, 2, 4, interpret=True)
+    padded = [a for a in called if getattr(a[0], "shape", None) == ct.values.shape]
+    assert not padded
