@@ -1,6 +1,7 @@
-"""Serving-engine benchmark: dense vs compressed, slab vs paged KV cache.
+"""Serving-engine benchmark: dense vs compressed, slab vs paged KV cache,
+steps-per-dispatch (fused decode) sweep.
 
-Two sweeps through ``repro.serving.DecodeEngine``:
+Three sweeps through ``repro.serving.DecodeEngine``:
 
 1. **dense vs compressed** (slab layout, homogeneous prompts): the same
    request load served on the masked-dense tree and on the N:M-compressed
@@ -26,6 +27,16 @@ paged fast path's read set).
    slabs and more requests decode concurrently.  Reported per engine:
    admitted concurrency, KV-cache bytes, cache token-utilization,
    preemptions, tokens/s.
+
+3. **steps-per-dispatch** (compressed, paged, greedy): the same request
+   load at K ∈ {1, 4, 8} fused decode steps per dispatch, with buffer
+   donation on (and a K=1 ``donate=False`` baseline).  Each record splits
+   per-token wall time into the device dispatch (``us_per_decode_step``)
+   and the host-scheduling overhead amortized over the K tokens one sync
+   buys (``us_per_decode_step_host`` / ``host_overhead_frac``), plus
+   ``host_syncs`` and the incremental page-table sync counters.  Greedy
+   streams are asserted bit-identical to the K=1 undonated baseline
+   (``greedy_parity_with_k1``).
 
 Every row is also appended to a machine-readable ``BENCH_serve.json``
 (list of record dicts) so the perf trajectory accumulates across runs.
@@ -60,12 +71,17 @@ def _serving_trees(arch: str, nm):
     return cfg, model, sparse, comp, ratio
 
 
-def _drain(engine, prompts, gen: int) -> dict:
+def _drain_streams(engine, prompts, gen: int) -> tuple[dict, list[list[int]]]:
+    """Submit every prompt, drain the engine; returns (stats, per-request
+    token streams in submit order — the K-sweep parity check)."""
     sp = SamplingParams(max_new_tokens=gen)
-    for p in prompts:
-        engine.submit(p, sp)
-    engine.run()
-    return engine.stats()
+    uids = [engine.submit(p, sp) for p in prompts]
+    res = engine.run()
+    return engine.stats(), [res[u].tokens for u in uids]
+
+
+def _drain(engine, prompts, gen: int) -> dict:
+    return _drain_streams(engine, prompts, gen)[0]
 
 
 def _hetero_prompts(cfg, n_requests: int, max_prompt: int) -> list[list[int]]:
@@ -86,6 +102,7 @@ def run(
     batches=(1, 2, 4),
     prompt_len: int = 8,
     gen: int = 16,
+    steps_sweep=(1, 4, 8),
     out_json: str = OUT_JSON,
 ) -> list[dict]:
     cfg, model, sparse, comp, ratio = _serving_trees(arch, nm)
@@ -124,6 +141,8 @@ def run(
                     "layout": "slab",
                     "batch": batch,
                     "us_per_decode_step": st["ms_per_decode_step"] * 1e3,
+                    "us_per_decode_step_host": st["ms_per_decode_step_host"] * 1e3,
+                    "host_overhead_frac": st["host_overhead_frac"],
                     "tokens_per_s": st["tokens_per_s"],
                     "decode_steps": st["decode_steps"],
                     "hbm_weight_ratio": ratio,
@@ -173,6 +192,8 @@ def run(
                 "batch": kwargs["max_batch"],
                 "budget_tokens": budget_tokens,
                 "us_per_decode_step": st["ms_per_decode_step"] * 1e3,
+                "us_per_decode_step_host": st["ms_per_decode_step_host"] * 1e3,
+                "host_overhead_frac": st["host_overhead_frac"],
                 "tokens_per_s": st["tokens_per_s"],
                 "decode_steps": st["decode_steps"],
                 "max_concurrency": st["max_concurrency"],
@@ -197,6 +218,73 @@ def run(
         f"paged={paged_rec['max_concurrency']} slab={slab_rec['max_concurrency']}",
     )
 
+    # -- sweep 3: steps-per-dispatch (fused K-step decode, donated caches) -----
+    k_batch, k_page_size = 2, 8
+    k_max_len = prompt_len + gen + 1
+    k_pages = 2 * k_batch * (-(-k_max_len // k_page_size))
+    k_prompts = [
+        [
+            int(t)
+            for t in jax.random.randint(
+                jax.random.PRNGKey(900 + r), (prompt_len,), 0, cfg.vocab
+            )
+        ]
+        for r in range(2 * k_batch)
+    ]
+    _, base_streams = _drain_streams(
+        DecodeEngine(
+            model, comp, max_batch=k_batch, max_len=k_max_len,
+            num_pages=k_pages, page_size=k_page_size, donate=False,
+        ),
+        k_prompts, gen,
+    )
+    parity_failures: list[int] = []
+    for k in steps_sweep:
+        engine = DecodeEngine(
+            model, comp, max_batch=k_batch, max_len=k_max_len,
+            num_pages=k_pages, page_size=k_page_size,
+            steps_per_dispatch=k, donate=True,
+        )
+        st, streams = _drain_streams(engine, k_prompts, gen)
+        parity = streams == base_streams
+        if not parity:
+            parity_failures.append(k)
+        emit(
+            f"serve/{arch}/{n}:{m}/steps_per_dispatch/k{k}",
+            st["ms_per_decode_step"] * 1e3,
+            f"host_us/tok={st['ms_per_decode_step_host'] * 1e3:.1f} "
+            f"host_frac={st['host_overhead_frac']:.3f} "
+            f"syncs={st['host_syncs']} parity={parity}",
+        )
+        records.append(
+            {
+                "suite": "serve",
+                "sweep": "steps_per_dispatch",
+                "arch": arch,
+                "nm": f"{n}:{m}",
+                "mode": "compressed",
+                "layout": "paged",
+                "batch": k_batch,
+                "steps_per_dispatch": k,
+                "donate": True,
+                "greedy_parity_with_k1": parity,
+                "us_per_decode_step": st["ms_per_decode_step"] * 1e3,
+                "us_per_decode_step_host": st["ms_per_decode_step_host"] * 1e3,
+                "host_overhead_frac": st["host_overhead_frac"],
+                "host_syncs": st["host_syncs"],
+                "decode_steps": st["decode_steps"],
+                "tokens_per_s": st["tokens_per_s"],
+                "table_full_uploads": st["table_full_uploads"],
+                "table_row_syncs": st["table_row_syncs"],
+                "table_syncs": st["table_syncs"],
+            }
+        )
+
     if out_json:
         append_json(out_json, records)
+    # fail *after* persisting: a parity break must not discard the run's
+    # records (the greedy_parity_with_k1 field marks the offending rows)
+    assert not parity_failures, (
+        f"fused decode diverged from the K=1 baseline at K={parity_failures}"
+    )
     return records

@@ -9,8 +9,10 @@ weight compression, and a continuous-batching decode loop that consumes the
 ``nm_spmm`` compressed-matmul path (the HBM-bandwidth win on TPU), with no
 dense rehydration. Submits more requests than decode lanes so slot reuse
 (continuous batching) is exercised, and serves from the paged KV-cache
-pool (`--paged --page-size/--num-pages`) with bucketed batched prefill —
-drop the flags for the contiguous-slab baseline.
+pool (`--paged --page-size/--num-pages`) with bucketed batched prefill
+and the fused zero-copy decode loop (`--steps-per-dispatch 4`: four decode
+steps per on-device scan, donated cache buffers, one host sync per block)
+— drop the flags for the contiguous-slab / per-step baseline.
 """
 import sys
 
@@ -21,5 +23,5 @@ if __name__ == "__main__":
         sys.argv[1:]
         or ["--arch", "gpt2-paper", "--batch", "2", "--requests", "5",
             "--gen", "12", "--paged", "--page-size", "8",
-            "--prefill-buckets", "8,16,32"]
+            "--prefill-buckets", "8,16,32", "--steps-per-dispatch", "4"]
     )

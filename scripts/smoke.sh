@@ -33,4 +33,9 @@ REPRO_KERNEL_MODE=xla python -m repro.launch.serve --arch gpt2-paper \
     --batch 2 --requests 3 --prompt-len 8 --gen 6 --paged --page-size 4 \
     --num-pages 24
 
+echo "== serve smoke (fused K=4 decode + chunked prefill, forced XLA) =="
+REPRO_KERNEL_MODE=xla python -m repro.launch.serve --arch gpt2-paper \
+    --batch 2 --requests 3 --prompt-len 20 --gen 8 --paged --page-size 4 \
+    --num-pages 32 --steps-per-dispatch 4 --prefill-chunk 8
+
 echo "smoke OK"

@@ -31,9 +31,11 @@ executable, so flipping the env var after an engine compiled its decode
 step does not re-route that engine (build a new one, as ``scripts/smoke.sh``
 does for the forced-XLA serve invocation).
 
-Registered kernels: ``nm_spmm`` (compressed N:M matmul),
-``paged_attn`` (paged decode attention).  ``nm_mask`` keeps its legacy
-wrapper in ``kernels.ops`` until its training-loop call sites migrate.
+Registered kernels: ``nm_spmm`` (compressed N:M matmul), ``paged_attn``
+(paged decode attention), ``nm_mask`` (fused mask-compute-and-apply; the
+training-loop hot spot).  The legacy ``prefer_pallas``/``interpret`` knobs
+that ``kernels.ops`` carried from the seed are retired — call sites pass
+``mode=`` or rely on the resolution order above.
 """
 from __future__ import annotations
 
@@ -92,7 +94,12 @@ def _env_mode() -> Optional[str]:
 
 def _ensure_registered(kernel: str = "") -> None:
     """Implementations self-register at import; pull their modules in."""
-    if "nm_spmm" not in _REGISTRY or "paged_attn" not in _REGISTRY:
+    if (
+        "nm_spmm" not in _REGISTRY
+        or "paged_attn" not in _REGISTRY
+        or "nm_mask" not in _REGISTRY
+    ):
+        import repro.kernels.nm_mask  # noqa: F401
         import repro.kernels.nm_spmm  # noqa: F401
         import repro.kernels.paged_attn  # noqa: F401
 
@@ -140,6 +147,21 @@ def nm_spmm(
         n=n, m=m,
     )
     return fn(x, values, indices, n, m, o_true=o_true)
+
+
+def nm_mask(w, n: int, m: int, *, mode: Optional[str] = None):
+    """Fused N:M mask computation + application: ``(Π, Π⊙w)``.
+
+    The Pallas kernel tiles 2-D weights with whole N:M groups running down
+    the rows (axis 0 — the matmul reduction axis); other ranks/shapes are
+    rare and small in the zoo and take the XLA reference on every mode, so
+    a forced ``pallas``/``interpret`` run never hits the kernel's shape
+    asserts mid-sweep.
+    """
+    if w.ndim != 2 or w.shape[0] % m:
+        mode = "xla"
+    _, fn = resolve("nm_mask", mode, ndim=w.ndim, rows=w.shape[0], m=m)
+    return fn(w, n, m)
 
 
 def paged_attn(

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import dispatch
+
 
 def _nm_mask_kernel(w_ref, masked_ref, mask_ref, *, n: int, m: int):
     w = w_ref[...]  # (TR, TC)
@@ -87,3 +89,35 @@ def nm_mask_apply_pallas(
         interpret=interpret,
     )(wp)
     return masked[:r, :c], mask[:r, :c]
+
+
+# ---------------------------------------------------------------------------
+# dispatch registration: nm_mask routes through the kernels.dispatch
+# registry like nm_spmm / paged_attn (the legacy prefer_pallas/interpret
+# knobs in kernels.ops are retired).  All three modes return (Π, Π⊙w).
+# ---------------------------------------------------------------------------
+
+
+def _kernel_entry(w, n: int, m: int, *, interpret: bool):
+    masked, mask = nm_mask_apply_pallas(w, n, m, interpret=interpret)
+    return mask, masked
+
+
+def _xla_entry(w, n: int, m: int):
+    from repro.core import masking as ref_masking
+
+    mask = ref_masking.nm_mask(w, n, m, 0)
+    return mask, mask * w
+
+
+dispatch.register(
+    "nm_mask", "pallas", functools.partial(_kernel_entry, interpret=False)
+)
+dispatch.register(
+    "nm_mask", "interpret", functools.partial(_kernel_entry, interpret=True)
+)
+dispatch.register("nm_mask", "xla", _xla_entry)
+# shape gating (2-D, whole N:M groups down the rows) lives in
+# dispatch.nm_mask itself: it must override forced/env modes too, which a
+# resolve()-level guard cannot, so keeping a guard here would just be a
+# second stale copy of the same predicate

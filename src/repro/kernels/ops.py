@@ -1,10 +1,12 @@
 """jit'd public wrappers for the Pallas kernels.
 
-Routing lives in ``kernels.dispatch`` (backend + shape + override); these
-wrappers keep the historical call signatures and translate the legacy
-``prefer_pallas``/``interpret`` knobs onto dispatch modes.  ``nm_mask`` is
-a training-time kernel and keeps its local TPU-or-reference switch until
-it migrates into the registry (registered as "future nm_mask" there).
+Routing lives entirely in ``kernels.dispatch`` (backend + shape + override);
+these wrappers keep the historical call signatures.  The legacy
+``prefer_pallas``/``interpret`` knobs the seed threaded through every call
+site are retired: callers that need to pin a route pass ``mode=`` (or use
+``dispatch.force_mode`` / ``REPRO_KERNEL_MODE``), and everything else lets
+the registry decide — Pallas on TPU, the vectorized XLA path elsewhere,
+the interpreter only when explicitly forced for correctness checks.
 """
 from __future__ import annotations
 
@@ -13,47 +15,21 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import masking as ref_masking
 from repro.kernels import dispatch
-from repro.kernels.nm_mask import nm_mask_apply_pallas
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _legacy_mode(
-    prefer_pallas: Optional[bool], interpret: Optional[bool]
-) -> Optional[str]:
-    """Map the legacy knobs onto a dispatch mode (None = dispatch decides)."""
-    if prefer_pallas is None:
-        return None
-    if not prefer_pallas:
-        return "xla"
-    itp = (not on_tpu()) if interpret is None else interpret
-    return "interpret" if itp else "pallas"
-
-
 def nm_mask_apply(
-    w: jnp.ndarray,
-    n: int,
-    m: int,
-    *,
-    prefer_pallas: Optional[bool] = None,
-    interpret: Optional[bool] = None,
+    w: jnp.ndarray, n: int, m: int, *, mode: Optional[str] = None
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Return ``(Π, Π⊙w)`` — the mask, then the masked weight — via the
-    fused kernel when profitable.
-
-    2-D weights with groups on axis 0 route to Pallas; other ranks use the
-    reference path (they are rare and small in the zoo)."""
-    use = prefer_pallas if prefer_pallas is not None else on_tpu()
-    if use and w.ndim == 2 and w.shape[0] % m == 0:
-        itp = (not on_tpu()) if interpret is None else interpret
-        masked, mask = nm_mask_apply_pallas(w, n, m, interpret=itp)
-        return mask, masked
-    mask = ref_masking.nm_mask(w, n, m, 0)
-    return mask, mask * w
+    fused kernel when profitable (``kernels.dispatch`` decides; 2-D weights
+    with whole groups down axis 0 are kernel-eligible, everything else
+    takes the reference path)."""
+    return dispatch.nm_mask(w, n, m, mode=mode)
 
 
 def nm_spmm(
@@ -64,15 +40,11 @@ def nm_spmm(
     m: int,
     *,
     o_true: Optional[int] = None,
-    prefer_pallas: Optional[bool] = None,
-    interpret: Optional[bool] = None,
+    mode: Optional[str] = None,
 ) -> jnp.ndarray:
     """Compressed N:M matmul (serving path), routed by ``kernels.dispatch``.
 
     Off-TPU this runs the vectorized XLA path (``nm_spmm_xla``) — never the
     Pallas interpreter, which is how the seed's compressed decode came in
     ~8x slower than dense on CPU."""
-    return dispatch.nm_spmm(
-        x, values, indices, n, m, o_true=o_true,
-        mode=_legacy_mode(prefer_pallas, interpret),
-    )
+    return dispatch.nm_spmm(x, values, indices, n, m, o_true=o_true, mode=mode)

@@ -2,7 +2,8 @@
 
     python -m repro.launch.serve --arch gpt2-paper --batch 4 --prompt-len 16 \
         --gen 32 [--ckpt-dir /tmp/run1] [--dense] [--temperature 0.8 --top-k 40] \
-        [--paged --page-size 16 --num-pages 64] [--prefill-buckets 16,32,64]
+        [--paged --page-size 16 --num-pages 64] [--prefill-buckets 16,32,64] \
+        [--steps-per-dispatch 4] [--prefill-chunk 16] [--no-donate]
 
 Loads (or initializes) params, applies the final Π_T mask (Algorithm 1,
 line 23-24), exports the N:M-compressed artifact, and hands the *compressed
@@ -15,6 +16,12 @@ to the block-granular paged pool (``--page-size``/``--num-pages``; an
 undersized pool preempts-and-requeues instead of truncating), and
 ``--prefill-buckets`` overrides the static prompt-pad lengths used by
 bucketed batched prefill.
+
+Decode-loop knobs: ``--steps-per-dispatch K`` fuses K decode steps into one
+on-device scan (the host syncs once per K tokens; greedy streams are
+bit-identical across K), ``--prefill-chunk N`` absorbs long prompts in
+N-token chunks interleaved with decode dispatches, and ``--no-donate``
+disables cache-buffer donation (the copying A/B baseline).
 """
 from __future__ import annotations
 
@@ -86,6 +93,17 @@ def main(argv=None) -> dict:
     ap.add_argument("--prefill-buckets", default=None,
                     help="comma-separated static prompt-pad lengths for "
                          "bucketed batched prefill (default: powers of two)")
+    ap.add_argument("--steps-per-dispatch", type=int, default=1,
+                    help="decode steps fused into one on-device scan (the "
+                         "host syncs once per K tokens)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="absorb prompts longer than this in fixed-size "
+                         "chunks interleaved with decode dispatches "
+                         "(attention-family archs only)")
+    ap.add_argument("--no-donate", dest="donate", action="store_false",
+                    default=True,
+                    help="disable cache-buffer donation into the jitted "
+                         "decode/prefill (the copying A/B baseline)")
     args = ap.parse_args(argv)
 
     model, serving_tree, rep = build_serving_state(args)
@@ -109,6 +127,9 @@ def main(argv=None) -> dict:
         seed=0,
         num_pages=num_pages if args.paged else None,
         page_size=args.page_size,
+        steps_per_dispatch=args.steps_per_dispatch,
+        donate=args.donate,
+        prefill_chunk=args.prefill_chunk,
         prefill_buckets=buckets,
     )
     n_requests = args.batch if args.requests is None else args.requests
@@ -131,8 +152,13 @@ def main(argv=None) -> dict:
         "generated_tokens": st["tokens_generated"],
         "tokens_per_s": st["tokens_per_s"],
         "ms_per_decode_step": st["ms_per_decode_step"],
+        "ms_per_decode_step_host": st["ms_per_decode_step_host"],
+        "host_overhead_frac": st["host_overhead_frac"],
         "decode_steps": st["decode_steps"],
+        "dispatches": st["dispatches"],
+        "steps_per_dispatch": st["steps_per_dispatch"],
         "prefill_batches": st["prefill_batches"],
+        "prefill_chunks": st["prefill_chunks"],
         "max_concurrency": st["max_concurrency"],
         "preemptions": st["preemptions"],
         "kv_cache_bytes": st["kv_cache_bytes"],

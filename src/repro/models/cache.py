@@ -21,12 +21,22 @@ entries in the same oldest-to-newest order the slab stores them, and the
 extra masked positions contribute exact zeros to the softmax.
 
 Sliding-window layers use a *modular* page table of
-``ceil(window/page_size) + 1`` slots: position ``p`` lives in table slot
-``(p // page_size) % n_slots``, so as the window slides past a page
-boundary the expired page's slot is reclaimed and the page itself is
-returned to the free list (whole-page eviction).  The gathered view is
-rebuilt in logical order from the lane's rolling window, matching the
-slab's per-lane ``jnp.roll`` content element for element.
+``ceil((window + lookahead - 1)/page_size) + 1`` slots: position ``p``
+lives in table slot ``(p // page_size) % n_slots``, so as the window
+slides past a page boundary the expired page's slot is reclaimed and the
+page itself is returned to the free list (whole-page eviction).  The
+gathered view is rebuilt in logical order from the lane's rolling window,
+matching the slab's per-lane ``jnp.roll`` content element for element.
+
+``lookahead`` is the number of decode steps one fused dispatch may take
+without host intervention (the engine's ``steps_per_dispatch``): the host
+pre-maps every page those steps will write *before* the dispatch, and the
+extra modular slots guarantee a pre-mapped future page never lands in the
+slot of a page still inside some iteration's live window.  (Pre-mapped
+future pages are invisible to reads: full-table slots fail ``base <
+length`` and window slots fail ``base + page_size > length - window`` in
+both the Pallas kernel and the gathered reference, so they only become
+visible once the scan actually writes them.)
 
 SSM / RG-LRU states are O(1) per lane and are *not* paged — they stay
 ``(B, ...)`` slot-indexed under both layouts.
@@ -148,6 +158,44 @@ class SlabLayout:
             ),
         }
 
+    # -- chunked-prefill writes / views ------------------------------------
+    #
+    # One prompt chunk of a single lane: rows ``i < length`` land at
+    # positions ``start + i``.  Only non-windowed slabs support chunking
+    # (the engine gates chunked prefill off sliding-window archs).
+
+    def attn_write_chunk(self, c: dict, k_rows, v_rows, lane, start, length,
+                         tables):
+        """k_rows/v_rows: (C, n_kv, hd); ``lane``/``start``/``length`` scalars."""
+        s = c["k"].shape[1]
+        i = jnp.arange(k_rows.shape[0])
+        idx = jnp.where(i < length, start + i, s)  # pad rows drop out of bounds
+        return {
+            "k": c["k"].at[lane, idx].set(k_rows.astype(c["k"].dtype), mode="drop"),
+            "v": c["v"].at[lane, idx].set(v_rows.astype(c["v"].dtype), mode="drop"),
+        }
+
+    def attn_chunk_view(self, c: dict, lane, tables):
+        """(1, S, n_kv, hd) logical view of one lane (the slab row itself)."""
+        return c["k"][lane][None], c["v"][lane][None]
+
+    def mla_write_chunk(self, c: dict, ckv_rows, krope_rows, lane, start,
+                        length, tables):
+        s = c["ckv"].shape[1]
+        i = jnp.arange(ckv_rows.shape[0])
+        idx = jnp.where(i < length, start + i, s)
+        return {
+            "ckv": c["ckv"].at[lane, idx].set(
+                ckv_rows.astype(c["ckv"].dtype), mode="drop"
+            ),
+            "krope": c["krope"].at[lane, idx].set(
+                krope_rows.astype(c["krope"].dtype), mode="drop"
+            ),
+        }
+
+    def mla_chunk_view(self, c: dict, lane, tables):
+        return c["ckv"][lane][None], c["krope"][lane][None]
+
 
 @dataclasses.dataclass(frozen=True)
 class PagedLayout:
@@ -165,6 +213,7 @@ class PagedLayout:
     max_len: int
     win: int = 0  # min(max_len, local_window) when the arch has windowed attn
     has_full: bool = True  # any non-windowed attn / MLA layer present
+    lookahead: int = 1  # decode steps one dispatch may take (pages pre-mapped)
 
     kind = "paged"
 
@@ -174,7 +223,12 @@ class PagedLayout:
 
     @property
     def pages_win(self) -> int:
-        return (cdiv(self.win, self.page_size) + 1) if self.win else 0
+        # +lookahead-1: room to pre-map every page a K-step dispatch writes
+        # without a modular slot collision with a still-live page (see
+        # module docstring)
+        if not self.win:
+            return 0
+        return cdiv(self.win + max(self.lookahead, 1) - 1, self.page_size) + 1
 
     @property
     def sentinel(self) -> int:
@@ -352,16 +406,80 @@ class PagedLayout:
         )
         return {"ckv": cf.reshape(c["ckv"].shape), "krope": rf.reshape(c["krope"].shape)}
 
+    # -- chunked-prefill writes / views ------------------------------------
+    #
+    # One prompt chunk of a single lane through its *full* (append-only)
+    # table row; the engine gates chunked prefill off sliding-window archs,
+    # so only the ``full`` table is involved.  All the chunk's pages were
+    # mapped at admission (``alloc_prefill`` covers the whole prompt), so
+    # every valid row has a physical slot; pad rows route to the sentinel.
+
+    def _chunk_write_idx(self, lane, start, length, csz, tables):
+        ps = self.page_size
+        i = jnp.arange(csz)
+        pos = start + i
+        row = tables["full"][lane]  # (pages_full,)
+        phys = row[jnp.clip(pos // ps, 0, self.pages_full - 1)]
+        return jnp.where(i < length, phys * ps + pos % ps, self.num_pages * ps)
+
+    def attn_write_chunk(self, c: dict, k_rows, v_rows, lane, start, length,
+                         tables):
+        widx = self._chunk_write_idx(lane, start, length, k_rows.shape[0], tables)
+        kf = c["k"].reshape((-1,) + c["k"].shape[2:])
+        vf = c["v"].reshape((-1,) + c["v"].shape[2:])
+        kf = kf.at[widx].set(k_rows.astype(c["k"].dtype), mode="drop")
+        vf = vf.at[widx].set(v_rows.astype(c["v"].dtype), mode="drop")
+        return {"k": kf.reshape(c["k"].shape), "v": vf.reshape(c["v"].shape)}
+
+    def _chunk_gather(self, flat, lane, tables):
+        ps = self.page_size
+        a = jnp.arange(self.pages_full * ps)
+        phys = tables["full"][lane][a // ps]  # sentinel slots -> clip garbage
+        return jnp.take(flat, phys * ps + a % ps, axis=0, mode="clip")[None]
+
+    def attn_chunk_view(self, c: dict, lane, tables):
+        kf = c["k"].reshape((-1,) + c["k"].shape[2:])
+        vf = c["v"].reshape((-1,) + c["v"].shape[2:])
+        return self._chunk_gather(kf, lane, tables), self._chunk_gather(
+            vf, lane, tables
+        )
+
+    def mla_write_chunk(self, c: dict, ckv_rows, krope_rows, lane, start,
+                        length, tables):
+        widx = self._chunk_write_idx(
+            lane, start, length, ckv_rows.shape[0], tables
+        )
+        cf = c["ckv"].reshape((-1,) + c["ckv"].shape[2:])
+        rf = c["krope"].reshape((-1,) + c["krope"].shape[2:])
+        cf = cf.at[widx].set(ckv_rows.astype(c["ckv"].dtype), mode="drop")
+        rf = rf.at[widx].set(krope_rows.astype(c["krope"].dtype), mode="drop")
+        return {
+            "ckv": cf.reshape(c["ckv"].shape),
+            "krope": rf.reshape(c["krope"].shape),
+        }
+
+    def mla_chunk_view(self, c: dict, lane, tables):
+        cf = c["ckv"].reshape((-1,) + c["ckv"].shape[2:])
+        rf = c["krope"].reshape((-1,) + c["krope"].shape[2:])
+        return self._chunk_gather(cf, lane, tables), self._chunk_gather(
+            rf, lane, tables
+        )
+
 
 CacheLayout = (SlabLayout, PagedLayout)  # for isinstance checks
 
 
-def paged_layout_for(cfg, max_len: int, *, page_size: int, num_pages: int) -> PagedLayout:
+def paged_layout_for(
+    cfg, max_len: int, *, page_size: int, num_pages: int, lookahead: int = 1
+) -> PagedLayout:
     """Derive the PagedLayout an arch needs at a given logical capacity.
 
     A layer is *windowed* iff ``local_window <= max_len`` — the same
     condition under which the slab rolls — otherwise its window never
     slides within the logical capacity and it pages like full attention.
+    ``lookahead`` is the engine's ``steps_per_dispatch`` — how many decode
+    writes one fused dispatch performs before the host touches the tables
+    again (sizes the modular window table; see :class:`PagedLayout`).
     """
     from repro.models.model import _block_mixer_mlp, layer_plan
 
@@ -377,5 +495,5 @@ def paged_layout_for(cfg, max_len: int, *, page_size: int, num_pages: int) -> Pa
     win = min(max_len, cfg.local_window) if windowed else 0
     return PagedLayout(
         page_size=page_size, num_pages=num_pages, max_len=max_len,
-        win=win, has_full=has_full,
+        win=win, has_full=has_full, lookahead=max(1, lookahead),
     )

@@ -114,6 +114,54 @@ def v_pad(v: jnp.ndarray, to: int) -> jnp.ndarray:
     return jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, to - v.shape[-1])))
 
 
+def mla_chunk(
+    x: jnp.ndarray,  # (1, C, d) — one lane's prompt chunk
+    p: dict,
+    n_heads: int,
+    cfg: MLAConfig,
+    cache: dict,
+    lane,  # scalar int32
+    start,  # scalar int32: position of x[:, 0] in the sequence
+    length,  # scalar int32: valid tokens in the chunk (rest is padding)
+    rope_theta: float = 10000.0,
+    layout=None,
+    tables=None,
+    chunk: int = 512,
+) -> tuple[jnp.ndarray, dict]:
+    """One chunked-prefill step: write the chunk's latents at positions
+    ``start..start+length-1`` of ``lane``, then attend the chunk's queries
+    over the lane's whole cached prefix (``q_offset=start`` supplies the
+    causal offset).  Pad rows (``i >= length``) produce garbage that the
+    caller discards — only position ``length-1``'s logits are consumed,
+    and only on the final chunk."""
+    if layout is None:
+        layout = SlabLayout()
+    b, csz, _ = x.shape
+    nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    positions = start + jnp.arange(csz)[None, :]  # (1, C)
+    q, c_kv, k_rope = _project_qkv(x, p, n_heads, cfg)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    k_rope_r = apply_rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0, :]
+
+    new_cache = layout.mla_write_chunk(
+        cache, c_kv[0], k_rope_r[0], lane, start, length, tables
+    )
+    ckv_view, krope_view = layout.mla_chunk_view(new_cache, lane, tables)
+    k_nope, v = _expand_kv(ckv_view, p, n_heads, cfg)
+    s = ckv_view.shape[1]
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope_view[:, :, None, :], (b, s, n_heads, rd))],
+        axis=-1,
+    )
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = chunked_attention(
+        qf, kf, v_pad(v, nd + rd), causal=True, q_offset=start, chunk=chunk
+    )
+    out = out[..., :vd].reshape(b, csz, n_heads * vd)
+    return matmul(out, p["w_o"]), new_cache
+
+
 def mla_decode(
     x: jnp.ndarray,  # (B, 1, d)
     p: dict,

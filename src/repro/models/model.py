@@ -547,6 +547,148 @@ def write_prefill(
     return out
 
 
+def _attn_chunk(x, p, cfg: ArchConfig, c: dict, lane, start, length, layout,
+                tables, chunk: int):
+    """One lane's prompt chunk: write K/V rows at ``start..start+length-1``,
+    attend the chunk's queries over the lane's whole cached prefix.
+
+    x: (1, C, d).  Chunked prefill is gated to non-windowed attention
+    (``DecodeEngine`` only routes prompts here when ``local_window`` is
+    None), so the logical view is the append-only full cache."""
+    b, csz, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = L.matmul(x, p["wq"])
+    k = L.matmul(x, p["wk"])
+    v = L.matmul(x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bias_q"], k + p["bias_k"], v + p["bias_v"]
+    q = q.reshape(b, csz, h, hd)
+    k = k.reshape(b, csz, kv, hd)
+    v = v.reshape(b, csz, kv, hd)
+    posb = start + jnp.arange(csz)[None, :]  # (1, C)
+    if cfg.rope == "rope":
+        q = L.apply_rope(q, posb, cfg.rope_theta)
+        k = L.apply_rope(k, posb, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        p3 = jnp.broadcast_to(posb[..., None], (b, csz, 3))
+        q = L.apply_mrope(q, p3, theta=cfg.rope_theta)
+        k = L.apply_mrope(k, p3, theta=cfg.rope_theta)
+    new_c = layout.attn_write_chunk(c, k[0], v[0], lane, start, length, tables)
+    k_view, v_view = layout.attn_chunk_view(new_c, lane, tables)
+    # pad rows (i >= length) attend garbage — discarded by the caller, which
+    # reads logits only at row length-1 (and only on the final chunk)
+    out = L.chunked_attention(
+        q, k_view, v_view, causal=True, q_offset=start, chunk=chunk
+    )
+    out = L.matmul(out.reshape(b, csz, h * hd), p["wo"])
+    if cfg.o_bias:
+        out = out + p["bias_o"]
+    return out, new_c
+
+
+def _block_chunk(x, p, kind: str, cfg: ArchConfig, c, lane, start, length,
+                 layout, tables, chunk: int):
+    mixer, mlp = _block_mixer_mlp(kind, cfg)
+    if mixer not in ("attn", "mla"):
+        raise NotImplementedError(
+            "chunked prefill requires attention-family mixers (recurrent "
+            "state cannot resume mid-prompt); the engine gates this"
+        )
+    h = _apply_norm(cfg, p["pre"], x)
+    if mixer == "attn":
+        mix_out, c = _attn_chunk(
+            h, p["attn"], cfg, c, lane, start, length, layout, tables, chunk
+        )
+    else:
+        mix_out, c = MLA.mla_chunk(
+            h, p["attn"], cfg.n_heads, cfg.mla, c, lane, start, length,
+            cfg.rope_theta, layout=layout, tables=tables, chunk=chunk,
+        )
+    x = x + mix_out
+    if mlp != "none":
+        h2 = _apply_norm(cfg, p["post"], x)
+        if mlp == "moe":
+            mo, _ = MOE.moe_mlp(h2, p["moe"], cfg.moe)
+        elif cfg.mlp == "swiglu":
+            mo = L.swiglu_mlp(h2, p["mlp"])
+        else:
+            mo = L.gelu_mlp(h2, p["mlp"])
+        x = x + mo
+    return x, c
+
+
+def prefill_chunk(
+    params: dict, cfg: ArchConfig, tokens: jnp.ndarray, cache: dict,
+    lane, start, length, layout=None, *, chunk: int = 512,
+) -> tuple[jnp.ndarray, dict]:
+    """Process one fixed-size chunk of one lane's prompt against the live
+    serving cache: tokens (1, C) int32 (rows ``>= length`` are padding) →
+    (logits (1, V) at the chunk's last valid position, new cache).
+
+    This is the incremental counterpart of ``prefill``: each chunk's K/V
+    (or MLA latents) are scattered into the lane's cache slots at
+    positions ``start..start+length-1`` and its queries attend through the
+    cached prefix, so a long prompt is absorbed across several small
+    dispatches that the engine interleaves with decode dispatches instead
+    of one monolithic head-of-line-blocking forward.  The returned logits
+    matter only on the final chunk (they seed the first sampled token).
+    Attention-family archs only; the cache's ``len`` for ``lane`` advances
+    to ``start + length``.
+    """
+    if layout is None:
+        layout = C.SlabLayout()
+    plan = layer_plan(cfg)
+    tables = cache.get("tables")
+    x = params["embed"]["tok_embed"][tokens]  # (1, C, d)
+    new_cache: dict = {
+        "len": cache["len"].at[lane].set(
+            (start + length).astype(cache["len"].dtype)
+        )
+    }
+    if tables is not None:
+        new_cache["tables"] = tables
+
+    for i, kind in enumerate(plan.head):
+        x, c = _block_chunk(
+            x, params[f"head_{i}"], kind, cfg, cache[f"head_{i}"], lane,
+            start, length, layout, tables, chunk,
+        )
+        new_cache[f"head_{i}"] = c
+
+    if plan.n_body:
+        def scan_body(x, pc):
+            p_sb, c_sb = pc
+            cs = {}
+            for j, kind in enumerate(plan.period):
+                x, cj = _block_chunk(
+                    x, p_sb[f"sb_{j}"], kind, cfg, c_sb[f"sb_{j}"], lane,
+                    start, length, layout, tables, chunk,
+                )
+                cs[f"sb_{j}"] = cj
+            return x, cs
+
+        x, body_cache = jax.lax.scan(scan_body, x, (params["body"], cache["body"]))
+        new_cache["body"] = body_cache
+
+    for i, kind in enumerate(plan.tail):
+        x, c = _block_chunk(
+            x, params[f"tail_{i}"], kind, cfg, cache[f"tail_{i}"], lane,
+            start, length, layout, tables, chunk,
+        )
+        new_cache[f"tail_{i}"] = c
+
+    # logits only at the last valid row — the unembed matmul runs on one
+    # token, not the whole chunk
+    idx = jnp.clip(length - 1, 0, tokens.shape[1] - 1)
+    x_last = jax.lax.dynamic_index_in_dim(x, idx, axis=1)  # (1, 1, d)
+    x_last = _apply_norm(cfg, params["final"], x_last)
+    if cfg.tie_embeddings:
+        logits = x_last @ params["embed"]["tok_embed"].T
+    else:
+        logits = L.matmul(x_last, params["unembed"]["out_embed"])
+    return logits[:, 0, :], new_cache
+
+
 def _attn_decode(x, p, cfg: ArchConfig, c: dict, pos, layout, tables):
     """x: (B,1,d). pos: (B,) positions of the new token."""
     b = x.shape[0]
@@ -824,6 +966,12 @@ class TransformerLM:
 
     def decode_step(self, params, tokens, cache, layout=None):
         return decode_step(params, self.cfg, tokens, cache, layout)
+
+    def prefill_chunk(self, params, tokens, cache, lane, start, length,
+                      layout=None, **kw):
+        return prefill_chunk(
+            params, self.cfg, tokens, cache, lane, start, length, layout, **kw
+        )
 
     def init_cache(self, batch_size, max_len, dtype=None, layout=None):
         return init_cache(self.cfg, batch_size, max_len, dtype, layout)

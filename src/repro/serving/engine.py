@@ -9,13 +9,39 @@ weight matmul inside prefill / decode routes through the compressed
 ``nm_spmm`` path (see ``models.layers.matmul``) — the dense weights never
 materialize in HBM.
 
-Scheduling is continuous batching: whenever capacity frees up (a request
-hit its stop condition) queued requests are admitted *between decode
-steps*, and the following decode step carries the new requests alongside
-the in-flight ones.  Per-slot ``cache["len"]`` keeps heterogeneous sequence
-positions correct (including per-lane rolling-window shifts on
-sliding-window archs); idle slots are pinned to length 0 and their sampled
-tokens discarded.
+Scheduling: dispatch-boundary continuous batching
+-------------------------------------------------
+The decode hot loop is **fused and zero-copy**: one jitted dispatch runs
+``steps_per_dispatch`` (K) decode steps as an on-device ``lax.scan`` that
+embeds, attends, samples, scatters each new token into the cache, and
+advances ``cache["len"]`` — K tokens per lane move device→host as a single
+``(K, max_batch)`` block, so the host is consulted once per K tokens
+instead of once per token.  The cache pytree and token buffer are
+**donated** (``donate_argnums``) into the decode, prefill, and
+chunked-prefill executables, so XLA updates the paged pool in place
+instead of copying every cache buffer per call; pass ``donate=False`` for
+the copying baseline (bit-identical streams, strictly more HBM traffic).
+
+All scheduling happens at **dispatch boundaries**: queued requests are
+admitted (batched bucketed prefill), finished lanes retire, and — under
+pool pressure — preemption victims are chosen, only between dispatches.
+Mid-scan, per-lane stop detection runs **on device**
+(``sampling.advance_stops``): a lane that emits its EOS, exhausts its
+``max_new_tokens`` budget, or hits the logical capacity freezes (stops
+sampling, stops writing, stops advancing its length) until the host
+replays the same rules over the token block at the boundary.  The paged
+pool pre-reserves every page the K writes need (``ensure_steps``) before
+the dispatch, so mid-scan pool exhaustion cannot occur.  Per-slot
+``cache["len"]`` keeps heterogeneous sequence positions correct; idle
+lanes are pinned to length 0 and their sampled tokens discarded.
+
+**Chunked prefill** (``prefill_chunk=N``): a prompt longer than N tokens
+no longer head-of-line-blocks in-flight decodes behind one monolithic
+prefill — it is absorbed N tokens at a time, one chunk per scheduling
+step, interleaved with the decode dispatches of the running lanes; the
+final chunk samples the request's first token and the lane joins the next
+decode dispatch.  Attention-family archs only (recurrent state cannot
+resume mid-prompt; sliding-window archs keep whole-prompt prefill).
 
 Cache layouts
 -------------
@@ -28,11 +54,13 @@ Cache layouts
 - **paged** (pass ``num_pages``/``page_size`` or a prebuilt
   ``kv_pool.PagedKVPool``): each layer owns a ``(num_pages, page_size, ...)``
   pool and per-lane *page tables* map logical token positions to physical
-  pages (append-only for full attention and MLA; modular with whole-page
-  eviction for sliding-window layers).  Admission requires a free lane
-  *and* enough free pages for the prompt; page tables grow on demand as
-  lanes decode.  When the pool runs dry mid-decode the engine **preempts**
-  the youngest lane instead of truncating: its pages are freed, and the
+  pages.  Admission requires a free lane *and* enough free pages for the
+  prompt; page tables grow on demand as lanes decode, and the device copy
+  is synced **incrementally** — only lanes whose rows changed since the
+  last dispatch are scattered into the resident table arrays
+  (``PagedKVPool.device_tables``), never a full re-upload per step.  When
+  the pool runs dry at a dispatch boundary the engine **preempts** the
+  youngest lane instead of truncating: its pages are freed, and the
   request is re-queued at the front with its generated-so-far tokens as a
   resume prefix — on re-admission it re-prefills ``prompt + prefix`` and
   continues.  ``finish_reason="cache_full"`` survives only for the logical
@@ -42,17 +70,16 @@ Cache layouts
 Prefill is **bucketed and batched**: queued prompts admitted in the same
 scheduling step are padded to a small static set of bucket lengths (powers
 of two up to ``max_len`` by default) and each bucket group is prefilled in
-one jitted call, so distinct prompt lengths no longer retrace per length
-and admission no longer dispatches one prefill per request.  Compiled
-prefill variants are bounded by #buckets × #group-sizes (group sizes are
-padded to powers of two).  Architectures with recurrent state (SSM /
-RG-LRU) cannot absorb padding tokens into their state, so they group by
-*exact* prompt length instead — still one batched prefill per group.
+one jitted call.  Architectures with recurrent state (SSM / RG-LRU) cannot
+absorb padding tokens into their state, so they group by *exact* prompt
+length instead — still one batched prefill per group.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Any, Optional, Sequence
 
@@ -63,8 +90,21 @@ import numpy as np
 from repro.models.cache import SlabLayout
 from repro.models.model import TransformerLM, _block_mixer_mlp, layer_plan
 from repro.serving.kv_pool import PagedKVPool
-from repro.serving.sampling import SamplingParams, sample_tokens
+from repro.serving.sampling import SamplingParams, advance_stops, sample_tokens
 from repro.sparse_infer.compress import CompressedTensor
+
+
+@contextlib.contextmanager
+def _quiet_donation():
+    """Buffer donation is a no-op on backends without aliasing support
+    (CPU); the stream is identical either way, so JAX's per-executable
+    warning is noise — suppressed only around the engine's own dispatches
+    (never globally: other code's donation bugs should still warn)."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        yield
 
 
 @dataclasses.dataclass
@@ -90,15 +130,20 @@ class _Request:
 class _Slot:
     """Host-side bookkeeping for one active batch lane."""
 
-    __slots__ = ("uid", "prompt", "sampling", "generated", "pos", "seq")
+    __slots__ = ("uid", "prompt", "sampling", "generated", "pos", "seq",
+                 "pending")
 
-    def __init__(self, req: _Request, pos: int, seq: int):
+    def __init__(self, req: _Request, pos: int, seq: int,
+                 pending: Optional[list[int]] = None):
         self.uid = req.uid
         self.prompt = req.prompt
         self.sampling = req.sampling
         self.generated: list[int] = list(req.prefix)
         self.pos = pos  # host mirror of cache["len"][lane]
         self.seq = seq  # admission order; preemption evicts youngest first
+        # chunked prefill: prompt(+prefix) tokens not yet absorbed into the
+        # cache; the lane joins decode once this drains
+        self.pending: list[int] = pending or []
 
 
 def _next_pow2(n: int) -> int:
@@ -121,6 +166,16 @@ class DecodeEngine:
     kv_pool / num_pages / page_size: enable the paged layout — pass a
         prebuilt ``PagedKVPool`` or just ``num_pages`` (+ optional
         ``page_size``, default 16) to have the engine build one.
+    steps_per_dispatch: decode steps fused into one on-device scan (K).
+        The host syncs once per K tokens; admission/preemption happen at
+        dispatch boundaries.  Greedy streams are bit-identical across K.
+    donate: donate the cache pytree + token buffer into the jitted
+        executables so the cache updates in place (no per-step full-cache
+        copy).  ``False`` keeps the copying baseline; streams are
+        bit-identical either way.
+    prefill_chunk: absorb prompts longer than this in fixed-size chunks
+        interleaved with decode dispatches (attention-family archs only;
+        ignored for recurrent-state and sliding-window archs).
     prefill_buckets: static prompt-pad lengths for batched prefill
         (default: powers of two up to ``max_len``).  Ignored for archs
         with recurrent state, which group by exact prompt length.
@@ -139,6 +194,9 @@ class DecodeEngine:
         kv_pool: Optional[PagedKVPool] = None,
         num_pages: Optional[int] = None,
         page_size: int = 16,
+        steps_per_dispatch: int = 1,
+        donate: bool = True,
+        prefill_chunk: Optional[int] = None,
         prefill_buckets: Optional[Sequence[int]] = None,
         max_prefill_batch: Optional[int] = None,
     ):
@@ -146,13 +204,24 @@ class DecodeEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        if steps_per_dispatch < 1:
+            raise ValueError(f"steps_per_dispatch must be >= 1, got {steps_per_dispatch}")
+        self.steps_per_dispatch = steps_per_dispatch
+        self.donate = donate
         if kv_pool is None and num_pages is not None:
             kv_pool = PagedKVPool(
                 model, max_batch=max_batch, max_len=max_len,
                 num_pages=num_pages, page_size=page_size,
+                lookahead=steps_per_dispatch,
             )
         self.pool = kv_pool
         if self.pool is not None:
+            if self.pool.layout.lookahead < steps_per_dispatch:
+                raise ValueError(
+                    f"pool lookahead {self.pool.layout.lookahead} < "
+                    f"steps_per_dispatch {steps_per_dispatch}; build the pool "
+                    "with lookahead >= K"
+                )
             self.layout = self.pool.layout
             self.cache = self.pool.cache
         else:
@@ -164,18 +233,26 @@ class DecodeEngine:
         self.key = jax.random.PRNGKey(seed)
         self._next_uid = 0
         self._admit_seq = 0
-        self.decode_steps = 0
+        self.decode_steps = 0  # logical token steps (dispatches × K)
+        self.dispatches = 0  # jitted decode calls == host syncs
         self.admitted = 0
         self.preemptions = 0
         self.max_concurrency = 0
         self.prefill_batches = 0
+        self.prefill_chunks = 0  # chunked-prefill dispatches
         self.tokens_generated = 0
         self.decode_tokens = 0  # tokens produced by decode steps (not prefill)
-        self.decode_wall_s = 0.0
+        self.decode_wall_s = 0.0  # dispatch wall time (device + launch)
+        self.sched_host_s = 0.0  # host scheduling time around dispatches
         self._util_sum = 0.0
         self._util_n = 0
         self._kv_bytes_sum = 0.0  # live KV bytes summed over decode steps
         self._kv_row_b: Optional[tuple[int, int]] = None  # _kv_row_bytes cache
+        # slot-change-triggered host constants (temps/topks/eos/active/keep
+        # and the static sampling flags are rebuilt only when the slot set
+        # changes, not per dispatch)
+        self._slots_dirty = True
+        self._consts: Optional[dict] = None
 
         # recurrent state cannot absorb pad tokens: group by exact length
         plan = layer_plan(model.cfg)
@@ -183,6 +260,15 @@ class DecodeEngine:
         self._exact_prefill = any(
             _block_mixer_mlp(k, model.cfg)[0] in ("ssm", "rec") for k in kinds
         )
+        # chunked prefill needs every mixer to read mid-prompt state from
+        # the cache: attention-family only, and non-windowed (a window that
+        # slides during the prompt would need windowed chunk views)
+        self._chunk_ok = (
+            prefill_chunk is not None
+            and not self._exact_prefill
+            and model.cfg.local_window is None
+        )
+        self.prefill_chunk = prefill_chunk if self._chunk_ok else None
         if prefill_buckets:
             buckets = sorted(int(b) for b in prefill_buckets if 0 < int(b) <= max_len)
         else:
@@ -196,18 +282,37 @@ class DecodeEngine:
         self.max_prefill_batch = max_prefill_batch or max_batch
 
         layout = self.layout
+        eng_max_len = max_len
 
-        def _decode(params, tok, cache, temps, topks, active, key,
-                    need_sample, need_topk):
-            logits, cache = model.decode_step(params, tok, cache, layout)
-            # idle lanes: pin position so a freed slot cannot creep past the
-            # cache bound while it waits for its next request
-            cache["len"] = jnp.where(active, cache["len"], 0)
-            nxt = sample_tokens(
-                logits, temps, topks, key,
-                need_sample=need_sample, need_topk=need_topk,
+        def _decode(params, tok, cache, temps, topks, active, keep, key,
+                    eos, budget, k, need_sample, need_topk):
+            # K decode steps fused into one on-device scan: embed → attend →
+            # sample → scatter-into-cache → stop-detect, K times, one host
+            # sync.  ``active`` lanes decode; ``keep`` lanes (occupied but
+            # not decoding, e.g. mid chunked-prefill) hold their length;
+            # free lanes pin to 0 so they cannot creep past the cache bound.
+            def body(carry, _):
+                tok, cache, active, budget, key = carry
+                len_prev = cache["len"]
+                logits, cache = model.decode_step(params, tok, cache, layout)
+                cache["len"] = jnp.where(
+                    active, cache["len"], jnp.where(keep, len_prev, 0)
+                )
+                ks = jax.random.split(key)
+                key, sub = ks[0], ks[1]
+                nxt = sample_tokens(
+                    logits, temps, topks, sub,
+                    need_sample=need_sample, need_topk=need_topk,
+                )
+                nxt, active, budget = advance_stops(
+                    nxt, active, budget, eos, cache["len"], eng_max_len
+                )
+                return (nxt, cache, active, budget, key), nxt
+
+            (tok, cache, active, budget, key), block = jax.lax.scan(
+                body, (tok, cache, active, budget, key), None, length=k
             )
-            return jnp.where(active, nxt, 0), logits, cache
+            return block, tok, cache, key
 
         def _prefill(params, tokens, lens, lanes, cache, temps, topks, key,
                      need_sample, need_topk):
@@ -226,14 +331,29 @@ class DecodeEngine:
             )
             return first, cache
 
+        def _chunk(params, tokens, cache, lane, start, length):
+            return model.prefill_chunk(
+                params, tokens, cache, lane, start, length, layout
+            )
+
         # the need_* flags are static so all-greedy batches compile to a
         # bare argmax (no vocab sort / categorical in the decode hot path);
-        # at most 4 _decode variants exist, warmed untimed on first use
+        # at most 4 _decode variants exist, warmed untimed on first use.
+        # donate_argnums hands the cache (and the decode's token buffer) to
+        # XLA for in-place update — without it every dispatch copies the
+        # whole pool because the engine reuses the input cache.
         self._decode = jax.jit(
-            _decode, static_argnames=("need_sample", "need_topk")
+            _decode,
+            static_argnames=("k", "need_sample", "need_topk"),
+            donate_argnums=(1, 2) if donate else (),
         )
         self._prefill = jax.jit(
-            _prefill, static_argnames=("need_sample", "need_topk")
+            _prefill,
+            static_argnames=("need_sample", "need_topk"),
+            donate_argnums=(4,) if donate else (),
+        )
+        self._chunk = jax.jit(
+            _chunk, donate_argnums=(2,) if donate else ()
         )
         self._warmed: set[tuple[bool, bool]] = set()
 
@@ -278,6 +398,7 @@ class DecodeEngine:
         out.append(GenerationResult(s.uid, s.prompt, s.generated, reason))
         self.tokens_generated += len(s.generated)
         self.slots[i] = None
+        self._slots_dirty = True
         if self.pool is not None:
             self.pool.release(i)
 
@@ -285,7 +406,10 @@ class DecodeEngine:
         self, i: int, token: int, out: list[GenerationResult], *,
         from_decode: bool = False,
     ) -> None:
-        """Record a freshly sampled token for slot i; finish on a stop."""
+        """Record a freshly sampled token for slot i; finish on a stop.
+
+        These rules are mirrored on device by ``sampling.advance_stops``
+        (the K-step scan's freeze logic) — keep the two in lockstep."""
         s = self.slots[i]
         sp = s.sampling
         if sp.eos_id >= 0 and token == sp.eos_id:
@@ -305,6 +429,7 @@ class DecodeEngine:
         """Evict lane i: free its pages, requeue it with a resume prefix."""
         s = self.slots[i]
         self.slots[i] = None
+        self._slots_dirty = True
         self.pool.release(i)
         self.preemptions += 1
         self.queue.appendleft(
@@ -320,9 +445,14 @@ class DecodeEngine:
         return self.prefill_buckets[-1]
 
     def _admit(self, out: list[GenerationResult]) -> None:
-        """Move queued requests into lanes; one batched prefill per bucket."""
+        """Move queued requests into lanes; one batched prefill per bucket.
+
+        Prompts longer than ``prefill_chunk`` take the chunked route: the
+        lane is claimed (and its pages reserved) now, but the prompt is
+        absorbed chunk-by-chunk across the following scheduling steps."""
         picked: list[tuple[_Request, int, int]] = []
-        while self.queue and len(picked) < self.max_prefill_batch:
+        n_taken = 0
+        while self.queue and n_taken < self.max_prefill_batch:
             i = self._free_slot()
             if i is None:
                 break
@@ -331,8 +461,19 @@ class DecodeEngine:
             if self.pool is not None and not self.pool.alloc_prefill(i, length):
                 break  # pool pressure: retry next step, after frees/evictions
             self.queue.popleft()
+            n_taken += 1
+            if self.prefill_chunk is not None and length > self.prefill_chunk:
+                self.slots[i] = _Slot(
+                    req, pos=0, seq=self._admit_seq,
+                    pending=list(req.prompt) + list(req.prefix),
+                )
+                self._admit_seq += 1
+                self.admitted += 1
+                self._slots_dirty = True
+                continue
             self.slots[i] = _Slot(req, pos=length, seq=self._admit_seq)
             self._admit_seq += 1
+            self._slots_dirty = True
             picked.append((req, i, length))
         if not picked:
             return
@@ -365,11 +506,16 @@ class DecodeEngine:
         self.key, sub = jax.random.split(self.key)
         if self.pool is not None:
             self.cache["tables"] = self.pool.device_tables()
-        first, self.cache = self._prefill(
-            self.params, jnp.asarray(tokens), jnp.asarray(lens),
-            jnp.asarray(lanes), self.cache, jnp.asarray(temps),
-            jnp.asarray(topks), sub, **flags,
-        )
+        with _quiet_donation():
+            first, self.cache = self._prefill(
+                self.params, jnp.asarray(tokens), jnp.asarray(lens),
+                jnp.asarray(lanes), self.cache, jnp.asarray(temps),
+                jnp.asarray(topks), sub, **flags,
+            )
+        if self.pool is not None:
+            # the donated call consumed the table buffers the pool held;
+            # re-anchor its incremental sync on the returned arrays
+            self.pool.adopt_tables(self.cache.get("tables"))
         self.tokens = self.tokens.at[lanes].set(first, mode="drop")
         self.prefill_batches += 1
         host_first = np.asarray(first)
@@ -377,21 +523,79 @@ class DecodeEngine:
             self.admitted += 1
             self._absorb(i, int(host_first[r]), out)
 
+    def _advance_chunks(self, out: list[GenerationResult]) -> None:
+        """One prompt chunk per chunk-prefilling lane, then back to decode.
+
+        The final chunk's logits seed the request's first sampled token, so
+        a lane never idles fully-prefilled-but-unsampled across a dispatch.
+        """
+        csz = self.prefill_chunk
+        for i, s in enumerate(self.slots):
+            if s is None or not s.pending:
+                continue
+            part = s.pending[:csz]
+            toks = np.zeros((1, csz), np.int32)
+            toks[0, : len(part)] = part
+            if self.pool is not None:
+                self.cache["tables"] = self.pool.device_tables()
+            with _quiet_donation():
+                logits, self.cache = self._chunk(
+                    self.params, jnp.asarray(toks), self.cache,
+                    np.int32(i), np.int32(s.pos), np.int32(len(part)),
+                )
+            if self.pool is not None:
+                self.pool.adopt_tables(self.cache.get("tables"))
+            s.pos += len(part)
+            s.pending = s.pending[len(part):]
+            self.prefill_chunks += 1
+            if not s.pending:
+                self.key, sub = jax.random.split(self.key)
+                sp = s.sampling
+                first = sample_tokens(
+                    logits,
+                    jnp.asarray([sp.temperature], jnp.float32),
+                    jnp.asarray([sp.top_k], jnp.int32),
+                    sub,
+                    need_sample=sp.temperature > 0,
+                    need_topk=sp.top_k > 0,
+                )
+                self.tokens = self.tokens.at[i].set(first[0])
+                self._slots_dirty = True
+                self._absorb(i, int(np.asarray(first)[0]), out)
+
     def _ensure_capacity(self, out: list[GenerationResult]) -> None:
-        """Back every active lane's next decode write; preempt on pressure.
+        """Back every decoding lane's next K writes; preempt on pressure.
 
         Lanes are served oldest-first and victims chosen youngest-first, so
         the oldest request always makes progress (a request that could
-        never fit alone is rejected at submit)."""
+        never fit alone is rejected at submit).  Reserving the whole
+        dispatch up front (``ensure_steps``) is what rules out mid-scan
+        pool exhaustion."""
         if self.pool is None:
             return
         order = sorted(
-            (i for i, s in enumerate(self.slots) if s is not None),
+            (
+                i for i, s in enumerate(self.slots)
+                if s is not None and not s.pending
+            ),
             key=lambda i: self.slots[i].seq,
         )
         for i in order:
-            while self.slots[i] is not None and not self.pool.ensure_step(
-                i, self.slots[i].pos
+            s = self.slots[i]
+            if s is None:  # already evicted as an earlier lane's victim
+                continue
+            # a lane whose remaining token budget is < K freezes on device
+            # before the scan ends — don't reserve (and potentially preempt
+            # someone for) pages its writes will never reach
+            k = max(
+                1,
+                min(
+                    self.steps_per_dispatch,
+                    s.sampling.max_new_tokens - len(s.generated),
+                ),
+            )
+            while self.slots[i] is not None and not self.pool.ensure_steps(
+                i, self.slots[i].pos, k
             ):
                 victim = max(
                     (j for j, t in enumerate(self.slots) if t is not None),
@@ -401,12 +605,61 @@ class DecodeEngine:
                 if victim == i:
                     break
 
+    def _slot_consts(self) -> dict:
+        """Per-lane device constants, rebuilt only when the slot set changes
+        (not per dispatch — the per-step rebuild was pure host overhead)."""
+        if not self._slots_dirty and self._consts is not None:
+            return self._consts
+        decode = [s is not None and not s.pending for s in self.slots]
+        keep = [s is not None for s in self.slots]
+        self._consts = {
+            "active_np": np.array(decode),
+            "active": jnp.asarray(np.array(decode)),
+            "keep": jnp.asarray(np.array(keep)),
+            "temps": jnp.asarray(
+                [
+                    s.sampling.temperature if (s and not s.pending) else 0.0
+                    for s in self.slots
+                ],
+                jnp.float32,
+            ),
+            "topks": jnp.asarray(
+                [
+                    s.sampling.top_k if (s and not s.pending) else 0
+                    for s in self.slots
+                ],
+                jnp.int32,
+            ),
+            "eos": jnp.asarray(
+                [
+                    s.sampling.eos_id if (s and not s.pending) else -1
+                    for s in self.slots
+                ],
+                jnp.int32,
+            ),
+            "need_sample": any(
+                s is not None and not s.pending and s.sampling.temperature > 0
+                for s in self.slots
+            ),
+            "need_topk": any(
+                s is not None and not s.pending and s.sampling.top_k > 0
+                for s in self.slots
+            ),
+        }
+        self._slots_dirty = False
+        return self._consts
+
     def step(self) -> list[GenerationResult]:
-        """Admit what fits, run one decode step; return finished requests."""
+        """One scheduling step: admit what fits, advance chunked prefills,
+        run one fused K-step decode dispatch; return finished requests."""
         out: list[GenerationResult] = []
         self._admit(out)
+        if self.prefill_chunk is not None:
+            self._advance_chunks(out)
+        t_prefill_done = time.perf_counter()
         self._ensure_capacity(out)
-        active = np.array([s is not None for s in self.slots])
+        consts = self._slot_consts()
+        active = consts["active_np"]
         self.max_concurrency = max(self.max_concurrency, int(active.sum()))
         if not active.any():
             return out
@@ -415,45 +668,58 @@ class DecodeEngine:
         self._kv_bytes_sum += self._live_kv_bytes()
         if self.pool is not None:
             self.cache["tables"] = self.pool.device_tables()
-        self.key, sub = jax.random.split(self.key)
-        temps = jnp.asarray(
-            [s.sampling.temperature if s else 0.0 for s in self.slots], jnp.float32
-        )
-        topks = jnp.asarray(
-            [s.sampling.top_k if s else 0 for s in self.slots], jnp.int32
-        )
+        k = self.steps_per_dispatch
+        budget = np.zeros((self.max_batch,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is not None and not s.pending:
+                budget[i] = s.sampling.max_new_tokens - len(s.generated)
         flags = dict(
-            need_sample=any(
-                s is not None and s.sampling.temperature > 0 for s in self.slots
-            ),
-            need_topk=any(
-                s is not None and s.sampling.top_k > 0 for s in self.slots
-            ),
+            need_sample=consts["need_sample"], need_topk=consts["need_topk"]
         )
         args = (
-            self.params, self.tokens, self.cache, temps, topks,
-            jnp.asarray(active), sub,
+            self.params, self.tokens, self.cache, consts["temps"],
+            consts["topks"], consts["active"], consts["keep"], self.key,
+            consts["eos"], jnp.asarray(budget),
         )
-        sig = (flags["need_sample"], flags["need_topk"])
+        sig = (k, flags["need_sample"], flags["need_topk"])
+        t_sched = time.perf_counter()  # warmup compile time is not host overhead
         if sig not in self._warmed:
             # untimed warmup: trace+compile of this variant must not land in
             # decode_wall_s (it would dominate ms_per_decode_step on short
-            # runs); the result is discarded and the timed call recomputes
-            jax.block_until_ready(self._decode(*args, **flags))
+            # runs).  The warmup runs on *copies* of the donated operands so
+            # the originals stay valid for the timed call, whose result is
+            # the one absorbed.
+            wargs = args
+            if self.donate:
+                tok_c, cache_c = jax.tree_util.tree_map(
+                    jnp.copy, (args[1], args[2])
+                )
+                wargs = (args[0], tok_c, cache_c) + args[3:]
+            with _quiet_donation():
+                jax.block_until_ready(self._decode(*wargs, k=k, **flags))
             self._warmed.add(sig)
         t0 = time.perf_counter()
-        tok, _, self.cache = self._decode(*args, **flags)
-        tok.block_until_ready()
-        self.decode_wall_s += time.perf_counter() - t0
-        self.decode_steps += 1
+        with _quiet_donation():
+            block, tok, self.cache, self.key = self._decode(*args, k=k, **flags)
+            tok.block_until_ready()
+        t1 = time.perf_counter()
+        self.decode_wall_s += t1 - t0
+        self.decode_steps += k
+        self.dispatches += 1
         self.tokens = tok
-        host_tok = np.asarray(tok)
-        for i in range(self.max_batch):
-            if self.slots[i] is not None:
+        if self.pool is not None:
+            self.pool.adopt_tables(self.cache.get("tables"))
+        host_block = np.asarray(block)  # (K, B): one sync per K tokens
+        live = [i for i in range(self.max_batch) if active[i]]
+        for t in range(k):
+            for i in list(live):
                 self.slots[i].pos += 1  # mirror cache["len"] advancing
-        for i in range(self.max_batch):
-            if self.slots[i] is not None:
-                self._absorb(i, int(host_tok[i]), out, from_decode=True)
+            for i in list(live):
+                self._absorb(i, int(host_block[t, i]), out, from_decode=True)
+                if self.slots[i] is None:
+                    live.remove(i)
+        t_end = time.perf_counter()
+        self.sched_host_s += (t_sched - t_prefill_done) + (t_end - t1)
         return out
 
     def run(self) -> dict[int, GenerationResult]:
@@ -568,26 +834,43 @@ class DecodeEngine:
         # otherwise inflate tokens/s
         wb = self.weight_bytes_per_step()
         kvb = (
-            self._kv_bytes_sum / self.decode_steps if self.decode_steps else 0.0
+            self._kv_bytes_sum / self.dispatches if self.dispatches else 0.0
         )
+        total_wall = self.decode_wall_s + self.sched_host_s
         st = {
             "layout": self.layout.kind,
             "decode_steps": self.decode_steps,
+            "dispatches": self.dispatches,
+            "steps_per_dispatch": self.steps_per_dispatch,
+            "host_syncs": self.dispatches,
+            "donate": self.donate,
             "admitted": self.admitted,
             "preemptions": self.preemptions,
             "max_concurrency": self.max_concurrency,
             "prefill_batches": self.prefill_batches,
+            "prefill_chunks": self.prefill_chunks,
             "tokens_generated": self.tokens_generated,
             "decode_tokens": self.decode_tokens,
             "decode_wall_s": self.decode_wall_s,
+            "sched_host_s": self.sched_host_s,
             "kv_cache_bytes": self.kv_cache_bytes(),
             "hbm_cache_utilization": (
                 self._util_sum / self._util_n if self._util_n else 0.0
             ),
+            # per *logical token step*: device-side dispatch wall vs the
+            # host-scheduling overhead amortized over the K tokens it buys
             "ms_per_decode_step": (
                 self.decode_wall_s / self.decode_steps * 1e3
                 if self.decode_steps
                 else 0.0
+            ),
+            "ms_per_decode_step_host": (
+                self.sched_host_s / self.decode_steps * 1e3
+                if self.decode_steps
+                else 0.0
+            ),
+            "host_overhead_frac": (
+                self.sched_host_s / total_wall if total_wall > 0 else 0.0
             ),
             # decode-step roofline inputs: weight stream + mean live-KV read
             "weight_bytes_per_step": wb,
@@ -613,4 +896,7 @@ class DecodeEngine:
             st["token_utilization"] = (
                 live / (used * self.pool.layout.page_size) if used else 0.0
             )
+            st["table_full_uploads"] = self.pool.table_full_uploads
+            st["table_row_syncs"] = self.pool.table_row_syncs
+            st["table_syncs"] = self.pool.table_syncs
         return st

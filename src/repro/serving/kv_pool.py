@@ -7,22 +7,35 @@
   SSM / RG-LRU states stay per-lane),
 - the free-page list (page ids are *global*: one id reserves a
   ``page_size``-token block in **every** paged layer's pool at once), and
-- the per-lane page tables, mirrored host-side in numpy and shipped to the
-  device (``cache["tables"]``) whenever they change.
+- the per-lane page tables, mirrored host-side in numpy and synced to the
+  device (``cache["tables"]``) **incrementally**: mutations mark their lane
+  dirty, and ``device_tables`` scatters only the dirty rows into the
+  resident device arrays instead of re-uploading every lane's full table
+  each step (the PR-3 engine re-built the whole ``tables`` dict per decode
+  step).  The first call uploads everything once; steady-state decode with
+  a K-step dispatch uploads ``O(dirty lanes)`` rows per *dispatch*, and
+  zero when nothing changed.
 
 Two tables exist, depending on what the architecture needs:
 
 - ``full`` — append-only, ``ceil(max_len / page_size)`` slots per lane,
   used by non-windowed attention and MLA layers.  Slot ``p`` maps logical
   positions ``[p·ps, (p+1)·ps)``.
-- ``win`` — modular, ``ceil(window / page_size) + 1`` slots per lane, used
-  by sliding-window layers.  Position ``pos`` lives in slot
-  ``(pos // ps) % n_slots``; when the window slides wholly past a page the
-  page is evicted (returned to the free list) and its slot reused.
+- ``win`` — modular, ``ceil((window + lookahead - 1) / page_size) + 1``
+  slots per lane, used by sliding-window layers.  Position ``pos`` lives in
+  slot ``(pos // ps) % n_slots``; when the window slides wholly past a page
+  the page is evicted (returned to the free list) and its slot reused.  The
+  ``lookahead`` widening guarantees the pages a K-step fused dispatch will
+  write can all be pre-mapped *before* the dispatch without a modular slot
+  collision against any page still live mid-scan.
 
 The pool performs no scheduling itself: the engine asks ``can_admit`` /
-``alloc_prefill`` at admission, ``ensure_step`` before every decode write
-(growing tables on demand), and ``release`` on finish or preemption.
+``alloc_prefill`` at admission, ``ensure_steps(lane, pos, k)`` before every
+decode dispatch (reserving *all* K writes so mid-scan exhaustion cannot
+occur), and ``release`` on finish or preemption.  When the engine donates
+the cache into its jitted executables it must hand the returned table
+arrays back via ``adopt_tables`` — the device buffers the pool scattered
+into were consumed by the donation.
 """
 from __future__ import annotations
 
@@ -46,9 +59,11 @@ class PagedKVPool:
         num_pages: int,
         page_size: int = 16,
         dtype=None,
+        lookahead: int = 1,
     ):
         self.layout: PagedLayout = paged_layout_for(
-            model.cfg, max_len, page_size=page_size, num_pages=num_pages
+            model.cfg, max_len, page_size=page_size, num_pages=num_pages,
+            lookahead=lookahead,
         )
         self.max_batch = max_batch
         self.max_len = max_len
@@ -60,9 +75,13 @@ class PagedKVPool:
         # per-lane bookkeeping: logical page no. -> page id
         self._full_pages: list[dict[int, int]] = [dict() for _ in range(max_batch)]
         self._win_pages: list[dict[int, int]] = [dict() for _ in range(max_batch)]
-        self._dirty = True
+        self._dirty_lanes: set[int] = set(range(max_batch))
         self._dev_tables: Optional[dict] = None
         self.evicted_pages = 0  # whole pages freed by window sliding
+        # sync accounting (serve_bench host-overhead reporting)
+        self.table_full_uploads = 0  # whole-table device uploads
+        self.table_row_syncs = 0  # dirty rows scattered incrementally
+        self.table_syncs = 0  # device_tables calls that moved any data
 
     # -- accounting ----------------------------------------------------------
 
@@ -85,7 +104,7 @@ class PagedKVPool:
     def prefill_pages(self, prompt_len: int) -> int:
         """Pages a prompt needs *through its first decode write* at
         position ``prompt_len`` — reserving the next-write page up front
-        keeps ``ensure_step`` from preempting a freshly prefilled lane
+        keeps ``ensure_steps`` from preempting a freshly prefilled lane
         (which would waste the whole batched prefill)."""
         ps = self.layout.page_size
         boundary = 1 if prompt_len % ps == 0 else 0  # pos prompt_len opens a page
@@ -126,7 +145,7 @@ class PagedKVPool:
 
         No window eviction happens here: the prefill still scatters into
         the oldest window page, so it must stay mapped until the first
-        ``ensure_step`` (whose eviction runs after the prefill wrote)."""
+        ``ensure_steps`` (whose eviction runs after the prefill wrote)."""
         if self.prefill_pages(prompt_len) > len(self._free):
             return False
         lo, ps = self.layout, self.layout.page_size
@@ -150,37 +169,50 @@ class PagedKVPool:
                 pid = self._take()
                 self._win_pages[lane][next_pg] = pid
                 self._pt_win[lane, next_pg % lo.pages_win] = pid
-        self._dirty = True
+        self._dirty_lanes.add(lane)
         return True
 
-    def ensure_step(self, lane: int, pos: int) -> bool:
-        """Make the next decode write at ``pos`` backed; False = pool full.
+    def ensure_steps(self, lane: int, pos: int, k: int = 1) -> bool:
+        """Back the next ``k`` decode writes at ``pos..pos+k-1``; False =
+        pool full (nothing is allocated on failure — all-or-nothing, so a
+        preemption retry sees the pool unchanged).
 
-        Also evicts whole window pages the sliding window has moved past
-        (eager, so another lane can claim them this very step).
+        Reserving the whole dispatch up front is what makes the K-step
+        fused decode safe: the scan cannot run out of pages mid-flight, so
+        the host only ever preempts at dispatch boundaries.  Also evicts
+        whole window pages the sliding window has moved past *as of the
+        first write* (eager, so another lane can claim them this very
+        dispatch; pages expiring mid-scan are reclaimed at the next
+        boundary).
         """
         lo, ps = self.layout, self.layout.page_size
         if lo.win:
             self._evict_win(lane, pos)
-        need = 0
-        pg = pos // ps
-        if lo.has_full and pg not in self._full_pages[lane]:
-            need += 1
-        if lo.win and pg not in self._win_pages[lane]:
-            need += 1
-        if need > len(self._free):
+        k = max(1, min(k, self.max_len - pos))  # writes past max_len freeze
+        pages = range(pos // ps, (pos + k - 1) // ps + 1)
+        need_full = [
+            pg for pg in pages if lo.has_full and pg not in self._full_pages[lane]
+        ]
+        need_win = [
+            pg for pg in pages if lo.win and pg not in self._win_pages[lane]
+        ]
+        if len(need_full) + len(need_win) > len(self._free):
             return False
-        if lo.has_full and pg not in self._full_pages[lane]:
+        for pg in need_full:
             pid = self._take()
             self._full_pages[lane][pg] = pid
             self._pt_full[lane, pg] = pid
-            self._dirty = True
-        if lo.win and pg not in self._win_pages[lane]:
+            self._dirty_lanes.add(lane)
+        for pg in need_win:
             pid = self._take()
             self._win_pages[lane][pg] = pid
             self._pt_win[lane, pg % lo.pages_win] = pid
-            self._dirty = True
+            self._dirty_lanes.add(lane)
         return True
+
+    # back-compat alias (PR-2/3 call sites and tests)
+    def ensure_step(self, lane: int, pos: int) -> bool:
+        return self.ensure_steps(lane, pos, 1)
 
     def _evict_win(self, lane: int, pos: int) -> None:
         lo, ps = self.layout, self.layout.page_size
@@ -192,7 +224,7 @@ class PagedKVPool:
             self.evicted_pages += 1
             if self._pt_win[lane, pg % lo.pages_win] == pid:
                 self._pt_win[lane, pg % lo.pages_win] = lo.sentinel
-            self._dirty = True
+            self._dirty_lanes.add(lane)
 
     def release(self, lane: int) -> None:
         """Free every page a lane holds (request finished or preempted)."""
@@ -201,7 +233,7 @@ class PagedKVPool:
         for pg, pid in self._win_pages[lane].items():
             self._free.append(pid)
         if self._full_pages[lane] or self._win_pages[lane]:
-            self._dirty = True
+            self._dirty_lanes.add(lane)
         self._full_pages[lane] = {}
         self._win_pages[lane] = {}
         self._pt_full[lane, :] = self.layout.sentinel
@@ -210,21 +242,49 @@ class PagedKVPool:
     # -- device view ---------------------------------------------------------
 
     def device_tables(self) -> dict:
-        """The page tables as device arrays (re-uploaded only when dirty).
+        """The page tables as device arrays, synced *incrementally*.
 
         The arrays are already in *kernel layout*: contiguous ``(max_batch,
         n_slots)`` int32 with the out-of-bounds sentinel ``num_pages`` in
         every unmapped slot — exactly the operand ``kernels.paged_attn``
         scalar-prefetches to compute page addresses, and the same array the
-        gathered reference path indexes.  No per-step reshaping or
-        re-encoding happens between the host allocator and the kernel.
+        gathered reference path indexes.  The first call uploads the whole
+        tables once; after that only *dirty lanes* (rows touched since the
+        last sync) are scattered into the resident device arrays — the
+        steady-state decode dispatch moves ``O(changed rows)`` bytes, not
+        ``O(max_batch × n_slots)``.
         """
-        if self._dirty or self._dev_tables is None:
+        if self._dev_tables is None:
             t = {}
             if self.layout.pages_full:
                 t["full"] = jnp.asarray(self._pt_full)
             if self.layout.pages_win:
                 t["win"] = jnp.asarray(self._pt_win)
             self._dev_tables = t
-            self._dirty = False
+            self._dirty_lanes.clear()
+            self.table_full_uploads += 1
+            self.table_syncs += 1
+            return self._dev_tables
+        if self._dirty_lanes:
+            rows = sorted(self._dirty_lanes)
+            idx = jnp.asarray(rows, jnp.int32)
+            t = dict(self._dev_tables)
+            if self.layout.pages_full:
+                t["full"] = t["full"].at[idx].set(jnp.asarray(self._pt_full[rows]))
+            if self.layout.pages_win:
+                t["win"] = t["win"].at[idx].set(jnp.asarray(self._pt_win[rows]))
+            self._dev_tables = t
+            self._dirty_lanes.clear()
+            self.table_row_syncs += len(rows)
+            self.table_syncs += 1
         return self._dev_tables
+
+    def adopt_tables(self, tables: Optional[dict]) -> None:
+        """Re-anchor the incremental sync on the arrays a jitted call
+        returned.  Required after any executable that *donates* the cache:
+        the buffers ``device_tables`` last scattered into were consumed by
+        the donation, and the returned (aliased) arrays are the live ones.
+        Dirty lanes accumulated since remain dirty — they scatter onto the
+        adopted arrays at the next sync."""
+        if tables:
+            self._dev_tables = dict(tables)

@@ -5,6 +5,13 @@ this module samples the whole batch in one jittable call so heterogeneous
 requests share a single decode step. ``temperature == 0`` means greedy
 (argmax) and ``top_k == 0`` disables the top-k filter — both resolved with
 ``jnp.where`` so the function stays trace-stable across request mixes.
+
+:func:`advance_stops` is the device half of the engine's stop handling:
+inside a K-steps-per-dispatch fused decode the host cannot see mid-scan
+tokens, so per-lane EOS / token-budget / capacity stops are detected on
+device and finished lanes freeze (stop sampling, stop writing, stop
+advancing ``cache["len"]``) until the host absorbs the token block at the
+dispatch boundary and replays the same rules.
 """
 from __future__ import annotations
 
@@ -55,3 +62,28 @@ def sample_tokens(
     safe_t = jnp.where(temperature > 0, temperature, 1.0)
     sampled = jax.random.categorical(key, lf / safe_t[:, None], axis=-1)
     return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
+
+
+def advance_stops(
+    tokens: jnp.ndarray,  # (B,) int32: freshly sampled, pre-masking
+    active: jnp.ndarray,  # (B,) bool: lanes decoding this iteration
+    budget: jnp.ndarray,  # (B,) int32: tokens each lane may still append
+    eos_id: jnp.ndarray,  # (B,) int32: per-lane eos (< 0 = never)
+    new_len: jnp.ndarray,  # (B,) int32: prompt+generated after this append
+    max_len: int,  # engine-wide logical capacity
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Apply one decode iteration's stop rules on device.
+
+    Returns ``(tokens, active, budget)`` where finished/idle lanes emit 0
+    and drop out of ``active``.  Mirrors the host's ``_absorb`` exactly so
+    a lane frozen mid-scan stops at the same token the host-side replay of
+    the ``(K, B)`` block will stop at: EOS finishes without appending; an
+    appended token finishes on an exhausted ``max_new_tokens`` budget or on
+    hitting the logical cache capacity.
+    """
+    tokens = jnp.where(active, tokens, 0)
+    eos_hit = active & (eos_id >= 0) & (tokens == eos_id)
+    appended = active & ~eos_hit
+    budget = budget - appended.astype(budget.dtype)
+    done = eos_hit | (appended & ((budget <= 0) | (new_len >= max_len)))
+    return tokens, active & ~done, budget

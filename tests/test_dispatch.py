@@ -30,7 +30,7 @@ jax.config.update("jax_platform_name", "cpu")
 
 def test_registry_has_all_modes():
     reg = dispatch.registered()
-    for kernel in ("nm_spmm", "paged_attn"):
+    for kernel in ("nm_spmm", "paged_attn", "nm_mask"):
         assert set(reg[kernel]) == {"pallas", "interpret", "xla"}
 
 
@@ -61,15 +61,36 @@ def test_explicit_mode_beats_force():
         assert dispatch.resolve("nm_spmm", mode="interpret")[0] == "interpret"
 
 
-def test_legacy_wrapper_mapping():
+def test_ops_wrapper_modes():
+    """The legacy prefer_pallas/interpret knobs are retired: every route is
+    a dispatch mode, and all modes agree with the oracle."""
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
     w = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
     v, i = ref.nm_compress(w, 2, 4, 0)
     yr = ref.nm_spmm_ref(x, v, i, 2, 4)
-    for kw in (dict(prefer_pallas=False), dict(prefer_pallas=True, interpret=True),
-               dict()):
+    for kw in (dict(mode="xla"), dict(mode="interpret"), dict()):
         y = nm_spmm(x, v, i, 2, 4, **kw)
         np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
+    import inspect
+
+    from repro.kernels import ops
+
+    for fn in (ops.nm_spmm, ops.nm_mask_apply):
+        params = inspect.signature(fn).parameters
+        assert "prefer_pallas" not in params and "interpret" not in params
+        assert "mode" in params
+
+
+def test_nm_mask_dispatch_unsupported_shape_falls_to_xla():
+    """3-D / non-group-aligned weights take the reference on every mode —
+    a forced interpret sweep must not trip the kernel's 2-D assert."""
+    w3 = jax.random.normal(jax.random.PRNGKey(2), (16, 8, 4))
+    with dispatch.force_mode("interpret"):
+        mask, masked = dispatch.nm_mask(w3, 2, 4)
+    np.testing.assert_array_equal(
+        np.asarray(mask), np.asarray(ref.nm_mask(w3, 2, 4, 0))
+    )
+    np.testing.assert_array_equal(np.asarray(masked), np.asarray(mask * w3))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,345 @@
+"""Zero-copy fused decode loop: donation, K-steps-per-dispatch, chunked
+prefill, incremental page-table sync.
+
+Load-bearing guarantees of the dispatch-boundary engine:
+
+1. **Stream invariance** — greedy *and* sampled token streams are
+   bit-identical across {slab, paged} × {K=1, K=4} × {donated, undonated}:
+   donation only removes copies, and the K-step on-device scan consumes
+   the same per-step RNG splits and runs the same per-step math as the
+   host-driven loop.
+2. **On-device stop detection** — a lane that emits EOS or exhausts its
+   budget mid-scan freezes on device and the host replay of the ``(K, B)``
+   token block finishes it identically to the K=1 engine.
+3. **Preemption at dispatch boundaries** — ``ensure_steps`` reserves all K
+   writes up front, so an undersized pool preempts between dispatches
+   (never mid-scan) and resumed requests reproduce the un-preempted
+   stream.
+4. **Chunked prefill** — a long prompt absorbed in fixed-size chunks
+   interleaved with decode dispatches yields the same greedy streams as
+   the monolithic prefill, and recurrent/windowed archs gate it off.
+5. **Incremental table sync** — one full upload, then dirty-row scatters.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.configs import get_config
+from repro.models.model import TransformerLM
+from repro.serving import DecodeEngine, PagedKVPool, SamplingParams
+from repro.sparse_infer import compress_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _compressed(arch: str, seed=0):
+    cfg = get_config(arch, smoke=True)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    recipe = core.make_recipe(
+        "step", core.SparsityConfig(default=core.NMSparsity(2, 4))
+    )
+    return cfg, model, compress_params(recipe.export_sparse(params), recipe.sparsity)
+
+
+CFG, MODEL, COMP = _compressed("gpt2-paper")
+
+
+def _rand_prompt(seed, n, vocab=None):
+    vocab = vocab or CFG.vocab
+    return [int(t) for t in jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, vocab)]
+
+
+def _stream(eng, prompts, sps):
+    uids = [eng.submit(p, sp) for p, sp in zip(prompts, sps)]
+    res = eng.run()
+    return (
+        [res[u].tokens for u in uids],
+        [res[u].finish_reason for u in uids],
+    )
+
+
+# ---------------------------------------------------------------------------
+# the full invariance matrix: layout × K × donation, greedy + sampled lanes
+# ---------------------------------------------------------------------------
+
+
+def test_stream_invariance_matrix():
+    """{slab, paged} × {K=1, K=4} × {donated, undonated} produce identical
+    greedy *and* sampled streams.  All requests are admitted upfront so
+    every variant runs the same schedule (mid-run admission shifts which
+    step index a sampled lane draws from — greedy alone would not catch a
+    broken RNG thread)."""
+    prompts = [_rand_prompt(100 + r, 3 + 3 * r) for r in range(4)]
+    sps = [SamplingParams(max_new_tokens=4 + 2 * r) for r in range(4)]
+    sps[1] = SamplingParams(temperature=0.8, top_k=7, max_new_tokens=6)
+
+    def run(**kw):
+        eng = DecodeEngine(MODEL, COMP, max_batch=4, max_len=32, seed=5, **kw)
+        return _stream(eng, prompts, sps), eng
+
+    base, _ = run(donate=False, steps_per_dispatch=1)
+    paged = dict(num_pages=24, page_size=4)
+    for kw in (
+        dict(donate=True, steps_per_dispatch=1),
+        dict(donate=False, steps_per_dispatch=4),
+        dict(donate=True, steps_per_dispatch=4),
+        dict(donate=False, steps_per_dispatch=1, **paged),
+        dict(donate=True, steps_per_dispatch=1, **paged),
+        dict(donate=False, steps_per_dispatch=4, **paged),
+        dict(donate=True, steps_per_dispatch=4, **paged),
+    ):
+        got, eng = run(**kw)
+        assert got == base, kw
+        if kw["steps_per_dispatch"] == 4:
+            # K tokens per host sync: strictly fewer dispatches than steps
+            assert eng.dispatches * 4 == eng.decode_steps
+            assert eng.dispatches < sum(sp.max_new_tokens for sp in sps)
+
+
+def test_k4_windowed_and_mla_archs_match_k1():
+    """The fused scan through the modular window table (pre-mapped
+    lookahead pages) and the MLA latent path reproduce K=1 exactly."""
+    for arch, max_len, gen, pages, ps in (
+        ("recurrentgemma-9b", 40, 20, 32, 4),  # decodes past the window
+        ("deepseek-v2-lite-16b", 24, 6, 24, 4),
+    ):
+        cfg, model, comp = _compressed(arch)
+        prompts = [_rand_prompt(9, 5, cfg.vocab), _rand_prompt(10, 11, cfg.vocab)]
+        sps = [SamplingParams(max_new_tokens=gen)] * 2
+        base = _stream(
+            DecodeEngine(model, comp, max_batch=2, max_len=max_len, donate=False),
+            prompts, sps,
+        )
+        got = _stream(
+            DecodeEngine(
+                model, comp, max_batch=2, max_len=max_len,
+                steps_per_dispatch=4, num_pages=pages, page_size=ps,
+            ),
+            prompts, sps,
+        )
+        assert got == base, arch
+
+
+# ---------------------------------------------------------------------------
+# on-device stop detection: lanes freeze mid-scan
+# ---------------------------------------------------------------------------
+
+
+def test_lane_finishes_mid_scan_eos_and_budget():
+    """With K=4, an EOS emitted at a non-boundary step index and a budget
+    exhausted mid-scan must freeze those lanes on device: same streams and
+    finish reasons as K=1, and sibling lanes unperturbed."""
+    prompts = [_rand_prompt(200 + r, 4 + r) for r in range(3)]
+    base_sps = [SamplingParams(max_new_tokens=9)] * 3
+    base, _ = _stream(
+        DecodeEngine(MODEL, COMP, max_batch=3, max_len=32, donate=False),
+        prompts, base_sps,
+    )
+    # eos = lane 0's 2nd token -> fires at scan iteration 1 of dispatch 0;
+    # lane 1's budget of 3 exhausts at iteration 2; lane 2 runs through
+    eos = base[0][1]
+    sps = [
+        SamplingParams(max_new_tokens=9, eos_id=eos),
+        SamplingParams(max_new_tokens=3),
+        SamplingParams(max_new_tokens=9),
+    ]
+    want_tokens = [base[0][: base[0].index(eos)], base[1][:3], base[2]]
+    want_reasons = ["eos", "length", "length"]
+    for kw in (dict(), dict(num_pages=24, page_size=4)):
+        toks, reasons = _stream(
+            DecodeEngine(
+                MODEL, COMP, max_batch=3, max_len=32, steps_per_dispatch=4, **kw
+            ),
+            prompts, sps,
+        )
+        assert toks == want_tokens, kw
+        assert reasons == want_reasons, kw
+
+
+def test_cache_full_freezes_at_capacity_k4():
+    """A lane hitting the logical capacity mid-scan stops writing (its page
+    table has no slot past max_len) and finishes cache_full, same as K=1."""
+    prompt = _rand_prompt(7, 6)
+    sps = [SamplingParams(max_new_tokens=50)]
+    base = _stream(
+        DecodeEngine(MODEL, COMP, max_batch=1, max_len=10, donate=False),
+        [prompt], sps,
+    )
+    got = _stream(
+        DecodeEngine(
+            MODEL, COMP, max_batch=1, max_len=10, steps_per_dispatch=4,
+            num_pages=8, page_size=2,
+        ),
+        [prompt], sps,
+    )
+    assert got == base
+    assert base[1] == ["cache_full"] and len(base[0][0]) == 4
+
+
+# ---------------------------------------------------------------------------
+# preemption at dispatch boundaries
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_at_dispatch_boundary_resumes_exactly():
+    """K=4 + an undersized pool: ``ensure_steps`` reserves the whole
+    dispatch, so preemption happens only between dispatches and the
+    resumed request reproduces the un-preempted greedy stream."""
+    prompts = [_rand_prompt(100 + r, 5) for r in range(2)]
+    sps = [SamplingParams(max_new_tokens=8)] * 2
+    ref = DecodeEngine(MODEL, COMP, max_batch=2, max_len=16, seed=0, donate=False)
+    t_ref, r_ref = _stream(ref, prompts, sps)
+
+    eng = DecodeEngine(
+        MODEL, COMP, max_batch=2, max_len=16, seed=0,
+        num_pages=8, page_size=2, steps_per_dispatch=4,
+    )
+    t, r = _stream(eng, prompts, sps)
+    assert eng.preemptions > 0
+    assert t == t_ref and r == r_ref
+    assert all(x == "length" for x in r)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_matches_monolithic_and_interleaves():
+    """A long prompt absorbed in 8-token chunks (slab and paged, K=1 and
+    K=4) reproduces the monolithic-prefill greedy streams; the short
+    request decodes while the long prompt is still chunking."""
+    prompts = [_rand_prompt(1, 21), _rand_prompt(2, 4)]
+    sps = [SamplingParams(max_new_tokens=5), SamplingParams(max_new_tokens=8)]
+    base = _stream(
+        DecodeEngine(MODEL, COMP, max_batch=2, max_len=40, seed=3, donate=False),
+        prompts, sps,
+    )
+    for kw in (
+        dict(),
+        dict(num_pages=24, page_size=4, steps_per_dispatch=4),
+    ):
+        eng = DecodeEngine(
+            MODEL, COMP, max_batch=2, max_len=40, seed=3, prefill_chunk=8, **kw
+        )
+        got = _stream(eng, prompts, sps)
+        assert got == base, kw
+        assert eng.prefill_chunks == 3  # ceil(21 / 8)
+        # the short prompt never waited for the long one's prefill
+        assert eng.stats()["prefill_batches"] == 1
+
+
+def test_chunked_prefill_mla_paged():
+    cfg, model, comp = _compressed("deepseek-v2-lite-16b")
+    prompts = [_rand_prompt(7, 17, cfg.vocab)]
+    sps = [SamplingParams(max_new_tokens=4)]
+    base = _stream(
+        DecodeEngine(model, comp, max_batch=1, max_len=28, donate=False),
+        prompts, sps,
+    )
+    eng = DecodeEngine(
+        model, comp, max_batch=1, max_len=28, prefill_chunk=6,
+        num_pages=16, page_size=4,
+    )
+    assert _stream(eng, prompts, sps) == base
+    assert eng.prefill_chunks == 3
+
+
+def test_chunked_prefill_gated_off_recurrent_and_windowed():
+    """Recurrent-state and sliding-window archs silently keep monolithic
+    prefill (their mixers cannot resume mid-prompt from the cache)."""
+    cfg, model, comp = _compressed("recurrentgemma-9b")
+    eng = DecodeEngine(model, comp, max_batch=1, max_len=40, prefill_chunk=4)
+    assert eng.prefill_chunk is None
+    prompts = [_rand_prompt(3, 11, cfg.vocab)]
+    sps = [SamplingParams(max_new_tokens=3)]
+    base = _stream(
+        DecodeEngine(model, comp, max_batch=1, max_len=40, donate=False),
+        prompts, sps,
+    )
+    assert _stream(eng, prompts, sps) == base
+    assert eng.prefill_chunks == 0
+
+
+# ---------------------------------------------------------------------------
+# incremental page-table sync + ensure_steps accounting
+# ---------------------------------------------------------------------------
+
+
+def test_device_tables_sync_incrementally():
+    _, model, _ = _compressed("gpt2-paper")
+    pool = PagedKVPool(model, max_batch=4, max_len=16, num_pages=16, page_size=2)
+    t0 = pool.device_tables()
+    assert pool.table_full_uploads == 1
+    # no mutation: same arrays, no new sync
+    assert pool.device_tables() is t0
+    assert pool.table_syncs == 1
+    # one lane mutates: exactly one dirty row scatters, others untouched
+    assert pool.alloc_prefill(2, 5)
+    t1 = pool.device_tables()
+    assert pool.table_full_uploads == 1 and pool.table_row_syncs == 1
+    np.testing.assert_array_equal(np.asarray(t1["full"]), pool._pt_full)
+    assert pool.alloc_prefill(0, 3)
+    pool.release(2)
+    t2 = pool.device_tables()
+    assert pool.table_row_syncs == 3  # lanes 0 and 2
+    np.testing.assert_array_equal(np.asarray(t2["full"]), pool._pt_full)
+
+
+def test_engine_run_uploads_tables_once_then_rows():
+    eng = DecodeEngine(
+        MODEL, COMP, max_batch=2, max_len=32, num_pages=16, page_size=8
+    )
+    prompts = [_rand_prompt(100 + r, 3 + 3 * r) for r in range(3)]
+    sps = [SamplingParams(max_new_tokens=6)] * 3
+    _stream(eng, prompts, sps)
+    st = eng.stats()
+    assert st["table_full_uploads"] == 1
+    assert st["table_row_syncs"] > 0
+    # incremental: far fewer rows moved than a per-dispatch full re-upload
+    assert st["table_row_syncs"] < st["dispatches"] * eng.max_batch
+
+
+def test_ensure_steps_reserves_all_k_writes():
+    _, model, _ = _compressed("gpt2-paper")
+    pool = PagedKVPool(
+        model, max_batch=2, max_len=32, num_pages=8, page_size=2, lookahead=4
+    )
+    assert pool.alloc_prefill(0, 3)  # pages 0..1 + boundary page 2... -> 2 pages
+    used = pool.used_pages
+    # next 4 writes at pos 3..6 span pages 1..3: pages 2 and 3 are new
+    assert pool.ensure_steps(0, 3, 4)
+    assert pool.used_pages >= used + 1
+    # all-or-nothing: an unsatisfiable reservation allocates nothing
+    pool2 = PagedKVPool(
+        model, max_batch=2, max_len=32, num_pages=3, page_size=2, lookahead=8
+    )
+    assert pool2.alloc_prefill(0, 4)  # 2 prompt pages + boundary page = 3
+    free_before = pool2.free_pages
+    assert not pool2.ensure_steps(0, 4, 8)  # needs 4 more pages, has 0
+    assert pool2.free_pages == free_before
+
+
+def test_donated_engine_reuses_pool_after_run():
+    """After a donated run the engine's cache/table handles stay live: a
+    second wave of requests on the same engine must serve correctly (the
+    adopt_tables re-anchoring)."""
+    eng = DecodeEngine(
+        MODEL, COMP, max_batch=2, max_len=32, seed=3, num_pages=16, page_size=8
+    )
+    prompts = [_rand_prompt(100 + r, 3 + 3 * r) for r in range(2)]
+    sps = [SamplingParams(max_new_tokens=4)] * 2
+    first = _stream(eng, prompts, sps)
+    again = _stream(eng, prompts, sps)  # slots + pages were fully recycled
+    ref = _stream(
+        DecodeEngine(
+            MODEL, COMP, max_batch=2, max_len=32, seed=3, num_pages=16,
+            page_size=8, donate=False,
+        ),
+        prompts, sps,
+    )
+    assert first[0] == ref[0]
+    assert [len(t) for t in again[0]] == [len(t) for t in first[0]]

@@ -99,5 +99,6 @@ def test_ops_wrappers_fallback_on_cpu():
 
 def test_ops_wrappers_pallas_interpret_path():
     w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
-    mask, masked = nm_mask_apply(w, 2, 4, prefer_pallas=True, interpret=True)
+    mask, masked = nm_mask_apply(w, 2, 4, mode="interpret")
     np.testing.assert_array_equal(np.asarray(mask), np.asarray(ref.nm_mask(w, 2, 4, 0)))
+    np.testing.assert_array_equal(np.asarray(masked), np.asarray(mask * w))
