@@ -38,12 +38,30 @@ paged fast path's read set).
    streams are asserted bit-identical to the K=1 undonated baseline
    (``greedy_parity_with_k1``).
 
+4. **sharded serving** (subprocess, forced-8-host-device CPU mesh): the
+   same compressed paged load served by ``launch/serve.py`` on a ``1,1``
+   and a ``2,4`` ``(data, model)`` mesh.  Each record carries the
+   per-shard weight / cache HBM bytes (what one device must hold — the
+   quantity TP exists to shrink) and the decode executable's collective
+   mix (counts + bytes by kind), so the sharding overhead is measurable
+   next to the single-device rows.
+
 Every row is also appended to a machine-readable ``BENCH_serve.json``
 (list of record dicts) so the perf trajectory accumulates across runs.
+**Schema note**: every record carries a ``mesh`` field —
+``{"shape": [...], "axes": [...]}`` of the serving mesh, with
+``{"shape": [1], "axes": []}`` meaning a single-device engine — so
+sharded and single-device sweeps stay comparable; a one-time
+``sweep == "schema"`` record in the JSON documents this.
 
     PYTHONPATH=src python -m benchmarks.run --only serve
 """
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
 
 import jax
 
@@ -55,6 +73,23 @@ from repro.serving import DecodeEngine, SamplingParams
 from repro.sparse_infer import compress_params, compression_report
 
 OUT_JSON = "BENCH_serve.json"
+
+# every record's ``mesh`` field: single-device engines record this so rows
+# sort/filter uniformly against sharded sweeps
+MESH_SINGLE = {"shape": [1], "axes": []}
+
+SCHEMA_NOTE = {
+    "suite": "serve",
+    "sweep": "schema",
+    "note": (
+        "records appended from the mesh-native serving PR onward carry "
+        "mesh={shape:[...],axes:[...]} (the serving mesh; "
+        "{shape:[1],axes:[]} = single-device; earlier rows predate the "
+        "field and were all single-device). sharded_serving rows add "
+        "*_per_shard HBM bytes and decode_collective_* fields from the "
+        "compiled decode executable."
+    ),
+}
 
 
 def _serving_trees(arch: str, nm):
@@ -96,6 +131,86 @@ def _hetero_prompts(cfg, n_requests: int, max_prompt: int) -> list[list[int]]:
     return out
 
 
+def _sharded_sweep(arch: str, nm, prompt_len: int, gen: int) -> list[dict]:
+    """Sweep 4: serve the compressed paged load tensor-parallel on an
+    emulated 8-device CPU mesh, via a ``launch/serve.py`` subprocess (the
+    ``--xla_force_host_platform_device_count`` flag must precede jax init,
+    which this process has long passed)."""
+    n, m = nm
+    records: list[dict] = []
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 " + env.get("XLA_FLAGS", "")
+    ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    for mesh_arg in ("1,1", "2,4"):
+        cmd = [
+            sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+            "--nm", f"{n}:{m}", "--batch", "2",
+            "--prompt-len", str(prompt_len), "--gen", str(gen),
+            # 16 pages: divisible by the 4-way model axis, so the pool's
+            # pages axis actually shards (sanitize_spec would otherwise
+            # degrade an odd page count to a replicated pool)
+            "--paged", "--page-size", "4", "--num-pages", "16",
+            "--mesh", mesh_arg,
+        ]
+        try:
+            out = subprocess.run(
+                cmd, capture_output=True, text=True, env=env, timeout=1200
+            )
+        except subprocess.TimeoutExpired:
+            emit(f"serve/{arch}/{n}:{m}/sharded/{mesh_arg}", 0.0, "TIMEOUT")
+            continue
+        summary = None
+        for line in out.stdout.splitlines():
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if "summary" in d:
+                summary = d["summary"]
+        if summary is None:
+            emit(
+                f"serve/{arch}/{n}:{m}/sharded/{mesh_arg}", 0.0,
+                f"FAILED rc={out.returncode}: {out.stderr[-200:]}",
+            )
+            continue
+        emit(
+            f"serve/{arch}/{n}:{m}/sharded/{mesh_arg}",
+            summary["ms_per_decode_step"] * 1e3,
+            f"w_bytes/shard={summary['weight_bytes_per_shard']} "
+            f"coll_bytes={summary['decode_collective_total']:.0f} "
+            f"repl_leaves={summary['replicated_weight_leaves']}",
+        )
+        records.append(
+            {
+                "suite": "serve",
+                "sweep": "sharded_serving",
+                "mesh": summary["mesh"],
+                "arch": arch,
+                "nm": f"{n}:{m}",
+                "mode": "compressed",
+                "layout": summary["layout"],
+                "batch": 2,
+                "us_per_decode_step": summary["ms_per_decode_step"] * 1e3,
+                "us_per_decode_step_host":
+                    summary["ms_per_decode_step_host"] * 1e3,
+                "host_overhead_frac": summary["host_overhead_frac"],
+                "tokens_per_s": summary["tokens_per_s"],
+                "decode_steps": summary["decode_steps"],
+                "weight_bytes_per_shard": summary["weight_bytes_per_shard"],
+                "cache_bytes_per_shard": summary["cache_bytes_per_shard"],
+                "decode_collective_bytes": summary["decode_collective_bytes"],
+                "decode_collective_total": summary["decode_collective_total"],
+                "replicated_weight_leaves":
+                    summary["replicated_weight_leaves"],
+            }
+        )
+    return records
+
+
 def run(
     arch: str = "gpt2-paper",
     nm=(2, 4),
@@ -135,6 +250,7 @@ def run(
                 {
                     "suite": "serve",
                     "sweep": "dense_vs_compressed",
+                    "mesh": MESH_SINGLE,
                     "arch": arch,
                     "nm": f"{n}:{m}",
                     "mode": mode,
@@ -185,6 +301,7 @@ def run(
             {
                 "suite": "serve",
                 "sweep": "slab_vs_paged",
+                "mesh": MESH_SINGLE,
                 "arch": arch,
                 "nm": f"{n}:{m}",
                 "mode": "compressed",
@@ -260,6 +377,7 @@ def run(
             {
                 "suite": "serve",
                 "sweep": "steps_per_dispatch",
+                "mesh": MESH_SINGLE,
                 "arch": arch,
                 "nm": f"{n}:{m}",
                 "mode": "compressed",
@@ -280,8 +398,23 @@ def run(
             }
         )
 
+    # -- sweep 4: sharded serving on an emulated 8-device CPU mesh -------------
+    records.extend(_sharded_sweep(arch, nm, prompt_len, gen))
+
     if out_json:
-        append_json(out_json, records)
+        # one-time schema note: documents the mesh field + per-shard columns
+        have_note = False
+        if os.path.exists(out_json):
+            try:
+                with open(out_json) as f:
+                    have_note = any(
+                        r.get("sweep") == "schema" for r in json.load(f)
+                    )
+            except (json.JSONDecodeError, OSError):
+                pass
+        append_json(
+            out_json, records if have_note else [SCHEMA_NOTE] + records
+        )
     # fail *after* persisting: a parity break must not discard the run's
     # records (the greedy_parity_with_k1 field marks the offending rows)
     assert not parity_failures, (

@@ -38,4 +38,8 @@ REPRO_KERNEL_MODE=xla python -m repro.launch.serve --arch gpt2-paper \
     --batch 2 --requests 3 --prompt-len 20 --gen 8 --paged --page-size 4 \
     --num-pages 32 --steps-per-dispatch 4 --prefill-chunk 8
 
+echo "== serve smoke (mesh-native engine, degenerate 1x1 mesh) =="
+python -m repro.launch.serve --arch gpt2-paper --batch 2 --requests 2 \
+    --prompt-len 6 --gen 6 --paged --page-size 4 --num-pages 16 --mesh 1,1
+
 echo "smoke OK"

@@ -4,6 +4,14 @@ from repro.distributed.sharding import (
     batch_pspecs,
     cache_pspecs,
     state_pspecs,
+    sanitize_spec,
     DP_AXES,
     MODEL_AXIS,
+)
+from repro.distributed.compressed_pspecs import (
+    compressed_pspec,
+    serving_param_pspecs,
+    serving_param_shardings,
+    serving_cache_pspecs,
+    serving_cache_shardings,
 )

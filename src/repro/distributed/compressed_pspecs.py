@@ -1,0 +1,311 @@
+"""PartitionSpecs for serving trees: ``CompressedTensor`` leaves + caches.
+
+The training-side rules in ``distributed.sharding`` speak dense shapes.  A
+serving tree is different in two ways:
+
+1. **Compressed weights.**  An N:M-compressed leaf stores ``values`` /
+   ``indices`` whose reduction axis has shrunk to ``n/m`` of the dense dim
+   and whose groups must never straddle a shard (a shard owns whole M-wide
+   groups or the ``nm_spmm`` decompress reads across devices).  The rule
+   here derives each compressed leaf's spec *from the dense rule for the
+   same leaf name*: TP lands on the non-compressed (output) dim by
+   default, and stays on the compressed (reduction) dim only when the
+   dense dim divides by ``M × axis_size`` — whole groups per shard.  Every
+   leaf then runs through :func:`sharding.sanitize_spec` against its
+   *stored* shape (alignment padding included), so odd vocab dims, tiny
+   smoke shapes, and MQA heads degrade to replication per-dim instead of
+   erroring.
+
+2. **Serving caches.**  The slab cache reuses :func:`sharding.cache_pspecs`
+   (sequence axis over ``model`` — context-parallel decode).  The paged
+   pool has no per-lane sequence axis: its ``(num_pages, page_size, ...)``
+   arrays shard the *pages* axis over ``model`` (``kv_shard="seq"``; each
+   shard owns a slice of the physical pool, the sequence-sharding
+   analogue) or the trailing feature axis (``kv_shard="feature"``).  Page
+   tables are replicated — every shard resolves logical→physical addresses
+   locally and the gather into the page-sharded pool is partitioned by
+   GSPMD.  O(1) recurrent states stay lane-sharded over the DP axes.
+
+Both entry points return trees aligned with the input tree (compressed
+leaves map to a ``CompressedTensor`` whose children are the two specs /
+shardings), so the results feed ``jax.jit(in_shardings=...)`` and
+``jax.device_put`` directly.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    MODEL_AXIS,
+    _dp,
+    param_pspec,
+    sanitize_spec,
+)
+from repro.models.cache import PagedLayout
+from repro.sparse_infer.compress import CompressedTensor
+from repro.utils.tree import _path_str
+
+
+def _axis_size(entry, mesh: Mesh) -> int:
+    """Total device count behind one spec entry (axis name or tuple)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    k = 1
+    for a in axes:
+        k *= sizes.get(a, 1)
+    return k
+
+
+# leaves whose output dim reshapes to (heads, head_dim) and is then sliced
+# (RoPE rotation halves, MLA nope/rope/v splits): TP on that dim must own
+# *whole heads* — a partially-sharded head_dim is a resharding hazard and an
+# observed XLA SPMD miscompile (CPU backend, jax 0.4.37: sharded-k RoPE
+# returned wrong values, not just reordered sums).
+_HEAD_GATED = (
+    (re.compile(r"attn/(wq|bias_q|w_q)$"), lambda cfg: cfg.n_heads),
+    (re.compile(r"attn/(wk|wv|bias_k|bias_v)$"), lambda cfg: cfg.n_kv),
+    (re.compile(r"attn/w_ukv$"), lambda cfg: cfg.n_heads),
+)
+# output is a packed concat that downstream code slices apart (mamba2's
+# (z, xbc, dt); the conv channels): never TP the packed dim
+_SLICED_OUT = re.compile(r"mixer/(w_in|conv_w)$")
+# MoE expert stacks: training shards the expert axis (EP) with the
+# dispatch buffers constrained to match (``moe_mlp``'s ``ep_constraint``).
+# The serving engine doesn't thread that constraint, and an
+# expert-axis-sharded stack under plain GSPMD miscompiles the sort-based
+# dispatch's sharded gathers (observed on the CPU backend, same class as
+# the RoPE bug above) — serve them reduction-dim TP'd instead (exact
+# psum); true EP serving is a ROADMAP item.
+_EP_STACKS = re.compile(r"moe/w_(gate|up|down)_e$")
+
+
+def _out_dim_ok(name: str, cfg, entry, mesh: Mesh) -> bool:
+    """May ``entry`` shard this leaf's output dim?  (Head/concat gates.)"""
+    if cfg is None:
+        return True
+    if _SLICED_OUT.search(name):
+        return False
+    for rx, h in _HEAD_GATED:
+        if rx.search(name):
+            return h(cfg) % _axis_size(entry, mesh) == 0
+    return True
+
+
+def _serving_entries(
+    name: str, ndim: int, mesh: Mesh, cfg, *, fsdp: bool = False
+) -> list:
+    """Dense-rule spec entries adjusted for serving-time execution safety.
+
+    When the arch config is known, TP entries that would shard *through* a
+    head or packed-concat structure move to the reduction dim instead
+    (partial matmul + psum — exact up to rounding, output replicated), and
+    matmul weights the TP rules leave untouched (e.g. MLA's ``w_dkv``,
+    whose dense rule is FSDP-only) get reduction-dim TP so serving never
+    materializes a fully-replicated weight leaf.
+    """
+    base = param_pspec(name, ndim, fsdp=fsdp)
+    entries = list(tuple(base)) + [None] * (ndim - len(tuple(base)))
+    if cfg is None or ndim < 1:
+        return entries
+    if _EP_STACKS.search(name) and ndim >= 2:
+        entries = [None] * ndim
+        entries[-2] = MODEL_AXIS
+        return entries
+    is_bias = "bias" in name
+    if entries[-1] is not None and not _out_dim_ok(
+        name, cfg, entries[-1], mesh
+    ):
+        ent = entries[-1]
+        entries[-1] = None
+        if not is_bias and ndim >= 2 and entries[-2] is None:
+            entries[-2] = ent  # reduction-dim TP: psum-exact
+    from repro.core.sparsity_config import _EXCLUDE_FRAGMENTS
+
+    if (
+        not is_bias
+        and ndim >= 2
+        and MODEL_AXIS not in jax.tree_util.tree_leaves(entries)
+        and not _SLICED_OUT.search(name)
+        and entries[-2] is None
+        and not any(f in name.lower() for f in _EXCLUDE_FRAGMENTS)
+    ):
+        # TP-orphaned matmul weight (serving runs fsdp-off; the masking
+        # exclusions skip norms / embeddings / routers / recurrence
+        # params): shard the reduction dim so every big weight leaf stays
+        # distributed
+        entries[-2] = MODEL_AXIS
+    return entries
+
+
+def compressed_pspec(
+    name: str, ct: CompressedTensor, mesh: Mesh, *, cfg=None, fsdp: bool = False
+) -> tuple[P, P]:
+    """(values_spec, indices_spec) for one compressed leaf.
+
+    Starts from the (serving-adjusted) dense rule for ``name`` at the
+    stored rank (values keep the dense rank — only the reduction dim
+    shrinks), then:
+
+    - an entry on the compressed (group) axis survives only when the dense
+      reduction dim divides by ``M × axis_size`` (whole N:M groups per
+      shard); otherwise it moves to the output (non-compressed) dim when
+      that dim is free, or drops;
+    - both specs are sanitized against the stored shapes, so the
+      MXU-alignment ``pad`` columns participate in divisibility.
+    """
+    v_shape = tuple(ct.values.shape)
+    ndim = len(v_shape)
+    entries = _serving_entries(name, ndim, mesh, cfg, fsdp=fsdp)
+    gaxis = ndim - 2  # reduction axis; compress normalizes group_axis to -2
+    entry = entries[gaxis]
+    if entry is not None:
+        k = _axis_size(entry, mesh)
+        dense_in = v_shape[gaxis] * ct.m // max(ct.n, 1)
+        if k <= 0 or dense_in % (ct.m * k) != 0:
+            entries[gaxis] = None
+            if entries[-1] is None and _out_dim_ok(name, cfg, entry, mesh):
+                entries[-1] = entry  # fall back to the non-compressed dim
+    spec = P(*entries)
+    i_shape = tuple(ct.indices.shape)
+    return (
+        sanitize_spec(spec, v_shape, mesh),
+        sanitize_spec(spec, i_shape, mesh),
+    )
+
+
+def _is_ct(x) -> bool:
+    return isinstance(x, CompressedTensor)
+
+
+def serving_param_pspecs(
+    params_like: Any, mesh: Mesh, *, cfg=None, fsdp: bool = False
+) -> Any:
+    """PartitionSpec tree for a serving tree (dense and/or compressed).
+
+    Serving defaults to TP-only (``fsdp=False``): decode reads every weight
+    each step, so FSDP's gather-per-use buys nothing.  Passing the arch
+    ``cfg`` enables the execution-safety gates (whole-head TP, packed
+    concat dims, reduction-dim fallback — see :func:`_serving_entries`).
+    Compressed leaves map to a ``CompressedTensor`` carrying the two specs
+    as children, so the result tree flattens leaf-for-leaf against the
+    input.
+    """
+
+    def leaf(path, x):
+        name = _path_str(path)
+        if _is_ct(x):
+            v_spec, i_spec = compressed_pspec(name, x, mesh, cfg=cfg, fsdp=fsdp)
+            return CompressedTensor(
+                v_spec, i_spec, x.n, x.m, x.group_axis, x.shape, x.pad
+            )
+        entries = _serving_entries(name, len(x.shape), mesh, cfg, fsdp=fsdp)
+        return sanitize_spec(P(*entries), tuple(x.shape), mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, params_like, is_leaf=_is_ct)
+
+
+def serving_param_shardings(
+    mesh: Mesh, params_like: Any, *, cfg=None, fsdp: bool = False
+) -> Any:
+    """NamedSharding tree for ``jax.device_put`` / ``jit(in_shardings=...)``."""
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        serving_param_pspecs(params_like, mesh, cfg=cfg, fsdp=fsdp),
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def serving_cache_pspecs(
+    mesh: Mesh, cache_like: Any, layout=None, *, kv_shard: str = "seq"
+) -> Any:
+    """PartitionSpec tree for a serving cache under either layout.
+
+    Slab caches delegate to :func:`sharding.cache_pspecs` (sequence axis
+    over ``model``).  Paged caches shard each layer's physical pool on the
+    *pages* axis (``kv_shard="seq"``) or the trailing feature axis
+    (``"feature"``), replicate the page tables, and keep O(1) recurrent
+    states lane-sharded over DP.
+    """
+    if not isinstance(layout, PagedLayout):
+        from repro.distributed.sharding import cache_pspecs
+
+        return cache_pspecs(mesh, cache_like, kv_shard=kv_shard)
+
+    dp = _dp(mesh)
+
+    def leaf(path, x):
+        name = _path_str(path)
+        nd = len(x.shape)
+        parts = name.split("/")
+        if parts[0] == "tables":
+            return P(*([None] * nd))  # replicated: local address resolution
+        if parts[-1] == "len" or nd <= 1:
+            return P(*([dp] + [None] * max(0, nd - 1)))
+        stacked = re.search(r"(^|/)body/", name) is not None
+        if stacked:
+            nd -= 1
+        if parts[-1] in ("k", "v", "ckv", "krope"):
+            if kv_shard == "seq":
+                spec = (MODEL_AXIS,) + (None,) * (nd - 1)  # pages axis
+            else:
+                spec = (None,) * (nd - 1) + (MODEL_AXIS,)  # feature axis
+        elif nd == 4 and "state" in name:
+            spec = (dp, MODEL_AXIS, None, None)  # SSM (B, H, P, N)
+        else:
+            spec = (dp,) + (None,) * (nd - 1)
+        if stacked:
+            spec = (None,) + spec
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_like)
+
+
+def serving_cache_shardings(
+    mesh: Mesh, cache_like: Any, layout=None, *, kv_shard: str = "seq"
+) -> Any:
+    """Divisibility-sanitized NamedShardings for a serving cache tree."""
+    from repro.distributed.sharding import shardings_for
+
+    return shardings_for(
+        mesh, cache_like,
+        serving_cache_pspecs(mesh, cache_like, layout, kv_shard=kv_shard),
+    )
+
+
+def check_kv_shard(mesh: Optional[Mesh], kv_shard: str) -> None:
+    """Reject cache layouts that are known-broken on this mesh.
+
+    ``kv_shard="feature"`` (trailing head/latent dim over ``model``) is
+    **parked** on meshes with a >1 ``model`` axis: the prefill row-write
+    over a feature-sharded slab reproducibly *miscompiles* under the XLA
+    SPMD partitioner (CPU backend, jax 0.4.37 — wrong logits, the same
+    "involuntary full rematerialization" class the seq-sharded write path
+    was rewritten to avoid), and no parity test covers it.  It remains
+    accepted on 1×1 meshes (where every sharding is trivial) so the knob
+    stays exercisable.
+    """
+    if mesh is None or kv_shard != "feature":
+        return
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if int(sizes.get(MODEL_AXIS, 1)) > 1:
+        raise NotImplementedError(
+            'kv_shard="feature" is not supported on meshes with a model '
+            "axis > 1: the feature-sharded prefill write miscompiles under "
+            "the XLA SPMD partitioner (observed wrong token streams). Use "
+            'kv_shard="seq" (the default, and the measured-cheaper layout).'
+        )
+
+
+def lane_sharding(mesh: Mesh, max_batch: int) -> NamedSharding:
+    """Sharding for per-lane ``(max_batch,)`` vectors: DP axes or replicated."""
+    return NamedSharding(
+        mesh, sanitize_spec(P(_dp(mesh)), (max_batch,), mesh)
+    )
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -26,6 +26,13 @@ Resolution order, first hit wins:
    degenerate) fall back to ``"xla"`` even on TPU,
 5. the backend default: ``tpu -> "pallas"``, anything else ``-> "xla"``.
 
+One override sits above all of these: ``shards > 1`` in the shape info
+(operands partitioned across a mesh, e.g. a mesh-native engine's paged
+pool — see ``PagedLayout.shards``) forces ``"xla"`` whenever an XLA
+implementation exists, because a Pallas body is opaque to GSPMD and cannot
+be partitioned; the XLA path partitions into per-shard flash stats
+combined by tiny psums.
+
 Resolution happens at trace time: a jitted caller bakes the route into its
 executable, so flipping the env var after an engine compiled its decode
 step does not re-route that engine (build a new one, as ``scripts/smoke.sh``
@@ -114,6 +121,14 @@ def resolve(kernel: str, mode: Optional[str] = None, **shape_info) -> tuple[str,
         guard = _GUARDS.get(kernel)
         if picked == "pallas" and guard is not None and not guard(**shape_info):
             picked = "xla"  # shape the Pallas grid can't tile: use XLA even on TPU
+    if shape_info.get("shards", 1) > 1 and picked != "xla" and "xla" in impls:
+        # mesh-partitioned operands: a Pallas body is opaque to GSPMD, so
+        # only the XLA implementation partitions.  This overrides even
+        # forced/env modes — a fused kernel over sharded buffers is not a
+        # mode choice, it is a correctness hazard (shard_map wrappers that
+        # remap to shard-local addressing are the ROADMAP path to lifting
+        # this for paged_attn).
+        picked = "xla"
     if picked not in impls:
         raise NotImplementedError(f"kernel {kernel!r} has no {picked!r} impl")
     return picked, impls[picked]
@@ -167,16 +182,25 @@ def nm_mask(w, n: int, m: int, *, mode: Optional[str] = None):
 def paged_attn(
     q, k_pages, v_pages, tables, lengths, *, scale: float,
     window: int = 0, win_slots: int = 0, q2=None, k2_pages=None,
-    v_is_k: bool = False, mode: Optional[str] = None,
+    v_is_k: bool = False, shards: int = 1, mode: Optional[str] = None,
 ):
     """Paged decode attention over a ``(P, ps, Hkv, D)`` pool + page table.
 
     See ``kernels.paged_attn`` for the argument contract (GQA and
     MLA-latent layouts, sentinel slots, windowed modular tables).
+
+    ``shards``: how many mesh shards partition the pool's pages axis
+    (``PagedLayout.shards``).  With ``shards > 1`` the registered shape
+    guard routes to the XLA gathered path, which GSPMD partitions — each
+    shard computes flash stats over its local pages and the softmax
+    combines via tiny psums.  The Pallas kernel remains the single-shard
+    inner kernel: its scalar-prefetched index maps address the *global*
+    pool, so running it per shard needs a shard_map wrapper that remaps
+    table entries to shard-local page ids (ROADMAP next step).
     """
     _, fn = resolve(
         "paged_attn", mode, b=q.shape[0], n_slots=tables.shape[1],
-        page_size=k_pages.shape[1],
+        page_size=k_pages.shape[1], shards=shards,
     )
     return fn(
         q, k_pages, v_pages, tables, lengths, scale=scale, window=window,

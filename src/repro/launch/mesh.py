@@ -12,6 +12,9 @@ Topology (TPU v5e target):
 """
 from __future__ import annotations
 
+import warnings
+from typing import Optional
+
 import jax
 
 
@@ -21,11 +24,42 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh(model: int = 1):
-    """A mesh over whatever devices exist (tests / examples on CPU)."""
-    n = len(jax.devices())
-    data = max(1, n // model)
-    return jax.make_mesh((data, model), ("data", "model"))
+def make_local_mesh(model: int = 1, data: Optional[int] = None):
+    """A ``(data, model)`` mesh over local devices (tests / examples / CPU).
+
+    With only ``model`` given, ``data`` becomes ``n_devices // model`` —
+    and a remainder now *warns* instead of silently dropping devices (the
+    mesh uses the first ``data × model`` of them).  Callers that want an
+    exact shape pass ``data`` explicitly; a shape needing more devices
+    than exist raises.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs)
+    if model < 1 or (data is not None and data < 1):
+        raise ValueError(f"mesh axes must be >= 1, got data={data} model={model}")
+    if data is None:
+        if model > n:
+            raise ValueError(f"model={model} exceeds the {n} local device(s)")
+        if n % model:
+            warnings.warn(
+                f"make_local_mesh: {n} devices not divisible by model={model}; "
+                f"using a ({n // model}, {model}) mesh over the first "
+                f"{(n // model) * model} device(s)",
+                stacklevel=2,
+            )
+        data = max(1, n // model)
+    need = data * model
+    if need > n:
+        raise ValueError(
+            f"mesh ({data}, {model}) needs {need} devices but only {n} exist"
+        )
+    if need == n:
+        return jax.make_mesh((data, model), ("data", "model"))
+    return jax.sharding.Mesh(
+        np.array(devs[:need]).reshape(data, model), ("data", "model")
+    )
 
 
 # Hardware constants for the roofline model (TPU v5e, per chip)

@@ -22,6 +22,13 @@ on-device scan (the host syncs once per K tokens; greedy streams are
 bit-identical across K), ``--prefill-chunk N`` absorbs long prompts in
 N-token chunks interleaved with decode dispatches, and ``--no-donate``
 disables cache-buffer donation (the copying A/B baseline).
+
+``--mesh data,model`` serves **tensor-parallel**: every engine executable
+is jitted with explicit NamedShardings (weights TP via the compressed
+pspec seam, KV caches sequence/pages-sharded per ``--kv-shard``), and the
+summary grows per-shard HBM bytes and the decode executable's collective
+counts.  On CPU, emulate a mesh with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8 ... --mesh 2,4``.
 """
 from __future__ import annotations
 
@@ -104,7 +111,23 @@ def main(argv=None) -> dict:
                     default=True,
                     help="disable cache-buffer donation into the jitted "
                          "decode/prefill (the copying A/B baseline)")
+    ap.add_argument("--mesh", default=None,
+                    help="serve tensor-parallel on a 'data,model' mesh over "
+                         "local devices (e.g. --mesh 2,4 under "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8); "
+                         "weights TP-shard, KV caches sequence/pages-shard, "
+                         "and the summary gains per-shard HBM bytes + decode "
+                         "collective counts")
+    ap.add_argument("--kv-shard", default="seq", choices=("seq", "feature"),
+                    help="model-axis dim of the KV caches under --mesh")
     args = ap.parse_args(argv)
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_local_mesh
+
+        d, m = (int(v) for v in args.mesh.split(","))
+        mesh = make_local_mesh(m, data=d)
 
     model, serving_tree, rep = build_serving_state(args)
     cfg = model.cfg
@@ -131,6 +154,8 @@ def main(argv=None) -> dict:
         donate=args.donate,
         prefill_chunk=args.prefill_chunk,
         prefill_buckets=buckets,
+        mesh=mesh,
+        kv_shard=args.kv_shard,
     )
     n_requests = args.batch if args.requests is None else args.requests
     sampling = SamplingParams(
@@ -163,7 +188,17 @@ def main(argv=None) -> dict:
         "preemptions": st["preemptions"],
         "kv_cache_bytes": st["kv_cache_bytes"],
         "hbm_weight_ratio": round(rep["ratio"], 3),
+        "mesh": engine.mesh_desc(),
     }
+    if mesh is not None:
+        sh = engine.sharding_report(include_hlo=True)
+        summary["weight_bytes_per_shard"] = sh["weight_bytes_per_shard"]
+        summary["cache_bytes_per_shard"] = sh["cache_bytes_per_shard"]
+        summary["decode_collective_bytes"] = sh["decode_collective_bytes"]
+        summary["decode_collective_total"] = sh["decode_collective_total"]
+        # matmul weights only: per-feature vectors replicate by design and
+        # would make this column constant nonzero noise
+        summary["replicated_weight_leaves"] = sh["replicated_matmul_leaves"]
     print(json.dumps({"summary": summary}))
     return summary
 

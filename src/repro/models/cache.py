@@ -123,6 +123,16 @@ class SlabLayout:
 
         ``k_rows``: (N, Lp, n_kv, hd) — the full (possibly padded) prompt K;
         row ``r`` holds valid entries at positions ``< lens[r]``.
+
+        Rows shorter than the slab scatter *by position index* (invalid
+        positions route out of bounds and drop) instead of padding to the
+        slab length and overwriting whole rows: functionally identical —
+        slots ``>= len`` are dead under the attention length mask, exactly
+        like the paged layout's unwritten slots — but it never runs
+        ``jnp.pad`` + full-row ``set`` over a sequence-sharded slab, a
+        pattern the XLA partitioner handles with an "involuntary full
+        rematerialization" that was observed to *miscompile* (wrong
+        values) on seq-sharded windowed caches (CPU backend, jax 0.4.37).
         """
         s = c["k"].shape[1]
         lp = k_rows.shape[1]
@@ -134,67 +144,86 @@ class SlabLayout:
             idx = jnp.clip(start + j, 0, lp - 1)
             k_rows = jnp.take_along_axis(k_rows, idx[..., None, None], axis=1)
             v_rows = jnp.take_along_axis(v_rows, idx[..., None, None], axis=1)
-        elif s > lp:
-            pad = ((0, 0), (0, s - lp), (0, 0), (0, 0))
-            k_rows = jnp.pad(k_rows, pad)
-            v_rows = jnp.pad(v_rows, pad)
+            return {
+                "k": c["k"].at[lanes].set(
+                    k_rows.astype(c["k"].dtype), mode="drop"
+                ),
+                "v": c["v"].at[lanes].set(
+                    v_rows.astype(c["v"].dtype), mode="drop"
+                ),
+            }
+        j = jnp.arange(lp)[None, :]  # (1, Lp)
+        idx = jnp.where(j < lens[:, None], j, s)  # invalid rows drop OOB
         return {
-            "k": c["k"].at[lanes].set(k_rows.astype(c["k"].dtype), mode="drop"),
-            "v": c["v"].at[lanes].set(v_rows.astype(c["v"].dtype), mode="drop"),
+            "k": c["k"].at[lanes[:, None], idx].set(
+                k_rows.astype(c["k"].dtype), mode="drop"
+            ),
+            "v": c["v"].at[lanes[:, None], idx].set(
+                v_rows.astype(c["v"].dtype), mode="drop"
+            ),
         }
 
     def mla_write_rows(self, c: dict, ckv_rows, krope_rows, lanes, lens, tables):
         s = c["ckv"].shape[1]
         lp = ckv_rows.shape[1]
-        if lp < s:
-            ckv_rows = jnp.pad(ckv_rows, ((0, 0), (0, s - lp), (0, 0)))
-            krope_rows = jnp.pad(krope_rows, ((0, 0), (0, s - lp), (0, 0)))
+        j = jnp.arange(lp)[None, :]
+        idx = jnp.where(j < lens[:, None], j, s)  # invalid rows drop OOB
         return {
-            "ckv": c["ckv"].at[lanes].set(
+            "ckv": c["ckv"].at[lanes[:, None], idx].set(
                 ckv_rows.astype(c["ckv"].dtype), mode="drop"
             ),
-            "krope": c["krope"].at[lanes].set(
+            "krope": c["krope"].at[lanes[:, None], idx].set(
                 krope_rows.astype(c["krope"].dtype), mode="drop"
             ),
         }
 
     # -- chunked-prefill writes / views ------------------------------------
     #
-    # One prompt chunk of a single lane: rows ``i < length`` land at
-    # positions ``start + i``.  Only non-windowed slabs support chunking
-    # (the engine gates chunked prefill off sliding-window archs).
+    # One prompt chunk per chunking lane, batched: row ``r``'s entries
+    # ``i < lengths[r]`` land at positions ``starts[r] + i`` of lane
+    # ``lanes[r]`` (a lane index >= the batch size marks a padding row and
+    # drops).  Only non-windowed slabs support chunking (the engine gates
+    # chunked prefill off sliding-window archs).
 
-    def attn_write_chunk(self, c: dict, k_rows, v_rows, lane, start, length,
-                         tables):
-        """k_rows/v_rows: (C, n_kv, hd); ``lane``/``start``/``length`` scalars."""
+    def attn_write_chunk(self, c: dict, k_rows, v_rows, lanes, starts,
+                         lengths, tables):
+        """k_rows/v_rows: (L, C, n_kv, hd); lanes/starts/lengths: (L,)."""
         s = c["k"].shape[1]
-        i = jnp.arange(k_rows.shape[0])
-        idx = jnp.where(i < length, start + i, s)  # pad rows drop out of bounds
+        i = jnp.arange(k_rows.shape[1])[None, :]  # (1, C)
+        # pad rows (i >= length) drop out of bounds
+        idx = jnp.where(i < lengths[:, None], starts[:, None] + i, s)
         return {
-            "k": c["k"].at[lane, idx].set(k_rows.astype(c["k"].dtype), mode="drop"),
-            "v": c["v"].at[lane, idx].set(v_rows.astype(c["v"].dtype), mode="drop"),
+            "k": c["k"].at[lanes[:, None], idx].set(
+                k_rows.astype(c["k"].dtype), mode="drop"
+            ),
+            "v": c["v"].at[lanes[:, None], idx].set(
+                v_rows.astype(c["v"].dtype), mode="drop"
+            ),
         }
 
-    def attn_chunk_view(self, c: dict, lane, tables):
-        """(1, S, n_kv, hd) logical view of one lane (the slab row itself)."""
-        return c["k"][lane][None], c["v"][lane][None]
+    def attn_chunk_view(self, c: dict, lanes, tables):
+        """(L, S, n_kv, hd) logical views (the slab rows themselves;
+        sentinel lanes clip to the last row — garbage the caller masks)."""
+        take = jnp.clip(lanes, 0, c["k"].shape[0] - 1)
+        return c["k"][take], c["v"][take]
 
-    def mla_write_chunk(self, c: dict, ckv_rows, krope_rows, lane, start,
-                        length, tables):
+    def mla_write_chunk(self, c: dict, ckv_rows, krope_rows, lanes, starts,
+                        lengths, tables):
         s = c["ckv"].shape[1]
-        i = jnp.arange(ckv_rows.shape[0])
-        idx = jnp.where(i < length, start + i, s)
+        i = jnp.arange(ckv_rows.shape[1])[None, :]
+        idx = jnp.where(i < lengths[:, None], starts[:, None] + i, s)
         return {
-            "ckv": c["ckv"].at[lane, idx].set(
+            "ckv": c["ckv"].at[lanes[:, None], idx].set(
                 ckv_rows.astype(c["ckv"].dtype), mode="drop"
             ),
-            "krope": c["krope"].at[lane, idx].set(
+            "krope": c["krope"].at[lanes[:, None], idx].set(
                 krope_rows.astype(c["krope"].dtype), mode="drop"
             ),
         }
 
-    def mla_chunk_view(self, c: dict, lane, tables):
-        return c["ckv"][lane][None], c["krope"][lane][None]
+    def mla_chunk_view(self, c: dict, lanes, tables):
+        take = jnp.clip(lanes, 0, c["ckv"].shape[0] - 1)
+        return c["ckv"][take], c["krope"][take]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -214,6 +243,12 @@ class PagedLayout:
     win: int = 0  # min(max_len, local_window) when the arch has windowed attn
     has_full: bool = True  # any non-windowed attn / MLA layer present
     lookahead: int = 1  # decode steps one dispatch may take (pages pre-mapped)
+    # number of mesh shards the physical pool is partitioned across (the
+    # model-axis size of a mesh-native engine).  >1 routes paged attention
+    # to the GSPMD-partitionable gathered path — the Pallas kernel walks
+    # global page addresses and stays the single-shard inner kernel until
+    # it grows a shard_map wrapper (see kernels.dispatch).
+    shards: int = 1
 
     kind = "paged"
 
@@ -408,61 +443,80 @@ class PagedLayout:
 
     # -- chunked-prefill writes / views ------------------------------------
     #
-    # One prompt chunk of a single lane through its *full* (append-only)
-    # table row; the engine gates chunked prefill off sliding-window archs,
-    # so only the ``full`` table is involved.  All the chunk's pages were
-    # mapped at admission (``alloc_prefill`` covers the whole prompt), so
-    # every valid row has a physical slot; pad rows route to the sentinel.
+    # One prompt chunk per chunking lane, batched, through each lane's
+    # *full* (append-only) table row; the engine gates chunked prefill off
+    # sliding-window archs, so only the ``full`` table is involved.  All of
+    # a chunk's pages were mapped at admission (``alloc_prefill`` covers
+    # the whole prompt), so every valid row has a physical slot; pad rows
+    # (``i >= lengths[r]`` or a sentinel lane) route to the sentinel.
 
-    def _chunk_write_idx(self, lane, start, length, csz, tables):
+    def _chunk_write_idx(self, lanes, starts, lengths, csz, tables):
         ps = self.page_size
-        i = jnp.arange(csz)
-        pos = start + i
-        row = tables["full"][lane]  # (pages_full,)
-        phys = row[jnp.clip(pos // ps, 0, self.pages_full - 1)]
-        return jnp.where(i < length, phys * ps + pos % ps, self.num_pages * ps)
+        i = jnp.arange(csz)[None, :]  # (1, C)
+        pos = starts[:, None] + i  # (L, C)
+        rows = jnp.take(tables["full"], lanes, axis=0, mode="clip")
+        phys = jnp.take_along_axis(
+            rows, jnp.clip(pos // ps, 0, self.pages_full - 1), axis=1
+        )  # (L, C)
+        valid = (i < lengths[:, None]) & (lanes < tables["full"].shape[0])[:, None]
+        return jnp.where(valid, phys * ps + pos % ps, self.num_pages * ps)
 
-    def attn_write_chunk(self, c: dict, k_rows, v_rows, lane, start, length,
-                         tables):
-        widx = self._chunk_write_idx(lane, start, length, k_rows.shape[0], tables)
+    def attn_write_chunk(self, c: dict, k_rows, v_rows, lanes, starts,
+                         lengths, tables):
+        widx = self._chunk_write_idx(
+            lanes, starts, lengths, k_rows.shape[1], tables
+        ).reshape(-1)
         kf = c["k"].reshape((-1,) + c["k"].shape[2:])
         vf = c["v"].reshape((-1,) + c["v"].shape[2:])
-        kf = kf.at[widx].set(k_rows.astype(c["k"].dtype), mode="drop")
-        vf = vf.at[widx].set(v_rows.astype(c["v"].dtype), mode="drop")
+        kf = kf.at[widx].set(
+            k_rows.astype(c["k"].dtype).reshape((-1,) + k_rows.shape[2:]),
+            mode="drop",
+        )
+        vf = vf.at[widx].set(
+            v_rows.astype(c["v"].dtype).reshape((-1,) + v_rows.shape[2:]),
+            mode="drop",
+        )
         return {"k": kf.reshape(c["k"].shape), "v": vf.reshape(c["v"].shape)}
 
-    def _chunk_gather(self, flat, lane, tables):
+    def _chunk_gather(self, flat, lanes, tables):
         ps = self.page_size
-        a = jnp.arange(self.pages_full * ps)
-        phys = tables["full"][lane][a // ps]  # sentinel slots -> clip garbage
-        return jnp.take(flat, phys * ps + a % ps, axis=0, mode="clip")[None]
+        a = jnp.arange(self.pages_full * ps)  # (S,)
+        rows = jnp.take(tables["full"], lanes, axis=0, mode="clip")
+        phys = rows[:, a // ps]  # (L, S); sentinel slots -> clip garbage
+        return jnp.take(flat, phys * ps + a % ps, axis=0, mode="clip")
 
-    def attn_chunk_view(self, c: dict, lane, tables):
+    def attn_chunk_view(self, c: dict, lanes, tables):
         kf = c["k"].reshape((-1,) + c["k"].shape[2:])
         vf = c["v"].reshape((-1,) + c["v"].shape[2:])
-        return self._chunk_gather(kf, lane, tables), self._chunk_gather(
-            vf, lane, tables
+        return self._chunk_gather(kf, lanes, tables), self._chunk_gather(
+            vf, lanes, tables
         )
 
-    def mla_write_chunk(self, c: dict, ckv_rows, krope_rows, lane, start,
-                        length, tables):
+    def mla_write_chunk(self, c: dict, ckv_rows, krope_rows, lanes, starts,
+                        lengths, tables):
         widx = self._chunk_write_idx(
-            lane, start, length, ckv_rows.shape[0], tables
-        )
+            lanes, starts, lengths, ckv_rows.shape[1], tables
+        ).reshape(-1)
         cf = c["ckv"].reshape((-1,) + c["ckv"].shape[2:])
         rf = c["krope"].reshape((-1,) + c["krope"].shape[2:])
-        cf = cf.at[widx].set(ckv_rows.astype(c["ckv"].dtype), mode="drop")
-        rf = rf.at[widx].set(krope_rows.astype(c["krope"].dtype), mode="drop")
+        cf = cf.at[widx].set(
+            ckv_rows.astype(c["ckv"].dtype).reshape((-1,) + ckv_rows.shape[2:]),
+            mode="drop",
+        )
+        rf = rf.at[widx].set(
+            krope_rows.astype(c["krope"].dtype).reshape((-1,) + krope_rows.shape[2:]),
+            mode="drop",
+        )
         return {
             "ckv": cf.reshape(c["ckv"].shape),
             "krope": rf.reshape(c["krope"].shape),
         }
 
-    def mla_chunk_view(self, c: dict, lane, tables):
+    def mla_chunk_view(self, c: dict, lanes, tables):
         cf = c["ckv"].reshape((-1,) + c["ckv"].shape[2:])
         rf = c["krope"].reshape((-1,) + c["krope"].shape[2:])
-        return self._chunk_gather(cf, lane, tables), self._chunk_gather(
-            rf, lane, tables
+        return self._chunk_gather(cf, lanes, tables), self._chunk_gather(
+            rf, lanes, tables
         )
 
 
@@ -470,7 +524,8 @@ CacheLayout = (SlabLayout, PagedLayout)  # for isinstance checks
 
 
 def paged_layout_for(
-    cfg, max_len: int, *, page_size: int, num_pages: int, lookahead: int = 1
+    cfg, max_len: int, *, page_size: int, num_pages: int, lookahead: int = 1,
+    shards: int = 1,
 ) -> PagedLayout:
     """Derive the PagedLayout an arch needs at a given logical capacity.
 
@@ -480,6 +535,8 @@ def paged_layout_for(
     ``lookahead`` is the engine's ``steps_per_dispatch`` — how many decode
     writes one fused dispatch performs before the host touches the tables
     again (sizes the modular window table; see :class:`PagedLayout`).
+    ``shards`` records how many mesh shards partition the physical pool
+    (kernel-route gating; see :class:`PagedLayout`).
     """
     from repro.models.model import _block_mixer_mlp, layer_plan
 
@@ -496,4 +553,5 @@ def paged_layout_for(
     return PagedLayout(
         page_size=page_size, num_pages=num_pages, max_len=max_len,
         win=win, has_full=has_full, lookahead=max(1, lookahead),
+        shards=max(1, shards),
     )

@@ -191,14 +191,16 @@ def chunked_attention(
     *,
     causal: bool = True,
     window: Optional[int] = None,  # sliding-window (local) attention
-    q_offset: int = 0,  # position of q[0] within the kv sequence
+    q_offset=0,  # position of q[0] within the kv sequence: scalar or (B,)
     chunk: int = 512,
 ) -> jnp.ndarray:
     """Online-softmax attention, scanning over KV chunks (flash style).
 
     Never materializes more than a (Sq, chunk) score block per (batch, head),
     which is what makes the 32k-prefill dry-run cells fit. GQA is handled by
-    grouping query heads over each KV head.
+    grouping query heads over each KV head.  ``q_offset`` may be a per-row
+    ``(B,)`` vector — batched chunked prefill runs every chunking lane's
+    chunk in one call, each at its own position in its own sequence.
     """
     b, sq, h, d = q.shape
     _, sk, hkv, _ = k.shape
@@ -215,7 +217,9 @@ def chunked_attention(
     kc = k.reshape(b, n_chunks, chunk, hkv, d)
     vc = v.reshape(b, n_chunks, chunk, hkv, d)
 
-    q_pos = q_offset + jnp.arange(sq)  # (Sq,)
+    off = jnp.asarray(q_offset)
+    off = off.reshape(-1, 1) if off.ndim else off[None, None]  # (B|1, 1)
+    q_pos = off + jnp.arange(sq)[None, :]  # (B|1, Sq)
 
     def body(carry, inputs):
         m_prev, l_prev, acc = carry
@@ -224,18 +228,19 @@ def chunked_attention(
         s = (
             jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb.astype(jnp.float32)) * scale
         )  # (B,Hkv,G,Sq,chunk)
-        mask = kv_pos[None, :] <= (q_pos[:, None] if causal else jnp.inf)
-        if not causal:
-            mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask = kv_pos[None, None, :] <= q_pos[:, :, None]  # (B|1,Sq,chunk)
+        else:
+            mask = jnp.ones((1, sq, chunk), bool)
         if window is not None:
-            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
-        mask = mask & (kv_pos[None, :] < sk)  # padding
-        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            mask = mask & (kv_pos[None, None, :] > q_pos[:, :, None] - window)
+        mask = mask & (kv_pos[None, None, :] < sk)  # padding
+        s = jnp.where(mask[:, None, None], s, -jnp.inf)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
         # guard fully-masked rows
         m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
         p = jnp.exp(s - m_safe[..., None])
-        p = jnp.where(mask[None, None, None], p, 0.0)
+        p = jnp.where(mask[:, None, None], p, 0.0)
         corr = jnp.exp(jnp.where(jnp.isinf(m_prev), -jnp.inf, m_prev) - m_safe)
         corr = jnp.where(jnp.isinf(m_prev), 0.0, corr)
         l_new = corr * l_prev + jnp.sum(p, axis=-1)

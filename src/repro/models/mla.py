@@ -115,39 +115,39 @@ def v_pad(v: jnp.ndarray, to: int) -> jnp.ndarray:
 
 
 def mla_chunk(
-    x: jnp.ndarray,  # (1, C, d) — one lane's prompt chunk
+    x: jnp.ndarray,  # (L, C, d) — one prompt chunk per chunking lane
     p: dict,
     n_heads: int,
     cfg: MLAConfig,
     cache: dict,
-    lane,  # scalar int32
-    start,  # scalar int32: position of x[:, 0] in the sequence
-    length,  # scalar int32: valid tokens in the chunk (rest is padding)
+    lanes,  # (L,) int32 (a lane >= the batch size marks a padding row)
+    starts,  # (L,) int32: position of x[r, 0] in lane r's sequence
+    lengths,  # (L,) int32: valid tokens per row (rest is padding)
     rope_theta: float = 10000.0,
     layout=None,
     tables=None,
     chunk: int = 512,
 ) -> tuple[jnp.ndarray, dict]:
-    """One chunked-prefill step: write the chunk's latents at positions
-    ``start..start+length-1`` of ``lane``, then attend the chunk's queries
-    over the lane's whole cached prefix (``q_offset=start`` supplies the
-    causal offset).  Pad rows (``i >= length``) produce garbage that the
-    caller discards — only position ``length-1``'s logits are consumed,
-    and only on the final chunk."""
+    """One batched chunked-prefill step: row ``r`` writes its latents at
+    positions ``starts[r]..starts[r]+lengths[r]-1`` of ``lanes[r]``, then
+    attends its queries over that lane's whole cached prefix (the per-row
+    ``q_offset`` supplies the causal offsets).  Pad rows produce garbage
+    that the caller discards — only position ``lengths[r]-1``'s logits are
+    consumed, and only on a lane's final chunk."""
     if layout is None:
         layout = SlabLayout()
     b, csz, _ = x.shape
     nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
-    positions = start + jnp.arange(csz)[None, :]  # (1, C)
+    positions = starts[:, None] + jnp.arange(csz)[None, :]  # (L, C)
     q, c_kv, k_rope = _project_qkv(x, p, n_heads, cfg)
     q_nope, q_rope = q[..., :nd], q[..., nd:]
     q_rope = apply_rope(q_rope, positions, rope_theta)
     k_rope_r = apply_rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0, :]
 
     new_cache = layout.mla_write_chunk(
-        cache, c_kv[0], k_rope_r[0], lane, start, length, tables
+        cache, c_kv, k_rope_r, lanes, starts, lengths, tables
     )
-    ckv_view, krope_view = layout.mla_chunk_view(new_cache, lane, tables)
+    ckv_view, krope_view = layout.mla_chunk_view(new_cache, lanes, tables)
     k_nope, v = _expand_kv(ckv_view, p, n_heads, cfg)
     s = ckv_view.shape[1]
     kf = jnp.concatenate(
@@ -156,7 +156,7 @@ def mla_chunk(
     )
     qf = jnp.concatenate([q_nope, q_rope], axis=-1)
     out = chunked_attention(
-        qf, kf, v_pad(v, nd + rd), causal=True, q_offset=start, chunk=chunk
+        qf, kf, v_pad(v, nd + rd), causal=True, q_offset=starts, chunk=chunk
     )
     out = out[..., :vd].reshape(b, csz, n_heads * vd)
     return matmul(out, p["w_o"]), new_cache
@@ -194,7 +194,7 @@ def mla_decode(
 
     if isinstance(layout, PagedLayout) and dispatch.uses_kernel(
         "paged_attn", b=b, n_slots=tables["full"].shape[1],
-        page_size=layout.page_size,
+        page_size=layout.page_size, shards=layout.shards,
     ):
         # fast path: attend *in latent space* through the page table.
         # W_ukv is absorbed into the query / output projections

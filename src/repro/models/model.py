@@ -547,14 +547,15 @@ def write_prefill(
     return out
 
 
-def _attn_chunk(x, p, cfg: ArchConfig, c: dict, lane, start, length, layout,
-                tables, chunk: int):
-    """One lane's prompt chunk: write K/V rows at ``start..start+length-1``,
-    attend the chunk's queries over the lane's whole cached prefix.
+def _attn_chunk(x, p, cfg: ArchConfig, c: dict, lanes, starts, lengths,
+                layout, tables, chunk: int):
+    """One prompt chunk per chunking lane, batched: row ``r`` writes K/V at
+    ``starts[r]..starts[r]+lengths[r]-1`` of lane ``lanes[r]`` and attends
+    its queries over that lane's whole cached prefix.
 
-    x: (1, C, d).  Chunked prefill is gated to non-windowed attention
+    x: (L, C, d).  Chunked prefill is gated to non-windowed attention
     (``DecodeEngine`` only routes prompts here when ``local_window`` is
-    None), so the logical view is the append-only full cache."""
+    None), so the logical views are the append-only full caches."""
     b, csz, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
     q = L.matmul(x, p["wq"])
@@ -565,7 +566,7 @@ def _attn_chunk(x, p, cfg: ArchConfig, c: dict, lane, start, length, layout,
     q = q.reshape(b, csz, h, hd)
     k = k.reshape(b, csz, kv, hd)
     v = v.reshape(b, csz, kv, hd)
-    posb = start + jnp.arange(csz)[None, :]  # (1, C)
+    posb = starts[:, None] + jnp.arange(csz)[None, :]  # (L, C)
     if cfg.rope == "rope":
         q = L.apply_rope(q, posb, cfg.rope_theta)
         k = L.apply_rope(k, posb, cfg.rope_theta)
@@ -573,12 +574,13 @@ def _attn_chunk(x, p, cfg: ArchConfig, c: dict, lane, start, length, layout,
         p3 = jnp.broadcast_to(posb[..., None], (b, csz, 3))
         q = L.apply_mrope(q, p3, theta=cfg.rope_theta)
         k = L.apply_mrope(k, p3, theta=cfg.rope_theta)
-    new_c = layout.attn_write_chunk(c, k[0], v[0], lane, start, length, tables)
-    k_view, v_view = layout.attn_chunk_view(new_c, lane, tables)
-    # pad rows (i >= length) attend garbage — discarded by the caller, which
-    # reads logits only at row length-1 (and only on the final chunk)
+    new_c = layout.attn_write_chunk(c, k, v, lanes, starts, lengths, tables)
+    k_view, v_view = layout.attn_chunk_view(new_c, lanes, tables)
+    # pad rows (i >= length, or a sentinel lane) attend garbage — discarded
+    # by the caller, which reads logits only at row length-1 (and only on
+    # the final chunk)
     out = L.chunked_attention(
-        q, k_view, v_view, causal=True, q_offset=start, chunk=chunk
+        q, k_view, v_view, causal=True, q_offset=starts, chunk=chunk
     )
     out = L.matmul(out.reshape(b, csz, h * hd), p["wo"])
     if cfg.o_bias:
@@ -586,7 +588,7 @@ def _attn_chunk(x, p, cfg: ArchConfig, c: dict, lane, start, length, layout,
     return out, new_c
 
 
-def _block_chunk(x, p, kind: str, cfg: ArchConfig, c, lane, start, length,
+def _block_chunk(x, p, kind: str, cfg: ArchConfig, c, lanes, starts, lengths,
                  layout, tables, chunk: int):
     mixer, mlp = _block_mixer_mlp(kind, cfg)
     if mixer not in ("attn", "mla"):
@@ -597,11 +599,11 @@ def _block_chunk(x, p, kind: str, cfg: ArchConfig, c, lane, start, length,
     h = _apply_norm(cfg, p["pre"], x)
     if mixer == "attn":
         mix_out, c = _attn_chunk(
-            h, p["attn"], cfg, c, lane, start, length, layout, tables, chunk
+            h, p["attn"], cfg, c, lanes, starts, lengths, layout, tables, chunk
         )
     else:
         mix_out, c = MLA.mla_chunk(
-            h, p["attn"], cfg.n_heads, cfg.mla, c, lane, start, length,
+            h, p["attn"], cfg.n_heads, cfg.mla, c, lanes, starts, lengths,
             cfg.rope_theta, layout=layout, tables=tables, chunk=chunk,
         )
     x = x + mix_out
@@ -619,30 +621,33 @@ def _block_chunk(x, p, kind: str, cfg: ArchConfig, c, lane, start, length,
 
 def prefill_chunk(
     params: dict, cfg: ArchConfig, tokens: jnp.ndarray, cache: dict,
-    lane, start, length, layout=None, *, chunk: int = 512,
+    lanes, starts, lengths, layout=None, *, chunk: int = 512,
 ) -> tuple[jnp.ndarray, dict]:
-    """Process one fixed-size chunk of one lane's prompt against the live
-    serving cache: tokens (1, C) int32 (rows ``>= length`` are padding) →
-    (logits (1, V) at the chunk's last valid position, new cache).
+    """Process one fixed-size prompt chunk of every chunking lane against
+    the live serving cache: tokens (L, C) int32 (row ``r`` valid below
+    ``lengths[r]``) → (logits (L, V) at each row's last valid position,
+    new cache).
 
     This is the incremental counterpart of ``prefill``: each chunk's K/V
-    (or MLA latents) are scattered into the lane's cache slots at
-    positions ``start..start+length-1`` and its queries attend through the
-    cached prefix, so a long prompt is absorbed across several small
-    dispatches that the engine interleaves with decode dispatches instead
-    of one monolithic head-of-line-blocking forward.  The returned logits
-    matter only on the final chunk (they seed the first sampled token).
-    Attention-family archs only; the cache's ``len`` for ``lane`` advances
-    to ``start + length``.
+    (or MLA latents) are scattered into its lane's cache slots at
+    positions ``starts[r]..starts[r]+lengths[r]-1`` and its queries attend
+    through the cached prefix, so long prompts are absorbed across several
+    small dispatches that the engine interleaves with decode dispatches
+    instead of one monolithic head-of-line-blocking forward — and **one**
+    dispatch absorbs a chunk of *every* currently-chunking lane (rows with
+    a sentinel lane index are padding and write nothing).  The returned
+    logits matter only on each lane's final chunk (they seed its first
+    sampled token).  Attention-family archs only; the cache's ``len`` for
+    ``lanes[r]`` advances to ``starts[r] + lengths[r]``.
     """
     if layout is None:
         layout = C.SlabLayout()
     plan = layer_plan(cfg)
     tables = cache.get("tables")
-    x = params["embed"]["tok_embed"][tokens]  # (1, C, d)
+    x = params["embed"]["tok_embed"][tokens]  # (L, C, d)
     new_cache: dict = {
-        "len": cache["len"].at[lane].set(
-            (start + length).astype(cache["len"].dtype)
+        "len": cache["len"].at[lanes].set(
+            (starts + lengths).astype(cache["len"].dtype), mode="drop"
         )
     }
     if tables is not None:
@@ -650,8 +655,8 @@ def prefill_chunk(
 
     for i, kind in enumerate(plan.head):
         x, c = _block_chunk(
-            x, params[f"head_{i}"], kind, cfg, cache[f"head_{i}"], lane,
-            start, length, layout, tables, chunk,
+            x, params[f"head_{i}"], kind, cfg, cache[f"head_{i}"], lanes,
+            starts, lengths, layout, tables, chunk,
         )
         new_cache[f"head_{i}"] = c
 
@@ -661,8 +666,8 @@ def prefill_chunk(
             cs = {}
             for j, kind in enumerate(plan.period):
                 x, cj = _block_chunk(
-                    x, p_sb[f"sb_{j}"], kind, cfg, c_sb[f"sb_{j}"], lane,
-                    start, length, layout, tables, chunk,
+                    x, p_sb[f"sb_{j}"], kind, cfg, c_sb[f"sb_{j}"], lanes,
+                    starts, lengths, layout, tables, chunk,
                 )
                 cs[f"sb_{j}"] = cj
             return x, cs
@@ -672,15 +677,15 @@ def prefill_chunk(
 
     for i, kind in enumerate(plan.tail):
         x, c = _block_chunk(
-            x, params[f"tail_{i}"], kind, cfg, cache[f"tail_{i}"], lane,
-            start, length, layout, tables, chunk,
+            x, params[f"tail_{i}"], kind, cfg, cache[f"tail_{i}"], lanes,
+            starts, lengths, layout, tables, chunk,
         )
         new_cache[f"tail_{i}"] = c
 
-    # logits only at the last valid row — the unembed matmul runs on one
-    # token, not the whole chunk
-    idx = jnp.clip(length - 1, 0, tokens.shape[1] - 1)
-    x_last = jax.lax.dynamic_index_in_dim(x, idx, axis=1)  # (1, 1, d)
+    # logits only at each row's last valid position — the unembed matmul
+    # runs on one token per row, not the whole chunk
+    idx = jnp.clip(lengths - 1, 0, tokens.shape[1] - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)  # (L, 1, d)
     x_last = _apply_norm(cfg, params["final"], x_last)
     if cfg.tie_embeddings:
         logits = x_last @ params["embed"]["tok_embed"].T
@@ -712,7 +717,7 @@ def _attn_decode(x, p, cfg: ArchConfig, c: dict, pos, layout, tables):
 
     if isinstance(layout, C.PagedLayout) and dispatch.uses_kernel(
         "paged_attn", b=b, n_slots=tables[layout.table_key(cfg.local_window)].shape[1],
-        page_size=layout.page_size,
+        page_size=layout.page_size, shards=layout.shards,
     ):
         # fast path: scatter the new token into its page, then attend
         # through the page table directly — no contiguous (B, S, ...) K/V
@@ -967,10 +972,10 @@ class TransformerLM:
     def decode_step(self, params, tokens, cache, layout=None):
         return decode_step(params, self.cfg, tokens, cache, layout)
 
-    def prefill_chunk(self, params, tokens, cache, lane, start, length,
+    def prefill_chunk(self, params, tokens, cache, lanes, starts, lengths,
                       layout=None, **kw):
         return prefill_chunk(
-            params, self.cfg, tokens, cache, lane, start, length, layout, **kw
+            params, self.cfg, tokens, cache, lanes, starts, lengths, layout, **kw
         )
 
     def init_cache(self, batch_size, max_len, dtype=None, layout=None):

@@ -72,7 +72,47 @@ scheduling step are padded to a small static set of bucket lengths (powers
 of two up to ``max_len`` by default) and each bucket group is prefilled in
 one jitted call.  Architectures with recurrent state (SSM / RG-LRU) cannot
 absorb padding tokens into their state, so they group by *exact* prompt
-length instead — still one batched prefill per group.
+length instead — still one batched prefill per group.  Chunked prefill is
+batched the same way: one chunk dispatch per scheduling step absorbs a
+chunk of *every* currently-chunking lane.
+
+Mesh-native serving
+-------------------
+Pass ``mesh=`` (a ``("data", "model")`` mesh, e.g. from
+``launch.mesh.make_local_mesh``) and the engine becomes tensor-parallel
+end to end: every executable — prefill, chunked prefill, and the K-step
+decode scan — is jitted with **explicit in/out NamedShardings**, and the
+live params / cache / token buffer are ``device_put`` to match, so GSPMD
+partitions the whole serving path instead of replicating it.
+
+- **Weights** are TP-sharded by the serving pspec seam
+  (``distributed.compressed_pspecs``): dense leaves follow the training
+  rules with FSDP off (decode reads every weight each step), and each
+  ``CompressedTensor`` leaf derives its spec from the dense rule for the
+  same name — TP on the non-compressed (output) dim by default, on the
+  compressed (reduction) dim only when the dense dim divides by
+  ``M × axis_size`` so no N:M group straddles a shard.  Per-leaf
+  ``sanitize_spec`` degrades odd dims to replication instead of erroring.
+  The compressed artifact is served *sharded*: no dense or
+  fully-replicated weight leaf is ever materialized (inspect with
+  :meth:`sharding_report`).
+- **KV caches are sequence-sharded** on the ``model`` axis
+  (``kv_shard="seq"``, the ``cache_pspecs`` rule measured 75x cheaper in
+  collectives than head-sharding): slab caches split the per-lane
+  sequence axis; the paged pool splits its *pages* axis, so each shard
+  physically owns a slice of the pool while the (replicated) page tables
+  resolve logical→physical addresses locally on every shard.  Decode
+  attention computes per-shard partial flash stats and GSPMD combines the
+  softmax via tiny psums — only ``(B, H)``-sized stats cross the
+  interconnect, never cache pages.  The Pallas paged-attention kernel
+  stays the per-shard inner kernel: ``kernels.dispatch`` routes sharded
+  pools (``PagedLayout.shards > 1``) to the partitionable XLA path until
+  the kernel grows a shard_map wrapper.
+- **Degenerate 1×1 meshes are bit-identical** to the mesh-less engine:
+  every sharding becomes trivial and the executables lower to the exact
+  single-device programs, so ``mesh=None`` and a one-device mesh (and, in
+  practice, any mesh shape — locked by tests/test_sharded_serving.py)
+  produce the same greedy token streams.
 """
 from __future__ import annotations
 
@@ -181,6 +221,15 @@ class DecodeEngine:
         with recurrent state, which group by exact prompt length.
     max_prefill_batch: cap on requests prefetched into one batched
         prefill (default ``max_batch``).
+    mesh: optional ``("data", "model")`` mesh — serve tensor-parallel with
+        sequence/pages-sharded KV caches (see "Mesh-native serving" in the
+        module docstring).  A 1×1 mesh degenerates bit-identically to
+        ``mesh=None``.
+    kv_shard: ``"seq"`` (default; slab sequence axis / paged pages axis
+        over ``model``) or ``"feature"`` (trailing head/latent dim) —
+        the ``cache_pspecs`` layouts.  ``"feature"`` is rejected on
+        meshes with a model axis > 1: its prefill write miscompiles under
+        the SPMD partitioner (see ``compressed_pspecs.check_kv_shard``).
     """
 
     def __init__(
@@ -199,11 +248,15 @@ class DecodeEngine:
         prefill_chunk: Optional[int] = None,
         prefill_buckets: Optional[Sequence[int]] = None,
         max_prefill_batch: Optional[int] = None,
+        mesh=None,
+        kv_shard: str = "seq",
     ):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        self.mesh = mesh
+        self.kv_shard = kv_shard
         if steps_per_dispatch < 1:
             raise ValueError(f"steps_per_dispatch must be >= 1, got {steps_per_dispatch}")
         self.steps_per_dispatch = steps_per_dispatch
@@ -212,7 +265,7 @@ class DecodeEngine:
             kv_pool = PagedKVPool(
                 model, max_batch=max_batch, max_len=max_len,
                 num_pages=num_pages, page_size=page_size,
-                lookahead=steps_per_dispatch,
+                lookahead=steps_per_dispatch, mesh=mesh, kv_shard=kv_shard,
             )
         self.pool = kv_pool
         if self.pool is not None:
@@ -222,14 +275,60 @@ class DecodeEngine:
                     f"steps_per_dispatch {steps_per_dispatch}; build the pool "
                     "with lookahead >= K"
                 )
+            if mesh is not None and (
+                self.pool.mesh is not mesh
+                or getattr(self.pool, "kv_shard", kv_shard) != kv_shard
+            ):
+                raise ValueError(
+                    "a mesh-native engine needs a pool built with the same "
+                    "mesh and kv_shard (pass mesh=/kv_shard= to PagedKVPool, "
+                    "or let the engine build it via num_pages=...)"
+                )
             self.layout = self.pool.layout
             self.cache = self.pool.cache
         else:
             self.layout = SlabLayout(max_len)
             self.cache = model.init_cache(max_batch, max_len)
+        # mesh-native serving: every executable below is jitted with explicit
+        # in/out NamedShardings derived from the serving pspec seam, and the
+        # live params / cache / token buffer are device_put to match.  A 1x1
+        # mesh makes every sharding trivial, so the executables degenerate
+        # bit-identically to the mesh=None path.
+        self._shardings: Optional[dict] = None
+        if mesh is not None:
+            from repro.distributed.compressed_pspecs import (
+                check_kv_shard,
+                lane_sharding,
+                replicated,
+                serving_cache_shardings,
+                serving_param_shardings,
+            )
+
+            check_kv_shard(mesh, kv_shard)
+            self._shardings = {
+                "params": serving_param_shardings(mesh, params, cfg=model.cfg),
+                # a mesh-native pool already derived (and applied) the
+                # cache sharding tree — reuse it rather than re-walking
+                "cache": (
+                    self.pool.cache_shardings
+                    if self.pool is not None
+                    and self.pool.cache_shardings is not None
+                    else serving_cache_shardings(
+                        mesh, self.cache, self.layout, kv_shard=kv_shard
+                    )
+                ),
+                "lane": lane_sharding(mesh, max_batch),
+                "repl": replicated(mesh),
+            }
+            self.params = jax.device_put(params, self._shardings["params"])
+            if self.pool is None:
+                self.cache = jax.device_put(self.cache, self._shardings["cache"])
+
         self.slots: list[Optional[_Slot]] = [None] * max_batch
         self.queue: deque[_Request] = deque()
         self.tokens = jnp.zeros((max_batch,), jnp.int32)
+        if self._shardings is not None:
+            self.tokens = jax.device_put(self.tokens, self._shardings["lane"])
         self.key = jax.random.PRNGKey(seed)
         self._next_uid = 0
         self._admit_seq = 0
@@ -331,9 +430,10 @@ class DecodeEngine:
             )
             return first, cache
 
-        def _chunk(params, tokens, cache, lane, start, length):
+        def _chunk(params, tokens, cache, lanes, starts, lengths):
+            # one dispatch absorbs a chunk of every currently-chunking lane
             return model.prefill_chunk(
-                params, tokens, cache, lane, start, length, layout
+                params, tokens, cache, lanes, starts, lengths, layout
             )
 
         # the need_* flags are static so all-greedy batches compile to a
@@ -342,18 +442,48 @@ class DecodeEngine:
         # donate_argnums hands the cache (and the decode's token buffer) to
         # XLA for in-place update — without it every dispatch copies the
         # whole pool because the engine reuses the input cache.
+        jit_kw: dict = {"decode": {}, "prefill": {}, "chunk": {}}
+        if self._shardings is not None:
+            # pin explicit in/out shardings on every executable: params TP,
+            # cache seq/pages-sharded, per-lane vectors over DP, prefill /
+            # chunk row batches replicated (they scatter into the sharded
+            # cache), rng keys replicated
+            from jax.sharding import NamedSharding, PartitionSpec as _P
+
+            psh = self._shardings["params"]
+            csh = self._shardings["cache"]
+            lane = self._shardings["lane"]
+            repl = self._shardings["repl"]
+            blk = NamedSharding(mesh, _P(None, *tuple(lane.spec)))
+            jit_kw["decode"] = dict(
+                in_shardings=(psh, lane, csh, lane, lane, lane, lane, repl,
+                              lane, lane),
+                out_shardings=(blk, lane, csh, repl),
+            )
+            jit_kw["prefill"] = dict(
+                in_shardings=(psh, repl, repl, repl, csh, repl, repl, repl),
+                out_shardings=(repl, csh),
+            )
+            jit_kw["chunk"] = dict(
+                in_shardings=(psh, repl, csh, repl, repl, repl),
+                out_shardings=(repl, csh),
+            )
+        # statics are passed *positionally* (static_argnums): pjit rejects
+        # kwargs outright once in_shardings is specified
         self._decode = jax.jit(
             _decode,
-            static_argnames=("k", "need_sample", "need_topk"),
+            static_argnums=(10, 11, 12),  # k, need_sample, need_topk
             donate_argnums=(1, 2) if donate else (),
+            **jit_kw["decode"],
         )
         self._prefill = jax.jit(
             _prefill,
-            static_argnames=("need_sample", "need_topk"),
+            static_argnums=(8, 9),  # need_sample, need_topk
             donate_argnums=(4,) if donate else (),
+            **jit_kw["prefill"],
         )
         self._chunk = jax.jit(
-            _chunk, donate_argnums=(2,) if donate else ()
+            _chunk, donate_argnums=(2,) if donate else (), **jit_kw["chunk"]
         )
         self._warmed: set[tuple[bool, bool]] = set()
 
@@ -499,18 +629,18 @@ class DecodeEngine:
             lanes[r] = i
             temps[r] = req.sampling.temperature
             topks[r] = req.sampling.top_k
-        flags = dict(
-            need_sample=any(req.sampling.temperature > 0 for req, _, _ in items),
-            need_topk=any(req.sampling.top_k > 0 for req, _, _ in items),
-        )
+        need_sample = any(req.sampling.temperature > 0 for req, _, _ in items)
+        need_topk = any(req.sampling.top_k > 0 for req, _, _ in items)
         self.key, sub = jax.random.split(self.key)
         if self.pool is not None:
-            self.cache["tables"] = self.pool.device_tables()
+            dt = self.pool.device_tables()
+            if dt:  # ssm-only paged archs have no table'd layers
+                self.cache["tables"] = dt
         with _quiet_donation():
             first, self.cache = self._prefill(
                 self.params, jnp.asarray(tokens), jnp.asarray(lens),
                 jnp.asarray(lanes), self.cache, jnp.asarray(temps),
-                jnp.asarray(topks), sub, **flags,
+                jnp.asarray(topks), sub, need_sample, need_topk,
             )
         if self.pool is not None:
             # the donated call consumed the table buffers the pool held;
@@ -524,44 +654,72 @@ class DecodeEngine:
             self._absorb(i, int(host_first[r]), out)
 
     def _advance_chunks(self, out: list[GenerationResult]) -> None:
-        """One prompt chunk per chunk-prefilling lane, then back to decode.
+        """One prompt chunk of *every* chunk-prefilling lane per scheduling
+        step, absorbed by a single batched dispatch (rows padded to a power
+        of two with sentinel lanes, so the executable retraces O(log B)
+        times, not per lane count).  Previously each chunking lane cost its
+        own dispatch per step.
 
-        The final chunk's logits seed the request's first sampled token, so
-        a lane never idles fully-prefilled-but-unsampled across a dispatch.
+        A lane's final chunk's logits seed its request's first sampled
+        token, so a lane never idles fully-prefilled-but-unsampled across a
+        dispatch.
         """
         csz = self.prefill_chunk
-        for i, s in enumerate(self.slots):
-            if s is None or not s.pending:
-                continue
+        chunking = [
+            i for i, s in enumerate(self.slots) if s is not None and s.pending
+        ]
+        if not chunking:
+            return
+        nb = _next_pow2(len(chunking))
+        toks = np.zeros((nb, csz), np.int32)
+        lanes = np.full((nb,), self.max_batch, np.int32)  # sentinel = pad row
+        starts = np.zeros((nb,), np.int32)
+        lengths = np.zeros((nb,), np.int32)
+        for r, i in enumerate(chunking):
+            s = self.slots[i]
             part = s.pending[:csz]
-            toks = np.zeros((1, csz), np.int32)
-            toks[0, : len(part)] = part
-            if self.pool is not None:
-                self.cache["tables"] = self.pool.device_tables()
-            with _quiet_donation():
-                logits, self.cache = self._chunk(
-                    self.params, jnp.asarray(toks), self.cache,
-                    np.int32(i), np.int32(s.pos), np.int32(len(part)),
-                )
-            if self.pool is not None:
-                self.pool.adopt_tables(self.cache.get("tables"))
-            s.pos += len(part)
-            s.pending = s.pending[len(part):]
-            self.prefill_chunks += 1
+            toks[r, : len(part)] = part
+            lanes[r] = i
+            starts[r] = s.pos
+            lengths[r] = len(part)
+        if self.pool is not None:
+            dt = self.pool.device_tables()
+            if dt:  # ssm-only paged archs have no table'd layers
+                self.cache["tables"] = dt
+        with _quiet_donation():
+            logits, self.cache = self._chunk(
+                self.params, jnp.asarray(toks), self.cache,
+                jnp.asarray(lanes), jnp.asarray(starts), jnp.asarray(lengths),
+            )
+        if self.pool is not None:
+            self.pool.adopt_tables(self.cache.get("tables"))
+        self.prefill_chunks += 1
+        finishing: list[tuple[int, int]] = []  # (row, lane)
+        for r, i in enumerate(chunking):
+            s = self.slots[i]
+            took = int(lengths[r])
+            s.pos += took
+            s.pending = s.pending[took:]
             if not s.pending:
-                self.key, sub = jax.random.split(self.key)
-                sp = s.sampling
-                first = sample_tokens(
-                    logits,
-                    jnp.asarray([sp.temperature], jnp.float32),
-                    jnp.asarray([sp.top_k], jnp.int32),
-                    sub,
-                    need_sample=sp.temperature > 0,
-                    need_topk=sp.top_k > 0,
-                )
-                self.tokens = self.tokens.at[i].set(first[0])
+                finishing.append((r, i))
+        if finishing:
+            temps = np.zeros((nb,), np.float32)
+            topks = np.zeros((nb,), np.int32)
+            for r, i in finishing:
+                sp = self.slots[i].sampling
+                temps[r] = sp.temperature
+                topks[r] = sp.top_k
+            self.key, sub = jax.random.split(self.key)
+            first = sample_tokens(
+                logits, jnp.asarray(temps), jnp.asarray(topks), sub,
+                need_sample=bool((temps > 0).any()),
+                need_topk=bool((topks > 0).any()),
+            )
+            host_first = np.asarray(first)
+            for r, i in finishing:
+                self.tokens = self.tokens.at[i].set(first[r])
                 self._slots_dirty = True
-                self._absorb(i, int(np.asarray(first)[0]), out)
+                self._absorb(i, int(host_first[r]), out)
 
     def _ensure_capacity(self, out: list[GenerationResult]) -> None:
         """Back every decoding lane's next K writes; preempt on pressure.
@@ -667,21 +825,20 @@ class DecodeEngine:
         self._util_n += 1
         self._kv_bytes_sum += self._live_kv_bytes()
         if self.pool is not None:
-            self.cache["tables"] = self.pool.device_tables()
+            dt = self.pool.device_tables()
+            if dt:  # ssm-only paged archs have no table'd layers
+                self.cache["tables"] = dt
         k = self.steps_per_dispatch
         budget = np.zeros((self.max_batch,), np.int32)
         for i, s in enumerate(self.slots):
             if s is not None and not s.pending:
                 budget[i] = s.sampling.max_new_tokens - len(s.generated)
-        flags = dict(
-            need_sample=consts["need_sample"], need_topk=consts["need_topk"]
-        )
         args = (
             self.params, self.tokens, self.cache, consts["temps"],
             consts["topks"], consts["active"], consts["keep"], self.key,
             consts["eos"], jnp.asarray(budget),
         )
-        sig = (k, flags["need_sample"], flags["need_topk"])
+        sig = (k, consts["need_sample"], consts["need_topk"])
         t_sched = time.perf_counter()  # warmup compile time is not host overhead
         if sig not in self._warmed:
             # untimed warmup: trace+compile of this variant must not land in
@@ -696,11 +853,11 @@ class DecodeEngine:
                 )
                 wargs = (args[0], tok_c, cache_c) + args[3:]
             with _quiet_donation():
-                jax.block_until_ready(self._decode(*wargs, k=k, **flags))
+                jax.block_until_ready(self._decode(*wargs, *sig))
             self._warmed.add(sig)
         t0 = time.perf_counter()
         with _quiet_donation():
-            block, tok, self.cache, self.key = self._decode(*args, k=k, **flags)
+            block, tok, self.cache, self.key = self._decode(*args, *sig)
             tok.block_until_ready()
         t1 = time.perf_counter()
         self.decode_wall_s += t1 - t0
@@ -827,6 +984,107 @@ class DecodeEngine:
             if _block_mixer_mlp(kind, self.model.cfg)[0] in ("attn", "mla"):
                 total += entry_bytes(self.cache[f"tail_{i}"])
         return total
+
+    def mesh_desc(self) -> Optional[dict]:
+        """{"shape": [...], "axes": [...]} for the engine's mesh (None =
+        single-device) — the schema serve_bench records under ``mesh``."""
+        if self.mesh is None:
+            return None
+        return {
+            "shape": [int(s) for s in self.mesh.devices.shape],
+            "axes": [str(a) for a in self.mesh.axis_names],
+        }
+
+    def sharding_report(self, include_hlo: bool = False) -> dict:
+        """Per-shard placement facts for the mesh-native engine.
+
+        Reports, per weight/cache leaf and in aggregate, the bytes one
+        shard holds (``sharding.shard_shape``) next to the global bytes —
+        the per-shard HBM numbers the serve_bench sharded sweep records —
+        plus which weight leaves ended up fully replicated (none should,
+        for 2-D+ matmul weights on a model-axis mesh).  With
+        ``include_hlo=True`` the decode executable is lowered + compiled
+        for the engine's current shapes and its collective mix
+        (all-reduce/all-gather/... counts and bytes) and per-argument input
+        shardings are extracted — the "live executable" view the sharded
+        serving tests assert on.
+        """
+        import math
+
+        def shard_bytes(x) -> int:
+            if self.mesh is not None and hasattr(x, "sharding"):
+                return (
+                    math.prod(x.sharding.shard_shape(x.shape))
+                    * x.dtype.itemsize
+                )
+            return int(x.size * x.dtype.itemsize)
+
+        from repro.utils.tree import _path_str
+
+        weights = {}
+        for path, leaf in jax.tree_util.tree_leaves_with_path(self.params):
+            weights[_path_str(path)] = {
+                "bytes": int(leaf.size * leaf.dtype.itemsize),
+                "bytes_per_shard": shard_bytes(leaf),
+                "ndim": int(leaf.ndim),
+                "replicated": (
+                    bool(leaf.sharding.is_fully_replicated)
+                    if hasattr(leaf, "sharding") else True
+                ),
+            }
+
+        def is_matmul_leaf(name: str, w: dict) -> bool:
+            # per-feature vectors (norm scales, biases — stacked ones are
+            # 2-D) replicate by design; counting them would bury a real
+            # weight-replication regression in constant noise
+            return w["ndim"] >= 2 and not any(
+                f in name for f in ("bias", "norm", "scale")
+            )
+        cache_total = cache_shard = 0
+        for leaf in jax.tree_util.tree_leaves(self.cache):
+            cache_total += int(leaf.size * leaf.dtype.itemsize)
+            cache_shard += shard_bytes(leaf)
+        report = {
+            "mesh": self.mesh_desc(),
+            "weights": weights,
+            "weight_bytes": sum(w["bytes"] for w in weights.values()),
+            "weight_bytes_per_shard": sum(
+                w["bytes_per_shard"] for w in weights.values()
+            ),
+            # the regression signal: matmul weights (ndim >= 2, not a
+            # per-feature vector) that ended up fully replicated — 0 on a
+            # healthy model-axis mesh
+            "replicated_matmul_leaves": sum(
+                1 for name, w in weights.items()
+                if w["replicated"] and is_matmul_leaf(name, w)
+            ),
+            "cache_bytes": cache_total,
+            "cache_bytes_per_shard": cache_shard,
+        }
+        if include_hlo:
+            from repro.utils import hlo_cost as HC
+
+            consts = self._slot_consts()
+            budget = jnp.zeros((self.max_batch,), jnp.int32)
+            lowered = self._decode.lower(
+                self.params, self.tokens, self.cache, consts["temps"],
+                consts["topks"], consts["active"], consts["keep"], self.key,
+                consts["eos"], budget, self.steps_per_dispatch, False, False,
+            )
+            compiled = lowered.compile()
+            walk = HC.analyze(compiled.as_text())
+            report["decode_collective_bytes"] = walk["collective_bytes"]
+            report["decode_collective_total"] = walk["collective_total"]
+            n_weight_leaves = len(jax.tree_util.tree_leaves(self.params))
+            try:
+                flat_in = jax.tree_util.tree_leaves(compiled.input_shardings[0])
+                report["decode_weight_inputs_replicated"] = [
+                    bool(s.is_fully_replicated)
+                    for s in flat_in[:n_weight_leaves]
+                ]
+            except Exception:  # AOT introspection API drift: report omits it
+                report["decode_weight_inputs_replicated"] = None
+        return report
 
     def stats(self) -> dict:
         # throughput counts only decode-produced tokens over decode wall time;

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -48,7 +49,21 @@ from repro.models.cache import PagedLayout, cdiv, paged_layout_for
 
 
 class PagedKVPool:
-    """Free-page list + per-lane page tables over a shared device pool."""
+    """Free-page list + per-lane page tables over a shared device pool.
+
+    **Mesh-native pools** (``mesh=...``): the physical pools are laid out
+    across the mesh by ``distributed.compressed_pspecs.serving_cache_shardings``
+    — each ``model``-axis shard owns a slice of the pages axis (the
+    sequence-sharding analogue; ``kv_shard="feature"`` shards the trailing
+    feature dim instead) while the page tables stay **replicated**, so every
+    shard resolves logical→physical page addresses locally.  Table sync is
+    still incremental, but each upload/row-scatter is a *per-shard*
+    ``device_put``: the replicated ``NamedSharding`` fans the dirty rows out
+    to every device, and the scatter onto the resident (committed) arrays
+    keeps their sharding.  Allocation policy is unchanged — page ids are
+    global, the host allocator doesn't know or care which shard physically
+    backs a page.
+    """
 
     def __init__(
         self,
@@ -60,14 +75,38 @@ class PagedKVPool:
         page_size: int = 16,
         dtype=None,
         lookahead: int = 1,
+        mesh=None,
+        kv_shard: str = "seq",
     ):
+        shards = 1
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            shards = int(sizes.get("model", 1))
         self.layout: PagedLayout = paged_layout_for(
             model.cfg, max_len, page_size=page_size, num_pages=num_pages,
-            lookahead=lookahead,
+            lookahead=lookahead, shards=shards,
         )
+        self.mesh = mesh
+        self.kv_shard = kv_shard
         self.max_batch = max_batch
         self.max_len = max_len
         self.cache = model.init_cache(max_batch, max_len, dtype, layout=self.layout)
+        self._table_shardings: Optional[dict] = None
+        # the engine reuses this tree for its executables' in/out shardings
+        self.cache_shardings: Optional[dict] = None
+        if mesh is not None:
+            from repro.distributed.compressed_pspecs import (
+                check_kv_shard,
+                serving_cache_shardings,
+            )
+
+            check_kv_shard(mesh, kv_shard)
+            shd = serving_cache_shardings(
+                mesh, self.cache, self.layout, kv_shard=kv_shard
+            )
+            self.cache = jax.device_put(self.cache, shd)
+            self.cache_shardings = shd
+            self._table_shardings = shd.get("tables")
         lo = self.layout
         self._pt_full = np.full((max_batch, lo.pages_full), lo.sentinel, np.int32)
         self._pt_win = np.full((max_batch, lo.pages_win), lo.sentinel, np.int32)
@@ -256,10 +295,15 @@ class PagedKVPool:
         """
         if self._dev_tables is None:
             t = {}
+            put = (
+                (lambda a, k: jax.device_put(a, self._table_shardings[k]))
+                if self._table_shardings is not None
+                else (lambda a, k: jnp.asarray(a))
+            )
             if self.layout.pages_full:
-                t["full"] = jnp.asarray(self._pt_full)
+                t["full"] = put(self._pt_full, "full")
             if self.layout.pages_win:
-                t["win"] = jnp.asarray(self._pt_win)
+                t["win"] = put(self._pt_win, "win")
             self._dev_tables = t
             self._dirty_lanes.clear()
             self.table_full_uploads += 1

@@ -232,6 +232,26 @@ def test_chunked_prefill_matches_monolithic_and_interleaves():
         assert eng.stats()["prefill_batches"] == 1
 
 
+def test_batched_chunked_prefill_one_dispatch_per_step():
+    """Two long prompts admitted together chunk in *one* dispatch per
+    scheduling step (3 dispatches for 3+3 lane-chunks, not 6), with
+    streams identical to the monolithic-prefill baseline."""
+    prompts = [_rand_prompt(1, 21), _rand_prompt(4, 17)]
+    sps = [SamplingParams(max_new_tokens=5), SamplingParams(max_new_tokens=6)]
+    base = _stream(
+        DecodeEngine(MODEL, COMP, max_batch=2, max_len=40, seed=3, donate=False),
+        prompts, sps,
+    )
+    for kw in (dict(), dict(num_pages=24, page_size=4)):
+        eng = DecodeEngine(
+            MODEL, COMP, max_batch=2, max_len=40, seed=3, prefill_chunk=8, **kw
+        )
+        got = _stream(eng, prompts, sps)
+        assert got == base, kw
+        # ceil(21/8) == ceil(17/8) == 3 chunks per lane, absorbed together
+        assert eng.prefill_chunks == 3
+
+
 def test_chunked_prefill_mla_paged():
     cfg, model, comp = _compressed("deepseek-v2-lite-16b")
     prompts = [_rand_prompt(7, 17, cfg.vocab)]

@@ -1,16 +1,31 @@
 """Sharding rules + sparse-infer export + hlo cost walker units."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import param_pspec
+from repro.distributed.sharding import param_pspec, sanitize_spec
 from repro.sparse_infer import compress_params, decompress_params, compression_report
 from repro.core import SparsityConfig, NMSparsity
 from repro.utils.hlo_cost import analyze
 
 jax.config.update("jax_platform_name", "cpu")
+
+
+class _StubMesh:
+    """Axis names + device-grid shape are all sanitize_spec / the pspec
+    rules read — lets spec-level tests exercise mesh shapes (16x16, zero
+    axes, multi-pod tuples) that no CPU test runner can materialize."""
+
+    def __init__(self, axes, shape):
+        self.axis_names = tuple(axes)
+        self.devices = np.zeros(shape)
+
+
+MESH24 = _StubMesh(("data", "model"), (2, 4))
 
 
 @pytest.mark.parametrize(
@@ -52,6 +67,128 @@ def test_state_pspecs_mirror_params():
     assert specs["params"]["blk"]["attn"]["wq"] == P("data", "model")
     assert specs["opt"]["m"]["blk"]["attn"]["wq"] == P("data", "model")
     assert specs["opt"]["step"] == P()
+
+
+@pytest.mark.parametrize(
+    "spec,shape,mesh,expected",
+    [
+        # tuple axis entries: product of the tuple's sizes must divide
+        (P(("pod", "data")), (8, 4), _StubMesh(("pod", "data", "model"), (2, 2, 4)), P(("pod", "data"), None)),
+        (P(("pod", "data")), (6, 4), _StubMesh(("pod", "data", "model"), (2, 2, 4)), P(None, None)),
+        # zero-size mesh axis: never shard onto it
+        (P("model"), (8,), _StubMesh(("data", "model"), (2, 0)), P(None)),
+        # odd vocab dims (mamba2's 50280 on a 16-way axis) degrade per-dim
+        (P("model", "data"), (50280, 64), _StubMesh(("data", "model"), (16, 16)), P(None, "data")),
+        # absent axis names count as size 1 (spec written for a bigger mesh)
+        (P("pod", "model"), (4, 8), MESH24, P("pod", "model")),
+        # rank padding: spec shorter than the shape
+        (P("model"), (8, 6), MESH24, P("model", None)),
+    ],
+)
+def test_sanitize_spec_edge_cases(spec, shape, mesh, expected):
+    assert sanitize_spec(spec, shape, mesh) == expected
+
+
+def _ct(name, dense_shape, n=2, m=4, pad=0):
+    """A CompressedTensor shaped like compress_params would emit."""
+    from repro.sparse_infer.compress import CompressedTensor
+
+    rows = dense_shape[-2] * n // m
+    v_shape = dense_shape[:-2] + (rows, dense_shape[-1] + pad)
+    return CompressedTensor(
+        np.zeros(v_shape, np.float32), np.zeros(v_shape, np.uint8),
+        n, m, len(dense_shape) - 2, dense_shape, pad,
+    )
+
+
+def test_compressed_pspec_tp_on_non_compressed_dim():
+    """wq's dense rule puts TP on the output dim — the compressed leaf
+    keeps it there (the values' reduction dim shrank, output didn't)."""
+    from repro.distributed.compressed_pspecs import compressed_pspec
+
+    v, i = compressed_pspec("head_0/attn/wq", _ct("wq", (64, 64)), MESH24)
+    assert v == P(None, "model") and i == P(None, "model")
+
+
+def test_compressed_pspec_compressed_dim_whole_groups():
+    """wo's dense rule TP-shards the reduction (= compressed) dim: kept
+    only when the *dense* dim divides by M x axis_size (whole N:M groups
+    per shard), else TP falls back to the output dim."""
+    from repro.distributed.compressed_pspecs import compressed_pspec
+
+    # dense in = 64, m*size = 16: whole groups per shard -> stays
+    v, _ = compressed_pspec("head_0/attn/wo", _ct("wo", (64, 64)), MESH24)
+    assert v == P("model", None)
+    # dense in = 24: 24 % 16 != 0 -> groups would straddle; moves to out
+    v, _ = compressed_pspec("head_0/attn/wo", _ct("wo", (24, 64)), MESH24)
+    assert v == P(None, "model")
+    # ... unless the out dim doesn't divide either: fully replicated
+    v, _ = compressed_pspec("head_0/attn/wo", _ct("wo", (24, 6)), MESH24)
+    assert v == P(None, None)
+
+
+def test_compressed_pspec_scan_stacked_body_leaves():
+    """Stacked ``body/`` leaves keep the leading layer axis unsharded and
+    apply the same group rule at the shifted reduction axis."""
+    from repro.distributed.compressed_pspecs import compressed_pspec
+
+    v, i = compressed_pspec(
+        "body/sb_0/attn/wo", _ct("wo", (4, 64, 64)), MESH24
+    )
+    assert v == P(None, "model", None) and i == P(None, "model", None)
+    v, _ = compressed_pspec(
+        "body/sb_0/mlp/w_gate", _ct("w_gate", (4, 64, 128)), MESH24
+    )
+    assert v == P(None, None, "model")
+
+
+def test_compressed_pspec_alignment_pad_participates():
+    """MXU padding columns ride on the stored shape: an out dim of 60+4
+    pad divides a 4-way axis even though the dense width wouldn't."""
+    from repro.distributed.compressed_pspecs import compressed_pspec
+
+    v, _ = compressed_pspec("head_0/attn/wq", _ct("wq", (64, 60), pad=4), MESH24)
+    assert v == P(None, "model")
+
+
+def test_serving_pspecs_head_gate_relocates_tp():
+    """TP through a partially-sharded head dim (n_kv=2 on a 4-way axis)
+    relocates to the reduction dim: whole heads per shard or psum."""
+    from repro.distributed.compressed_pspecs import serving_param_pspecs
+
+    cfg = dataclasses.replace(
+        __import__("repro.configs", fromlist=["get_config"]).get_config(
+            "gpt2-paper", smoke=True
+        ),
+        n_kv=2,
+    )
+    tree = {
+        "head_0": {
+            "attn": {
+                "wk": np.zeros((64, 32), np.float32),
+                "wq": np.zeros((64, 64), np.float32),
+                "wk_c": _ct("wk", (64, 32)),
+            }
+        }
+    }
+    specs = serving_param_pspecs(tree, MESH24, cfg=cfg)
+    # n_heads=4 divides the 4-way axis: q keeps output TP
+    assert specs["head_0"]["attn"]["wq"] == P(None, "model")
+    # n_kv=2 doesn't: k moves to the reduction dim (dense and compressed)
+    assert specs["head_0"]["attn"]["wk"] == P("model", None)
+    assert specs["head_0"]["attn"]["wk_c"].values == P("model", None)
+
+
+def test_serving_pspecs_no_tp_orphan_weights():
+    """Leaves whose dense rule is FSDP-only (MLA w_dkv) still serve
+    sharded: reduction-dim TP instead of full replication."""
+    from repro.configs import get_config
+    from repro.distributed.compressed_pspecs import serving_param_pspecs
+
+    cfg = get_config("deepseek-v2-lite-16b", smoke=True)
+    tree = {"head_0": {"attn": {"w_dkv": np.zeros((64, 40), np.float32)}}}
+    specs = serving_param_pspecs(tree, MESH24, cfg=cfg)
+    assert specs["head_0"]["attn"]["w_dkv"] == P("model", None)
 
 
 def test_compress_decompress_roundtrip():
