@@ -87,7 +87,10 @@ SCHEMA_NOTE = {
         "{shape:[1],axes:[]} = single-device; earlier rows predate the "
         "field and were all single-device). sharded_serving rows add "
         "*_per_shard HBM bytes and decode_collective_* fields from the "
-        "compiled decode executable."
+        "compiled decode executable; from the per-shard kernel PR onward "
+        "they also carry kernel_route (xla | shard_map), per-shard "
+        "roofline bytes (*_per_step_per_shard), and "
+        "greedy_parity_across_routes on the (2,4) rows."
     ),
 }
 
@@ -131,13 +134,25 @@ def _hetero_prompts(cfg, n_requests: int, max_prompt: int) -> list[list[int]]:
     return out
 
 
-def _sharded_sweep(arch: str, nm, prompt_len: int, gen: int) -> list[dict]:
+def _sharded_sweep(
+    arch: str, nm, prompt_len: int, gen: int
+) -> tuple[list[dict], list[str]]:
     """Sweep 4: serve the compressed paged load tensor-parallel on an
     emulated 8-device CPU mesh, via a ``launch/serve.py`` subprocess (the
     ``--xla_force_host_platform_device_count`` flag must precede jax init,
-    which this process has long passed)."""
+    which this process has long passed).
+
+    The (2,4) mesh runs twice: once on the default kernel route (the
+    GSPMD-partitioned XLA gathered path on CPU) and once with
+    ``REPRO_KERNEL_MODE=shard_map`` forcing the per-shard wrapper
+    (``kernels.sharded``), so BENCH_serve.json captures the xla-vs-
+    shard_map route comparison with per-shard roofline bytes.  Returns
+    ``(records, route_parity_failures)`` — the caller asserts the greedy
+    streams of the two routes match *after* persisting the records."""
     n, m = nm
     records: list[dict] = []
+    failures: list[str] = []
+    streams: dict[tuple[str, str], list] = {}
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
     env = dict(os.environ)
     env["XLA_FLAGS"] = (
@@ -145,7 +160,12 @@ def _sharded_sweep(arch: str, nm, prompt_len: int, gen: int) -> list[dict]:
     ).strip()
     env["JAX_PLATFORMS"] = "cpu"
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    for mesh_arg in ("1,1", "2,4"):
+    for mesh_arg, forced in (("1,1", None), ("2,4", None), ("2,4", "shard_map")):
+        run_env = dict(env)
+        run_env.pop("REPRO_KERNEL_MODE", None)
+        if forced:
+            run_env["REPRO_KERNEL_MODE"] = forced
+        label = mesh_arg + (f"/{forced}" if forced else "")
         cmd = [
             sys.executable, "-m", "repro.launch.serve", "--arch", arch,
             "--nm", f"{n}:{m}", "--batch", "2",
@@ -158,10 +178,10 @@ def _sharded_sweep(arch: str, nm, prompt_len: int, gen: int) -> list[dict]:
         ]
         try:
             out = subprocess.run(
-                cmd, capture_output=True, text=True, env=env, timeout=1200
+                cmd, capture_output=True, text=True, env=run_env, timeout=1200
             )
         except subprocess.TimeoutExpired:
-            emit(f"serve/{arch}/{n}:{m}/sharded/{mesh_arg}", 0.0, "TIMEOUT")
+            emit(f"serve/{arch}/{n}:{m}/sharded/{label}", 0.0, "TIMEOUT")
             continue
         summary = None
         for line in out.stdout.splitlines():
@@ -173,13 +193,16 @@ def _sharded_sweep(arch: str, nm, prompt_len: int, gen: int) -> list[dict]:
                 summary = d["summary"]
         if summary is None:
             emit(
-                f"serve/{arch}/{n}:{m}/sharded/{mesh_arg}", 0.0,
+                f"serve/{arch}/{n}:{m}/sharded/{label}", 0.0,
                 f"FAILED rc={out.returncode}: {out.stderr[-200:]}",
             )
             continue
+        route = summary.get("kernel_route", "?")
+        streams[(mesh_arg, route)] = summary.get("greedy_streams")
         emit(
-            f"serve/{arch}/{n}:{m}/sharded/{mesh_arg}",
+            f"serve/{arch}/{n}:{m}/sharded/{label}",
             summary["ms_per_decode_step"] * 1e3,
+            f"route={route} "
             f"w_bytes/shard={summary['weight_bytes_per_shard']} "
             f"coll_bytes={summary['decode_collective_total']:.0f} "
             f"repl_leaves={summary['replicated_weight_leaves']}",
@@ -194,6 +217,7 @@ def _sharded_sweep(arch: str, nm, prompt_len: int, gen: int) -> list[dict]:
                 "mode": "compressed",
                 "layout": summary["layout"],
                 "batch": 2,
+                "kernel_route": route,
                 "us_per_decode_step": summary["ms_per_decode_step"] * 1e3,
                 "us_per_decode_step_host":
                     summary["ms_per_decode_step_host"] * 1e3,
@@ -206,9 +230,29 @@ def _sharded_sweep(arch: str, nm, prompt_len: int, gen: int) -> list[dict]:
                 "decode_collective_total": summary["decode_collective_total"],
                 "replicated_weight_leaves":
                     summary["replicated_weight_leaves"],
+                # per-shard decode roofline (weight slice + split KV read)
+                "model_shards": summary.get("model_shards"),
+                "weight_bytes_per_step_per_shard":
+                    summary.get("weight_bytes_per_step_per_shard"),
+                "kv_bytes_per_step_per_shard":
+                    summary.get("kv_bytes_per_step_per_shard"),
+                "bytes_read_per_step_per_shard":
+                    summary.get("bytes_read_per_step_per_shard"),
             }
         )
-    return records
+    # greedy-stream parity between the two (2,4) kernel routes: same mesh,
+    # same seeds — the streams must be token-identical
+    got = {r: s for (mesh_arg, r), s in streams.items() if mesh_arg == "2,4"}
+    if len(got) == 2:
+        a, b = got.values()
+        if a is None or b is None or a != b:
+            failures.append(f"2,4 routes {sorted(got)} streams differ")
+        for rec in records:
+            if rec["mesh"] and rec["mesh"].get("shape") == [2, 4]:
+                rec["greedy_parity_across_routes"] = a is not None and a == b
+    elif streams:  # one of the (2,4) runs failed outright
+        failures.append(f"expected 2 routes on the 2,4 mesh, got {sorted(got)}")
+    return records, failures
 
 
 def run(
@@ -399,7 +443,8 @@ def run(
         )
 
     # -- sweep 4: sharded serving on an emulated 8-device CPU mesh -------------
-    records.extend(_sharded_sweep(arch, nm, prompt_len, gen))
+    sharded_records, route_failures = _sharded_sweep(arch, nm, prompt_len, gen)
+    records.extend(sharded_records)
 
     if out_json:
         # one-time schema note: documents the mesh field + per-shard columns
@@ -416,8 +461,12 @@ def run(
             out_json, records if have_note else [SCHEMA_NOTE] + records
         )
     # fail *after* persisting: a parity break must not discard the run's
-    # records (the greedy_parity_with_k1 field marks the offending rows)
+    # records (the greedy_parity_with_k1 / greedy_parity_across_routes
+    # fields mark the offending rows)
     assert not parity_failures, (
         f"fused decode diverged from the K=1 baseline at K={parity_failures}"
+    )
+    assert not route_failures, (
+        f"xla vs shard_map kernel routes diverged: {route_failures}"
     )
     return records

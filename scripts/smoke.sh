@@ -42,4 +42,10 @@ echo "== serve smoke (mesh-native engine, degenerate 1x1 mesh) =="
 python -m repro.launch.serve --arch gpt2-paper --batch 2 --requests 2 \
     --prompt-len 6 --gen 6 --paged --page-size 4 --num-pages 16 --mesh 1,1
 
+echo "== serve smoke (forced shard_map kernel route on an emulated mesh) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
+JAX_PLATFORMS=cpu REPRO_KERNEL_MODE=shard_map \
+python -m repro.launch.serve --arch gpt2-paper --batch 2 --requests 2 \
+    --prompt-len 6 --gen 6 --paged --page-size 4 --num-pages 16 --mesh 2,4
+
 echo "smoke OK"

@@ -33,6 +33,7 @@ shardings), so the results feed ``jax.jit(in_shardings=...)`` and
 """
 from __future__ import annotations
 
+import dataclasses
 import re
 from typing import Any, Optional
 
@@ -200,12 +201,48 @@ def serving_param_pspecs(
         if _is_ct(x):
             v_spec, i_spec = compressed_pspec(name, x, mesh, cfg=cfg, fsdp=fsdp)
             return CompressedTensor(
-                v_spec, i_spec, x.n, x.m, x.group_axis, x.shape, x.pad
+                v_spec, i_spec, x.n, x.m, x.group_axis, x.shape, x.pad,
+                x.rshards,
             )
         entries = _serving_entries(name, len(x.shape), mesh, cfg, fsdp=fsdp)
         return sanitize_spec(P(*entries), tuple(x.shape), mesh)
 
     return jax.tree_util.tree_map_with_path(leaf, params_like, is_leaf=_is_ct)
+
+
+def annotate_reduction_tp(
+    params: Any, mesh: Mesh, *, cfg=None, fsdp: bool = False
+) -> Any:
+    """Stamp ``CompressedTensor.rshards`` from the mesh placement.
+
+    Computes the same pspecs :func:`serving_param_pspecs` would assign and,
+    for every compressed leaf whose *group* (reduction) axis lands purely
+    on the model axis, records that axis size as ``rshards`` in the leaf's
+    static aux.  The matmul dispatch (``models.layers``) forwards it to the
+    kernel registry so reduction-TP'd leaves can take the per-shard
+    shard_map route (``kernels.sharded.nm_spmm_shard_map``) instead of
+    relying on GSPMD to partition the XLA path.
+
+    Must run *before* shardings/donation trees are built from the params
+    tree: ``rshards`` lives in the pytree aux, so an annotated tree and an
+    unannotated spec tree no longer match leaf-for-leaf.  The engine
+    annotates right after construction, then derives everything else from
+    the annotated tree.
+    """
+
+    def leaf(path, x):
+        if not _is_ct(x):
+            return x
+        name = _path_str(path)
+        v_spec, _ = compressed_pspec(name, x, mesh, cfg=cfg, fsdp=fsdp)
+        ndim = x.values.ndim
+        entries = list(tuple(v_spec)) + [None] * (ndim - len(tuple(v_spec)))
+        entry = entries[ndim - 2]
+        if entry != MODEL_AXIS:
+            return x  # output-dim TP / replicated: GSPMD handles it
+        return dataclasses.replace(x, rshards=_axis_size(entry, mesh))
+
+    return jax.tree_util.tree_map_with_path(leaf, params, is_leaf=_is_ct)
 
 
 def serving_param_shardings(

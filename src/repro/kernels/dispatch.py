@@ -15,6 +15,11 @@ Modes
   Correctness-only: tests and debugging.  Never a production route.
 - ``"xla"``       — a vectorized pure-XLA implementation.  The production
   path on CPU/GPU and the parity oracle everywhere.
+- ``"shard_map"`` — a ``jax.experimental.shard_map`` wrapper that runs the
+  kernel *per shard* over mesh-partitioned operands and combines partial
+  results with tiny psums (``kernels.sharded``).  Selected automatically
+  for ``shards > 1`` calls (see below); forcing it on an unsharded call
+  falls through to the backend default.
 
 Resolution order, first hit wins:
 
@@ -28,10 +33,19 @@ Resolution order, first hit wins:
 
 One override sits above all of these: ``shards > 1`` in the shape info
 (operands partitioned across a mesh, e.g. a mesh-native engine's paged
-pool — see ``PagedLayout.shards``) forces ``"xla"`` whenever an XLA
-implementation exists, because a Pallas body is opaque to GSPMD and cannot
-be partitioned; the XLA path partitions into per-shard flash stats
-combined by tiny psums.
+pool — see ``PagedLayout.shards``) re-routes any non-``"xla"`` pick,
+because a raw Pallas body is opaque to GSPMD and cannot be partitioned.
+When a ``"shard_map"`` wrapper is registered for the kernel, a mesh is
+active (:func:`mesh_context` — the mesh-native engine installs it around
+every executable call), and the per-kernel *shard guard* accepts the
+shape (divisibility: pages per shard, whole N:M groups per shard), the
+call routes to the wrapper — the kernel runs per shard on shard-local
+operands and the partial results combine with the same tiny psums the
+XLA gathered path uses.  Otherwise ``"xla"`` remains the correctness
+backstop: GSPMD partitions the gathered implementation.  The mode that
+would have been picked without the override (forced ``"interpret"``, the
+TPU ``"pallas"`` default, ...) becomes the *inner* per-shard route,
+resolved by the wrapper through this same registry.
 
 Resolution happens at trace time: a jitted caller bakes the route into its
 executable, so flipping the env var after an engine compiled its decode
@@ -53,11 +67,13 @@ from typing import Callable, Optional
 import jax
 
 ENV_VAR = "REPRO_KERNEL_MODE"
-MODES = ("pallas", "interpret", "xla")
+MODES = ("pallas", "interpret", "xla", "shard_map")
 
 _REGISTRY: dict[str, dict[str, Callable]] = {}
 _GUARDS: dict[str, Callable[..., bool]] = {}
+_SHARD_GUARDS: dict[str, Callable[..., bool]] = {}
 _FORCED: list[str] = []
+_MESHES: list = []  # trace-time mesh stack for the shard_map route
 
 
 def register(kernel: str, mode: str, fn: Callable) -> None:
@@ -70,6 +86,32 @@ def register(kernel: str, mode: str, fn: Callable) -> None:
 def register_guard(kernel: str, guard: Callable[..., bool]) -> None:
     """``guard(**shape_info) -> bool``: may the Pallas route take this shape?"""
     _GUARDS[kernel] = guard
+
+
+def register_shard_guard(kernel: str, guard: Callable[..., bool]) -> None:
+    """``guard(**shape_info) -> bool``: may the shard_map route take this
+    sharded call?  (Divisibility checks: the wrapper's in_specs split
+    operand dims exactly — pages per shard, whole N:M groups per shard.)"""
+    _SHARD_GUARDS[kernel] = guard
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    """Make ``mesh`` available to trace-time resolution: ``shards > 1``
+    calls inside the context may route to a registered shard_map wrapper
+    (which needs the concrete mesh to build its ``shard_map``).  The
+    mesh-native serving engine installs this around every executable call;
+    without it, sharded calls take the XLA backstop exactly as before."""
+    _MESHES.append(mesh)
+    try:
+        yield
+    finally:
+        _MESHES.pop()
+
+
+def active_mesh():
+    """The innermost :func:`mesh_context` mesh, or None."""
+    return _MESHES[-1] if _MESHES else None
 
 
 def registered() -> dict[str, tuple[str, ...]]:
@@ -105,10 +147,38 @@ def _ensure_registered(kernel: str = "") -> None:
         "nm_spmm" not in _REGISTRY
         or "paged_attn" not in _REGISTRY
         or "nm_mask" not in _REGISTRY
+        or "shard_map" not in _REGISTRY.get("paged_attn", {})
     ):
         import repro.kernels.nm_mask  # noqa: F401
         import repro.kernels.nm_spmm  # noqa: F401
         import repro.kernels.paged_attn  # noqa: F401
+        import repro.kernels.sharded  # noqa: F401
+
+
+def _default_mode(kernel: str, **shape_info) -> str:
+    picked = "pallas" if jax.default_backend() == "tpu" else "xla"
+    guard = _GUARDS.get(kernel)
+    if picked == "pallas" and guard is not None and not guard(**shape_info):
+        picked = "xla"  # shape the Pallas grid can't tile: use XLA even on TPU
+    return picked
+
+
+def _shard_route_ok(kernel: str, impls: dict, shape_info: dict) -> bool:
+    """May this ``shards > 1`` call take the registered shard_map wrapper?
+    Needs the wrapper, an active :func:`mesh_context` whose model axis
+    matches the shard count, and the kernel's shard guard's blessing."""
+    if "shard_map" not in impls:
+        return False
+    mesh = active_mesh()
+    if mesh is None:
+        return False
+    from repro.distributed.sharding import MODEL_AXIS
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if int(sizes.get(MODEL_AXIS, 1)) != int(shape_info.get("shards", 1)):
+        return False
+    guard = _SHARD_GUARDS.get(kernel)
+    return guard is None or bool(guard(**shape_info))
 
 
 def resolve(kernel: str, mode: Optional[str] = None, **shape_info) -> tuple[str, Callable]:
@@ -117,18 +187,22 @@ def resolve(kernel: str, mode: Optional[str] = None, **shape_info) -> tuple[str,
     impls = _REGISTRY[kernel]
     picked = mode or (_FORCED[-1] if _FORCED else None) or _env_mode()
     if picked is None:
-        picked = "pallas" if jax.default_backend() == "tpu" else "xla"
-        guard = _GUARDS.get(kernel)
-        if picked == "pallas" and guard is not None and not guard(**shape_info):
-            picked = "xla"  # shape the Pallas grid can't tile: use XLA even on TPU
-    if shape_info.get("shards", 1) > 1 and picked != "xla" and "xla" in impls:
-        # mesh-partitioned operands: a Pallas body is opaque to GSPMD, so
-        # only the XLA implementation partitions.  This overrides even
-        # forced/env modes — a fused kernel over sharded buffers is not a
-        # mode choice, it is a correctness hazard (shard_map wrappers that
-        # remap to shard-local addressing are the ROADMAP path to lifting
-        # this for paged_attn).
-        picked = "xla"
+        picked = _default_mode(kernel, **shape_info)
+    if shape_info.get("shards", 1) > 1 and picked != "xla":
+        # mesh-partitioned operands: a raw Pallas body is opaque to GSPMD.
+        # Route to the shard_map wrapper (per-shard kernel on shard-local
+        # operands + psum combine) when one is registered and eligible;
+        # the GSPMD-partitionable XLA implementation is the correctness
+        # backstop.  Forced/env modes are overridden here too — they
+        # become the *inner* per-shard route inside the wrapper instead.
+        if _shard_route_ok(kernel, impls, shape_info):
+            picked = "shard_map"
+        elif "xla" in impls:
+            picked = "xla"
+    elif picked == "shard_map":
+        # forced shard_map on an unsharded call (env-forced sweeps hit
+        # every kernel): nothing to wrap — fall through to the default
+        picked = _default_mode(kernel, **shape_info)
     if picked not in impls:
         raise NotImplementedError(f"kernel {kernel!r} has no {picked!r} impl")
     return picked, impls[picked]
@@ -149,18 +223,28 @@ def uses_kernel(kernel: str, mode: Optional[str] = None, **shape_info) -> bool:
 
 def nm_spmm(
     x, values, indices, n: int, m: int, *, o_true: Optional[int] = None,
-    mode: Optional[str] = None,
+    shards: int = 1, mode: Optional[str] = None,
 ):
     """Compressed N:M matmul ``y = x @ decompress(values, indices)``.
 
     ``o_true`` slices off compress-time MXU padding on the output dim
     (``sparse_infer.compress_params`` stores lane-aligned buffers; the true
     width rides on ``CompressedTensor.pad``).
+
+    ``shards``: how many model-axis shards partition the *group* (reduction)
+    axis of ``values``/``indices`` (``CompressedTensor.rshards``, stamped by
+    ``distributed.compressed_pspecs.annotate_reduction_tp``).  With
+    ``shards > 1`` and an active :func:`mesh_context` the call routes to
+    the per-shard shard_map wrapper (``kernels.sharded.nm_spmm_shard_map``:
+    whole N:M groups per shard by construction, partial outputs
+    psum-reduced); otherwise GSPMD partitions the XLA path.
     """
-    _, fn = resolve(
+    picked, fn = resolve(
         "nm_spmm", mode, b=x.shape[0], k=x.shape[-1], o=values.shape[-1],
-        n=n, m=m,
+        n=n, m=m, shards=shards,
     )
+    if picked == "shard_map":
+        return fn(x, values, indices, n, m, o_true=o_true, mesh=active_mesh())
     return fn(x, values, indices, n, m, o_true=o_true)
 
 
@@ -190,19 +274,24 @@ def paged_attn(
     MLA-latent layouts, sentinel slots, windowed modular tables).
 
     ``shards``: how many mesh shards partition the pool's pages axis
-    (``PagedLayout.shards``).  With ``shards > 1`` the registered shape
-    guard routes to the XLA gathered path, which GSPMD partitions — each
-    shard computes flash stats over its local pages and the softmax
-    combines via tiny psums.  The Pallas kernel remains the single-shard
-    inner kernel: its scalar-prefetched index maps address the *global*
-    pool, so running it per shard needs a shard_map wrapper that remaps
-    table entries to shard-local page ids (ROADMAP next step).
+    (``PagedLayout.shards``).  With ``shards > 1`` and an active
+    :func:`mesh_context`, the call routes to the shard_map wrapper
+    (``kernels.sharded.paged_attn_shard_map``): each shard remaps the
+    replicated table to shard-local page ids, runs the kernel over its
+    slice of the pool emitting unnormalized flash ``(acc, m, l)`` stats,
+    and the softmax combines via tiny psums — the same stats/psum shape
+    GSPMD derives for the XLA gathered path, which remains the backstop
+    when no mesh is active or the pool doesn't split evenly.
     """
-    _, fn = resolve(
+    picked, fn = resolve(
         "paged_attn", mode, b=q.shape[0], n_slots=tables.shape[1],
-        page_size=k_pages.shape[1], shards=shards,
+        page_size=k_pages.shape[1], num_pages=k_pages.shape[0],
+        shards=shards,
     )
-    return fn(
-        q, k_pages, v_pages, tables, lengths, scale=scale, window=window,
-        win_slots=win_slots, q2=q2, k2_pages=k2_pages, v_is_k=v_is_k,
+    kw = dict(
+        scale=scale, window=window, win_slots=win_slots, q2=q2,
+        k2_pages=k2_pages, v_is_k=v_is_k,
     )
+    if picked == "shard_map":
+        kw["mesh"] = active_mesh()
+    return fn(q, k_pages, v_pages, tables, lengths, **kw)

@@ -260,5 +260,5 @@ dispatch.register(
 )
 dispatch.register("nm_spmm", "xla", nm_spmm_xla)
 dispatch.register_guard(
-    "nm_spmm", lambda b, k, o, n, m: pallas_shape_ok(b, k, o, n, m)
+    "nm_spmm", lambda b, k, o, n, m, **_: pallas_shape_ok(b, k, o, n, m)
 )

@@ -40,11 +40,16 @@ def nm_spmm(
     m: int,
     *,
     o_true: Optional[int] = None,
+    shards: int = 1,
     mode: Optional[str] = None,
 ) -> jnp.ndarray:
     """Compressed N:M matmul (serving path), routed by ``kernels.dispatch``.
 
     Off-TPU this runs the vectorized XLA path (``nm_spmm_xla``) — never the
     Pallas interpreter, which is how the seed's compressed decode came in
-    ~8x slower than dense on CPU."""
-    return dispatch.nm_spmm(x, values, indices, n, m, o_true=o_true, mode=mode)
+    ~8x slower than dense on CPU.  ``shards`` (``CompressedTensor.rshards``)
+    marks reduction-TP'd operands so sharded calls can take the per-shard
+    shard_map route — see ``dispatch.nm_spmm``."""
+    return dispatch.nm_spmm(
+        x, values, indices, n, m, o_true=o_true, shards=shards, mode=mode
+    )

@@ -78,6 +78,7 @@ def _paged_attn_kernel(
     sentinel: int,
     has_k2: bool,
     v_is_k: bool,
+    emit_stats: bool,
 ):
     it = iter(refs)
     q_ref = next(it)
@@ -86,6 +87,8 @@ def _paged_attn_kernel(
     k2_ref = next(it) if has_k2 else None
     v_ref = k_ref if v_is_k else next(it)
     o_ref = next(it)
+    m_ref = next(it) if emit_stats else None
+    l_ref = next(it) if emit_stats else None
     m_scr, l_scr, acc_scr = it
 
     b, h, p = pl.program_id(0), pl.program_id(1), pl.program_id(2)
@@ -150,16 +153,23 @@ def _paged_attn_kernel(
 
     @pl.when(p == pl.num_programs(2) - 1)
     def _flush():
-        # dead lanes (l == 0) flush exact zeros, not NaNs
-        o_ref[0, 0] = (
-            acc_scr[...] / jnp.maximum(l_scr[:, :1], 1e-30)
-        ).astype(o_ref.dtype)
+        if emit_stats:
+            # raw flash stats: the shard_map wrapper renormalizes across
+            # shards (pmax the maxima, psum the corrected l and acc)
+            o_ref[0, 0] = acc_scr[...].astype(o_ref.dtype)
+            m_ref[0, 0] = m_scr[...].astype(m_ref.dtype)
+            l_ref[0, 0] = l_scr[...].astype(l_ref.dtype)
+        else:
+            # dead lanes (l == 0) flush exact zeros, not NaNs
+            o_ref[0, 0] = (
+                acc_scr[...] / jnp.maximum(l_scr[:, :1], 1e-30)
+            ).astype(o_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "scale", "window", "win_slots", "v_is_k", "interpret",
+        "scale", "window", "win_slots", "v_is_k", "interpret", "emit_stats",
     ),
 )
 def paged_attn_pallas(
@@ -176,6 +186,7 @@ def paged_attn_pallas(
     k2_pages: Optional[jnp.ndarray] = None,  # (P, ps, Hkv, D2)
     v_is_k: bool = False,
     interpret: bool = False,
+    emit_stats: bool = False,
 ) -> jnp.ndarray:
     """Fused paged decode attention; returns ``(B, Hkv, G, Dv)``.
 
@@ -183,6 +194,12 @@ def paged_attn_pallas(
     are addressed through the scalar-prefetched table so only mapped pages
     move HBM→VMEM (consecutive sentinel slots clamp to the same resident
     page and re-use the previous DMA).
+
+    With ``emit_stats=True`` the normalization is skipped and the raw
+    flash triple ``(acc, m, l)`` comes back in f32 — ``acc`` is the
+    unnormalized ``(B, Hkv, G, Dv)`` accumulator, ``m``/``l`` the running
+    max/denominator ``(B, Hkv, G)``.  The shard_map wrapper combines these
+    across pool shards before dividing (``kernels.sharded.combine_stats``).
     """
     b, hkv, g, d = q.shape
     p_pages, ps = k_pages.shape[0], k_pages.shape[1]
@@ -210,11 +227,27 @@ def paged_attn_pallas(
         in_specs.append(pl.BlockSpec((1, ps, 1, dv), page_index))
         operands.append(v_pages)
 
+    if emit_stats:
+        # m/l leave as 128-wide lane-aligned blocks, sliced outside
+        out_shape = [
+            jax.ShapeDtypeStruct((b, hkv, g, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 128), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 128), jnp.float32),
+        ]
+        out_specs = [
+            pl.BlockSpec((1, 1, g, dv), q_index),
+            pl.BlockSpec((1, 1, g, 128), q_index),
+            pl.BlockSpec((1, 1, g, 128), q_index),
+        ]
+    else:
+        out_shape = jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype)
+        out_specs = pl.BlockSpec((1, 1, g, dv), q_index)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hkv, n_slots),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, g, dv), q_index),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((g, 128), jnp.float32),  # running max
             pltpu.VMEM((g, 128), jnp.float32),  # running denominator
@@ -230,13 +263,18 @@ def paged_attn_pallas(
         sentinel=p_pages,
         has_k2=has_k2,
         v_is_k=v_is_k,
+        emit_stats=emit_stats,
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )(tables.astype(jnp.int32), lengths.astype(jnp.int32), *operands)
+    if emit_stats:
+        acc, mm, ll = out
+        return acc, mm[..., 0], ll[..., 0]
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -244,27 +282,14 @@ def paged_attn_pallas(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(
-    jax.jit, static_argnames=("scale", "window", "win_slots", "v_is_k")
-)
-def paged_attn_xla(
-    q: jnp.ndarray,
-    k_pages: jnp.ndarray,
-    v_pages: Optional[jnp.ndarray],
-    tables: jnp.ndarray,
-    lengths: jnp.ndarray,
-    *,
-    scale: float,
-    window: int = 0,
-    win_slots: int = 0,
-    q2: Optional[jnp.ndarray] = None,
-    k2_pages: Optional[jnp.ndarray] = None,
-    v_is_k: bool = False,
-) -> jnp.ndarray:
-    """Gathered reference: materializes the ``(B, n_slots·ps, ...)`` view
-    (exactly what the kernel exists to avoid) and applies the same
-    per-position masks.  Parity oracle + off-TPU fallback for callers that
-    already hold kernel-layout operands."""
+def _gathered_stats(
+    q, k_pages, v_pages, tables, lengths, *,
+    scale, window, win_slots, q2, k2_pages, v_is_k,
+):
+    """Gathered masking math in unnormalized-stats form: ``(acc, m, l)``
+    f32 with ``acc = (B, Hkv, G, Dv)``, ``m``/``l`` ``(B, Hkv, G)``.
+    Shared by the normalized oracle and the stats entry the shard_map
+    wrapper's XLA inner route uses."""
     b, hkv, g, d = q.shape
     p_pages, ps = k_pages.shape[0], k_pages.shape[1]
     n_slots = tables.shape[1]
@@ -296,12 +321,66 @@ def paged_attn_xla(
             "bhgd,bsphd->bhgsp", q2.astype(jnp.float32), k2g.astype(jnp.float32)
         )
     s = jnp.where(valid[:, None, None], s * scale, _NEG)
-    m = jnp.max(s, axis=(-2, -1), keepdims=True)
-    pexp = jnp.exp(s - m) * valid[:, None, None]
-    denom = jnp.maximum(jnp.sum(pexp, axis=(-2, -1), keepdims=True), 1e-30)
+    m = jnp.max(s, axis=(-2, -1))  # (B, Hkv, G); _NEG on dead lanes
+    pexp = jnp.exp(s - m[..., None, None]) * valid[:, None, None]
+    l = jnp.sum(pexp, axis=(-2, -1))
     vg = kg if v_is_k else v_pages[phys]
-    out = jnp.einsum("bhgsp,bsphd->bhgd", pexp / denom, vg.astype(jnp.float32))
+    acc = jnp.einsum("bhgsp,bsphd->bhgd", pexp, vg.astype(jnp.float32))
+    return acc, m, l
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "win_slots", "v_is_k")
+)
+def paged_attn_xla(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: Optional[jnp.ndarray],
+    tables: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    scale: float,
+    window: int = 0,
+    win_slots: int = 0,
+    q2: Optional[jnp.ndarray] = None,
+    k2_pages: Optional[jnp.ndarray] = None,
+    v_is_k: bool = False,
+) -> jnp.ndarray:
+    """Gathered reference: materializes the ``(B, n_slots·ps, ...)`` view
+    (exactly what the kernel exists to avoid) and applies the same
+    per-position masks.  Parity oracle + off-TPU fallback for callers that
+    already hold kernel-layout operands."""
+    acc, m, l = _gathered_stats(
+        q, k_pages, v_pages, tables, lengths, scale=scale, window=window,
+        win_slots=win_slots, q2=q2, k2_pages=k2_pages, v_is_k=v_is_k,
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "win_slots", "v_is_k")
+)
+def paged_attn_stats_xla(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: Optional[jnp.ndarray],
+    tables: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    scale: float,
+    window: int = 0,
+    win_slots: int = 0,
+    q2: Optional[jnp.ndarray] = None,
+    k2_pages: Optional[jnp.ndarray] = None,
+    v_is_k: bool = False,
+):
+    """Stats-form gathered path: same math as :func:`paged_attn_xla` with
+    the final divide left to the caller (the shard_map combine)."""
+    return _gathered_stats(
+        q, k_pages, v_pages, tables, lengths, scale=scale, window=window,
+        win_slots=win_slots, q2=q2, k2_pages=k2_pages, v_is_k=v_is_k,
+    )
 
 
 dispatch.register(
@@ -311,3 +390,15 @@ dispatch.register(
     "paged_attn", "interpret", functools.partial(paged_attn_pallas, interpret=True)
 )
 dispatch.register("paged_attn", "xla", paged_attn_xla)
+
+# stats-emitting variant: the per-shard inner kernel of the shard_map route
+# (kernels.sharded).  Same grid walk; normalization deferred to the combine.
+dispatch.register(
+    "paged_attn_stats", "pallas",
+    functools.partial(paged_attn_pallas, interpret=False, emit_stats=True),
+)
+dispatch.register(
+    "paged_attn_stats", "interpret",
+    functools.partial(paged_attn_pallas, interpret=True, emit_stats=True),
+)
+dispatch.register("paged_attn_stats", "xla", paged_attn_stats_xla)

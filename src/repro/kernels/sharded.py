@@ -1,0 +1,198 @@
+"""Per-shard kernel wrappers: the ``"shard_map"`` dispatch route.
+
+A raw Pallas body is opaque to GSPMD: before this module, any ``shards > 1``
+call (mesh-native engine, pool or reduction axis model-sharded) was forced
+onto the XLA implementation and the compiled fast path was exactly the one
+lost at scale.  These wrappers run the *same* kernels per shard under
+``jax.experimental.shard_map`` and combine partial results with the tiny
+psums GSPMD already derives for the gathered/sharded XLA paths:
+
+- ``paged_attn_shard_map`` — the KV pool's *pages* axis is model-sharded
+  (``serving_cache_pspecs``: ``P(MODEL_AXIS, ...)``), page tables and
+  queries are replicated.  Each shard rewrites the replicated table to
+  shard-local page ids (:func:`shard_local_tables`: pages resident on this
+  shard keep ``phys - shard·per`` and everything else becomes the *local*
+  sentinel ``per``, which is precisely the inner kernel's unmapped-slot
+  convention ``sentinel = pool_size``), runs the stats-emitting kernel over
+  its pool slice, and the flash ``(acc, m, l)`` triples renormalize across
+  shards in :func:`combine_stats` — one pmax and two psums over
+  ``(B, Hkv, G[, Dv])``-sized tensors, bytes-trivial next to the pool.
+
+- ``nm_spmm_shard_map`` — compressed leaves are reduction-TP'd
+  (``compressed_pspecs``: the group axis splits over the model axis, and
+  whole N:M groups never straddle shards because eligibility requires
+  ``dense_in % (m · axis_size) == 0``).  ``x`` splits on K, each shard
+  multiplies its group rows, and partial outputs psum-reduce in f32.
+
+The *inner* per-shard route resolves through the same dispatch registry at
+trace time, so ``force_mode("interpret")`` / ``REPRO_KERNEL_MODE`` sweeps
+exercise the kernel body under the wrapper for free, and on TPU the inner
+route is the compiled Pallas kernel.
+
+Windowed/modular table math is safe under remapping: which slot holds
+which *logical* page depends only on the slot index and the lane length,
+never on the physical page id the slot stores — so rewriting physical ids
+to shard-local ones (or the sentinel) preserves the live-window masks.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import MODEL_AXIS
+from repro.kernels import dispatch
+
+
+def shard_local_tables(tables, shard, pages_per_shard):
+    """Rewrite a replicated page table to one shard's local view.
+
+    ``tables`` holds global physical page ids (sentinel = global pool
+    size).  Returns ``(local_tables, resident)``: entries whose page lives
+    on ``shard`` (``shard·per <= phys < (shard+1)·per``) become
+    ``phys - shard·per``; every other entry — other shards' pages *and*
+    the global sentinel — becomes the local sentinel ``pages_per_shard``,
+    exactly the unmapped-slot convention of the inner kernel (whose
+    sentinel is its own pool size).  ``resident`` is the boolean mask of
+    entries that survived.  A lane with zero resident pages on a shard
+    yields an all-sentinel row; the inner kernel emits dead-lane stats
+    (``m = -1e30, l = 0, acc = 0``) which contribute nothing to the
+    cross-shard combine.
+    """
+    lo = shard * pages_per_shard
+    local = tables - lo
+    resident = (local >= 0) & (local < pages_per_shard)
+    return jnp.where(resident, local, pages_per_shard).astype(tables.dtype), resident
+
+
+def combine_stats(acc, m, l, axis_name):
+    """Renormalize per-shard flash stats into the global softmax output.
+
+    Standard flash-attention combine over a named mesh axis: global max by
+    pmax, correction factors ``exp(m - m_g)`` rescale each shard's
+    denominator and accumulator, then two psums and one divide.  Dead
+    shards (``m = -1e30, l = 0``) contribute exact zeros; a lane dead on
+    *every* shard keeps ``l_g = 0`` and flushes zeros through the clamp,
+    matching the single-shard kernel's dead-lane behavior.
+    """
+    m_g = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * corr, axis_name)
+    acc_g = jax.lax.psum(acc * corr[..., None], axis_name)
+    return acc_g / jnp.maximum(l_g, 1e-30)[..., None]
+
+
+def paged_attn_shard_map(
+    q: jnp.ndarray,  # (B, Hkv, G, D), replicated
+    k_pages: jnp.ndarray,  # (P, ps, Hkv, D), pages axis model-sharded
+    v_pages: Optional[jnp.ndarray],  # (P, ps, Hkv, Dv) or None when v_is_k
+    tables: jnp.ndarray,  # (B, n_slots) int32, replicated
+    lengths: jnp.ndarray,  # (B,) int32, replicated
+    *,
+    scale: float,
+    window: int = 0,
+    win_slots: int = 0,
+    q2: Optional[jnp.ndarray] = None,
+    k2_pages: Optional[jnp.ndarray] = None,
+    v_is_k: bool = False,
+    mesh=None,
+    inner_mode: Optional[str] = None,
+) -> jnp.ndarray:
+    """Paged decode attention with the pool's pages axis model-sharded.
+
+    The dispatch shard guard already checked ``num_pages % shards == 0``.
+    Queries/tables/lengths stay replicated (batch is small and may not
+    divide the data axis; GSPMD reshards the tiny activations around the
+    wrapper for free) — the point is that the *pool* never moves.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    shards = int(sizes.get(MODEL_AXIS, 1))
+    per = k_pages.shape[0] // shards
+    has_k2 = q2 is not None
+
+    operands = [q, tables, lengths, k_pages]
+    specs = [P(), P(), P(), P(MODEL_AXIS)]
+    if has_k2:
+        operands += [q2, k2_pages]
+        specs += [P(), P(MODEL_AXIS)]
+    if not v_is_k:
+        operands.append(v_pages)
+        specs.append(P(MODEL_AXIS))
+
+    def body(q_, tables_, lengths_, k_local, *rest):
+        it = iter(rest)
+        q2_ = next(it) if has_k2 else None
+        k2_ = next(it) if has_k2 else None
+        v_ = None if v_is_k else next(it)
+        shard = jax.lax.axis_index(MODEL_AXIS)
+        local, _ = shard_local_tables(tables_, shard, per)
+        _, fn = dispatch.resolve(
+            "paged_attn_stats", inner_mode, b=q_.shape[0],
+            n_slots=tables_.shape[1], page_size=k_local.shape[1],
+            num_pages=per, shards=1,
+        )
+        acc, m, l = fn(
+            q_, k_local, v_, local, lengths_, scale=scale, window=window,
+            win_slots=win_slots, q2=q2_, k2_pages=k2_, v_is_k=v_is_k,
+        )
+        return combine_stats(acc, m, l, MODEL_AXIS).astype(q_.dtype)
+
+    return shard_map(
+        body, mesh, in_specs=tuple(specs), out_specs=P(), check_rep=False
+    )(*operands)
+
+
+def nm_spmm_shard_map(
+    x: jnp.ndarray,  # (B, K)
+    values: jnp.ndarray,  # (K·n/m, O)
+    indices: jnp.ndarray,  # (K·n/m, O) uint8
+    n: int,
+    m: int,
+    o_true: Optional[int] = None,
+    *,
+    mesh=None,
+    inner_mode: Optional[str] = None,
+) -> jnp.ndarray:
+    """Compressed N:M matmul with the group (reduction) axis model-sharded.
+
+    The dispatch shard guard already checked ``k % (m · shards) == 0``, so
+    every shard holds whole groups and the same K-slice of ``x`` its
+    values rows contract against.  Partial outputs psum in f32 — the same
+    reduce-scatter-free combine GSPMD derives for the sharded XLA einsum.
+    """
+
+    def body(x_, values_, indices_):
+        _, fn = dispatch.resolve(
+            "nm_spmm", inner_mode, b=x_.shape[0], k=x_.shape[-1],
+            o=values_.shape[-1], n=n, m=m, shards=1,
+        )
+        y = fn(x_, values_, indices_, n, m, o_true=o_true).astype(jnp.float32)
+        return jax.lax.psum(y, MODEL_AXIS).astype(x_.dtype)
+
+    return shard_map(
+        body, mesh,
+        in_specs=(P(None, MODEL_AXIS), P(MODEL_AXIS, None), P(MODEL_AXIS, None)),
+        out_specs=P(),
+        check_rep=False,
+    )(x, values, indices)
+
+
+dispatch.register("paged_attn", "shard_map", paged_attn_shard_map)
+dispatch.register("nm_spmm", "shard_map", nm_spmm_shard_map)
+
+# Divisibility guards: the wrappers' in_specs split operand dims exactly.
+# Call sites that predate the route (no num_pages in their shape info)
+# fail the paged-attn guard and keep the XLA backstop.
+dispatch.register_shard_guard(
+    "paged_attn",
+    lambda **kw: kw.get("num_pages", 0) > 0
+    and kw["num_pages"] % kw.get("shards", 1) == 0,
+)
+dispatch.register_shard_guard(
+    "nm_spmm",
+    lambda **kw: kw.get("k", 0) > 0
+    and kw["k"] % (kw["m"] * kw.get("shards", 1)) == 0,
+)

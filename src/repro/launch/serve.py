@@ -189,7 +189,17 @@ def main(argv=None) -> dict:
         "kv_cache_bytes": st["kv_cache_bytes"],
         "hbm_weight_ratio": round(rep["ratio"], 3),
         "mesh": engine.mesh_desc(),
+        # which paged-attention implementation decode resolved at trace
+        # time ("slab" when no paged kernel is in play) — serve_bench's
+        # sharded sweep compares xla vs shard_map streams on this field
+        "kernel_route": engine.kernel_route(),
     }
+    if args.temperature == 0.0:
+        # greedy streams are deterministic: recorded so route/mesh A/B
+        # runs can assert token-level parity from the summaries alone
+        summary["greedy_streams"] = [
+            [int(t) for t in results[u].tokens] for u in sorted(results)
+        ]
     if mesh is not None:
         sh = engine.sharding_report(include_hlo=True)
         summary["weight_bytes_per_shard"] = sh["weight_bytes_per_shard"]
@@ -199,6 +209,19 @@ def main(argv=None) -> dict:
         # matmul weights only: per-feature vectors replicate by design and
         # would make this column constant nonzero noise
         summary["replicated_weight_leaves"] = sh["replicated_matmul_leaves"]
+        # per-shard decode roofline: every shard streams its weight slice
+        # each step, and the pages/sequence axis splits the live-KV read
+        # over the model axis
+        sizes = dict(zip(summary["mesh"]["axes"], summary["mesh"]["shape"]))
+        model_shards = int(sizes.get("model", 1))
+        summary["model_shards"] = model_shards
+        summary["weight_bytes_per_step_per_shard"] = sh["weight_bytes_per_shard"]
+        summary["kv_bytes_per_step_per_shard"] = (
+            st["kv_bytes_per_step"] / model_shards
+        )
+        summary["bytes_read_per_step_per_shard"] = (
+            sh["weight_bytes_per_shard"] + st["kv_bytes_per_step"] / model_shards
+        )
     print(json.dumps({"summary": summary}))
     return summary
 

@@ -245,9 +245,10 @@ class PagedLayout:
     lookahead: int = 1  # decode steps one dispatch may take (pages pre-mapped)
     # number of mesh shards the physical pool is partitioned across (the
     # model-axis size of a mesh-native engine).  >1 routes paged attention
-    # to the GSPMD-partitionable gathered path — the Pallas kernel walks
-    # global page addresses and stays the single-shard inner kernel until
-    # it grows a shard_map wrapper (see kernels.dispatch).
+    # to the shard_map wrapper when one is registered and the pool splits
+    # evenly (kernels.sharded: per-shard table remap + Pallas grid walk +
+    # psum'd flash-stat combine); the GSPMD-partitionable gathered path
+    # remains the correctness backstop (see kernels.dispatch).
     shards: int = 1
 
     kind = "paged"

@@ -59,12 +59,14 @@ def _compressed_matmul(x: jnp.ndarray, w: CompressedTensor) -> jnp.ndarray:
     if v.ndim == 2:
         lead = x.shape[:-1]
         y = kernel_ops.nm_spmm(
-            x.reshape(-1, x.shape[-1]), v, idx, w.n, w.m, o_true=o_true
+            x.reshape(-1, x.shape[-1]), v, idx, w.n, w.m, o_true=o_true,
+            shards=w.rshards,
         )
         return y.reshape(lead + (o_true,))
     if v.ndim == 3 and x.ndim == 3:
         # stacked weights (experts (E, in, out) / scan blocks): map the
-        # 2-D kernel over the leading axis
+        # 2-D kernel over the leading axis.  shards stays 1 — vmap of a
+        # shard_map body is unsupported, so EP stacks keep the GSPMD path
         return jax.vmap(
             lambda xe, ve, ie: kernel_ops.nm_spmm(
                 xe, ve, ie, w.n, w.m, o_true=o_true

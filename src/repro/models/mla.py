@@ -194,7 +194,8 @@ def mla_decode(
 
     if isinstance(layout, PagedLayout) and dispatch.uses_kernel(
         "paged_attn", b=b, n_slots=tables["full"].shape[1],
-        page_size=layout.page_size, shards=layout.shards,
+        page_size=layout.page_size, num_pages=layout.num_pages,
+        shards=layout.shards,
     ):
         # fast path: attend *in latent space* through the page table.
         # W_ukv is absorbed into the query / output projections
@@ -218,6 +219,7 @@ def mla_decode(
             q2=q_rope[:, 0].astype(jnp.float32)[:, None],
             k2_pages=new_cache["krope"][:, :, None, :],
             v_is_k=True,
+            shards=layout.shards,
         )  # (B, 1, H, kv_lora)
         out = jnp.einsum(
             "bhl,lhv->bhv", o_lat[:, 0], wv.astype(jnp.float32)

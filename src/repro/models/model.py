@@ -717,7 +717,8 @@ def _attn_decode(x, p, cfg: ArchConfig, c: dict, pos, layout, tables):
 
     if isinstance(layout, C.PagedLayout) and dispatch.uses_kernel(
         "paged_attn", b=b, n_slots=tables[layout.table_key(cfg.local_window)].shape[1],
-        page_size=layout.page_size, shards=layout.shards,
+        page_size=layout.page_size, num_pages=layout.num_pages,
+        shards=layout.shards,
     ):
         # fast path: scatter the new token into its page, then attend
         # through the page table directly — no contiguous (B, S, ...) K/V
@@ -732,6 +733,7 @@ def _attn_decode(x, p, cfg: ArchConfig, c: dict, pos, layout, tables):
             tables[layout.table_key(cfg.local_window)], pos + 1,
             scale=hd ** -0.5, window=win,
             win_slots=layout.pages_win if win else 0,
+            shards=layout.shards,
         )
         out = out.reshape(b, 1, h, hd)
     else:

@@ -102,12 +102,18 @@ partitions the whole serving path instead of replicating it.
   sequence axis; the paged pool splits its *pages* axis, so each shard
   physically owns a slice of the pool while the (replicated) page tables
   resolve logical→physical addresses locally on every shard.  Decode
-  attention computes per-shard partial flash stats and GSPMD combines the
-  softmax via tiny psums — only ``(B, H)``-sized stats cross the
-  interconnect, never cache pages.  The Pallas paged-attention kernel
-  stays the per-shard inner kernel: ``kernels.dispatch`` routes sharded
-  pools (``PagedLayout.shards > 1``) to the partitionable XLA path until
-  the kernel grows a shard_map wrapper.
+  attention computes per-shard partial flash stats and the softmax
+  combines via tiny psums — only ``(B, H)``-sized stats cross the
+  interconnect, never cache pages.  The engine installs a
+  ``kernels.dispatch.mesh_context`` around every executable call, so
+  sharded pools (``PagedLayout.shards > 1``) route to the shard_map
+  wrapper (``kernels.sharded``: per-shard table remap + the Pallas grid
+  walk + an explicit flash-stat combine) whenever the inner route is a
+  kernel body; the GSPMD-partitioned XLA gathered path remains the
+  correctness backstop and the off-TPU default.  Reduction-TP'd
+  compressed leaves are stamped with their shard count
+  (``annotate_reduction_tp``) so ``nm_spmm`` takes the per-shard route
+  the same way.  :meth:`kernel_route` reports the resolved route.
 - **Degenerate 1×1 meshes are bit-identical** to the mesh-less engine:
   every sharding becomes trivial and the executables lower to the exact
   single-device programs, so ``mesh=None`` and a one-device mesh (and, in
@@ -297,6 +303,7 @@ class DecodeEngine:
         self._shardings: Optional[dict] = None
         if mesh is not None:
             from repro.distributed.compressed_pspecs import (
+                annotate_reduction_tp,
                 check_kv_shard,
                 lane_sharding,
                 replicated,
@@ -305,6 +312,11 @@ class DecodeEngine:
             )
 
             check_kv_shard(mesh, kv_shard)
+            # stamp reduction-TP'd compressed leaves with their model-axis
+            # shard count BEFORE deriving shardings: rshards lives in the
+            # pytree aux, so the spec tree must be built from the annotated
+            # tree to match leaf-for-leaf under device_put / in_shardings
+            params = annotate_reduction_tp(params, mesh, cfg=model.cfg)
             self._shardings = {
                 "params": serving_param_shardings(mesh, params, cfg=model.cfg),
                 # a mesh-native pool already derived (and applied) the
@@ -636,7 +648,7 @@ class DecodeEngine:
             dt = self.pool.device_tables()
             if dt:  # ssm-only paged archs have no table'd layers
                 self.cache["tables"] = dt
-        with _quiet_donation():
+        with self._kernel_ctx(), _quiet_donation():
             first, self.cache = self._prefill(
                 self.params, jnp.asarray(tokens), jnp.asarray(lens),
                 jnp.asarray(lanes), self.cache, jnp.asarray(temps),
@@ -686,7 +698,7 @@ class DecodeEngine:
             dt = self.pool.device_tables()
             if dt:  # ssm-only paged archs have no table'd layers
                 self.cache["tables"] = dt
-        with _quiet_donation():
+        with self._kernel_ctx(), _quiet_donation():
             logits, self.cache = self._chunk(
                 self.params, jnp.asarray(toks), self.cache,
                 jnp.asarray(lanes), jnp.asarray(starts), jnp.asarray(lengths),
@@ -852,11 +864,11 @@ class DecodeEngine:
                     jnp.copy, (args[1], args[2])
                 )
                 wargs = (args[0], tok_c, cache_c) + args[3:]
-            with _quiet_donation():
+            with self._kernel_ctx(), _quiet_donation():
                 jax.block_until_ready(self._decode(*wargs, *sig))
             self._warmed.add(sig)
         t0 = time.perf_counter()
-        with _quiet_donation():
+        with self._kernel_ctx(), _quiet_donation():
             block, tok, self.cache, self.key = self._decode(*args, *sig)
             tok.block_until_ready()
         t1 = time.perf_counter()
@@ -985,6 +997,40 @@ class DecodeEngine:
                 total += entry_bytes(self.cache[f"tail_{i}"])
         return total
 
+    def _kernel_ctx(self):
+        """Dispatch mesh context for executable calls.  ``jax.jit``
+        (re)traces lazily per signature, so the context must wrap *every*
+        call, not just the first: any trace happening inside may route
+        ``shards > 1`` kernel calls to the shard_map wrappers
+        (``kernels.dispatch.mesh_context``).  A mesh-less engine gets a
+        no-op context."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.kernels import dispatch
+
+        return dispatch.mesh_context(self.mesh)
+
+    def kernel_route(self) -> str:
+        """The paged-attention route decode resolves at trace time —
+        ``"shard_map"`` / ``"xla"`` / ``"pallas"`` / ``"interpret"`` for
+        paged engines, ``"slab"`` when no paged kernel is in play.
+        Mirrors the in-trace resolution (same mesh context + shape info)
+        so benches can record which implementation a measured stream ran
+        on without re-lowering the executable."""
+        if self.pool is None:
+            return "slab"
+        from repro.kernels import dispatch
+
+        lay = self.layout
+        n_slots = lay.pages_full if lay.pages_full else lay.pages_win
+        with self._kernel_ctx():
+            mode, _ = dispatch.resolve(
+                "paged_attn", b=self.max_batch, n_slots=n_slots,
+                page_size=lay.page_size, num_pages=lay.num_pages,
+                shards=lay.shards,
+            )
+        return mode
+
     def mesh_desc(self) -> Optional[dict]:
         """{"shape": [...], "axes": [...]} for the engine's mesh (None =
         single-device) — the schema serve_bench records under ``mesh``."""
@@ -1066,11 +1112,13 @@ class DecodeEngine:
 
             consts = self._slot_consts()
             budget = jnp.zeros((self.max_batch,), jnp.int32)
-            lowered = self._decode.lower(
-                self.params, self.tokens, self.cache, consts["temps"],
-                consts["topks"], consts["active"], consts["keep"], self.key,
-                consts["eos"], budget, self.steps_per_dispatch, False, False,
-            )
+            with self._kernel_ctx():
+                lowered = self._decode.lower(
+                    self.params, self.tokens, self.cache, consts["temps"],
+                    consts["topks"], consts["active"], consts["keep"],
+                    self.key, consts["eos"], budget,
+                    self.steps_per_dispatch, False, False,
+                )
             compiled = lowered.compile()
             walk = HC.analyze(compiled.as_text())
             report["decode_collective_bytes"] = walk["collective_bytes"]

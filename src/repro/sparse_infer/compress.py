@@ -36,14 +36,20 @@ class CompressedTensor:
     """An N:M-compressed weight: kept values + uint8 in-group offsets.
 
     Pytree children: ``(values, indices)``. Static aux: ``(n, m, group_axis,
-    shape, pad)`` — ``shape`` records the dense shape at construction time
-    (for reporting; transformations like ``lax.scan`` that slice the
-    children leave it untouched, so derive live shapes from ``values`` when
-    needed).  ``pad`` is the number of MXU-alignment columns appended to
-    the *last* axis at compress time (see :func:`compress_params`): the
-    kernels slice it off their result, so it never leaks into the math, and
-    because it is stored in the static aux it survives ``lax.scan`` /
-    ``vmap`` slicing of stacked layer blocks where ``shape`` goes stale.
+    shape, pad, rshards)`` — ``shape`` records the dense shape at
+    construction time (for reporting; transformations like ``lax.scan``
+    that slice the children leave it untouched, so derive live shapes from
+    ``values`` when needed).  ``pad`` is the number of MXU-alignment
+    columns appended to the *last* axis at compress time (see
+    :func:`compress_params`): the kernels slice it off their result, so it
+    never leaks into the math, and because it is stored in the static aux
+    it survives ``lax.scan`` / ``vmap`` slicing of stacked layer blocks
+    where ``shape`` goes stale.  ``rshards`` is the number of model-axis
+    mesh shards partitioning the group (reduction) axis when the leaf is
+    reduction-TP'd — 1 everywhere except trees stamped by
+    ``distributed.compressed_pspecs.annotate_reduction_tp``; the matmul
+    dispatch forwards it so the kernel registry can pick the per-shard
+    shard_map route (``kernels.sharded``).
     """
 
     values: jnp.ndarray
@@ -53,10 +59,12 @@ class CompressedTensor:
     group_axis: int
     shape: tuple  # dense shape at construction
     pad: int = 0  # alignment columns on the last axis of values/indices
+    rshards: int = 1  # model-axis shards on the group (reduction) axis
 
     def tree_flatten(self):
         return (self.values, self.indices), (
             self.n, self.m, self.group_axis, self.shape, self.pad,
+            self.rshards,
         )
 
     @classmethod
