@@ -46,13 +46,23 @@ paged fast path's read set).
    mix (counts + bytes by kind), so the sharding overhead is measurable
    next to the single-device rows.
 
+5. **prefix caching + int8 KV pages** (compressed, paged): (a) requests
+   sharing a long prompt head served with ``prefix_cache=True`` — TTFT of
+   a radix-index *hit* (only the uncached tail prefills) vs a *cold*
+   admission of the same prompt, with the hit rate recorded next to the
+   ratio; (b) the same oversubscribed request load on a default-dtype
+   pool vs an int8 pool given the **same KV HBM byte budget** (more pages
+   at equal bytes) — admitted concurrency is the column int8 exists to
+   grow.
+
 Every row is also appended to a machine-readable ``BENCH_serve.json``
 (list of record dicts) so the perf trajectory accumulates across runs.
 **Schema note**: every record carries a ``mesh`` field —
 ``{"shape": [...], "axes": [...]}`` of the serving mesh, with
 ``{"shape": [1], "axes": []}`` meaning a single-device engine — so
 sharded and single-device sweeps stay comparable; a one-time
-``sweep == "schema"`` record in the JSON documents this.
+``sweep == "schema"`` record in the JSON documents this (upserted in
+place when its text changes — never duplicated, never stale).
 
     PYTHONPATH=src python -m benchmarks.run --only serve
 """
@@ -90,9 +100,35 @@ SCHEMA_NOTE = {
         "compiled decode executable; from the per-shard kernel PR onward "
         "they also carry kernel_route (xla | shard_map), per-shard "
         "roofline bytes (*_per_step_per_shard), and "
-        "greedy_parity_across_routes on the (2,4) rows."
+        "greedy_parity_across_routes on the (2,4) rows. from the "
+        "prefix-cache PR onward, prefix_cache rows carry ttft_cold_ms / "
+        "ttft_hit_ms / prefix_hit_rate, and kv_int8 rows compare admitted "
+        "concurrency on a default-dtype vs int8 pool at the same KV HBM "
+        "byte budget (kv_cache_bytes / num_pages per variant)."
     ),
 }
+
+
+def _upsert_schema_note(path: str) -> None:
+    """Keep exactly one ``sweep == "schema"`` record, current text.
+
+    Append-only handling left a stale note behind whenever the schema
+    grew: this rewrites the note *in place* when its text changed, drops
+    accidental duplicates, and prepends it when missing — idempotent, so
+    every bench run can call it unconditionally."""
+    existing: list[dict] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            existing = []
+    notes = [r for r in existing if r.get("sweep") == "schema"]
+    if len(notes) == 1 and notes[0].get("note") == SCHEMA_NOTE["note"]:
+        return
+    rest = [r for r in existing if r.get("sweep") != "schema"]
+    with open(path, "w") as f:
+        json.dump([SCHEMA_NOTE] + rest, f, indent=1)
 
 
 def _serving_trees(arch: str, nm):
@@ -252,6 +288,188 @@ def _sharded_sweep(
                 rec["greedy_parity_across_routes"] = a is not None and a == b
     elif streams:  # one of the (2,4) runs failed outright
         failures.append(f"expected 2 routes on the 2,4 mesh, got {sorted(got)}")
+    return records, failures
+
+
+def _ttft_ms(engine, prompt, gen: int) -> float:
+    """Wall ms from submit to the request's first sampled token (the
+    engine is stepped to completion so it is clean for the next probe)."""
+    import time
+
+    sp = SamplingParams(max_new_tokens=gen)
+    t0 = time.perf_counter()
+    uid = engine.submit(prompt, sp)
+    ttft = None
+    while engine.queue or any(s is not None for s in engine.slots):
+        done = engine.step()
+        if ttft is None and (
+            any(r.uid == uid for r in done)
+            or any(
+                s is not None and s.uid == uid and s.generated
+                for s in engine.slots
+            )
+        ):
+            ttft = time.perf_counter() - t0
+    return (ttft if ttft is not None else time.perf_counter() - t0) * 1e3
+
+
+def _prefix_int8_sweep(
+    model, comp, cfg, arch: str, nm, gen: int
+) -> tuple[list[dict], list[str]]:
+    """Sweep 5: (a) TTFT of a prefix-index hit vs a cold admission of the
+    same prompt; (b) admitted concurrency on a default-dtype vs an int8
+    pool holding the *same KV HBM bytes*.  Returns (records, failures);
+    failures assert only after the records persist."""
+    n, m = nm
+    records: list[dict] = []
+    failures: list[str] = []
+
+    # (a) TTFT: one shared 120-token head + per-request 8-token tails.  A
+    # hit maps the head's pages from the radix index and prefills only the
+    # tail; cold prefills everything.  Both routes are compiled untimed
+    # first, and each timing is the best of 3 probes.  Every cold probe
+    # clears the index first — a cold admission *inserts* its pages, so
+    # without the clear the later "cold" probes would silently hit.
+    ps, head_len, tail_len, pgen = 8, 120, 8, 4
+    plen = head_len + tail_len
+    head = [
+        int(t) for t in jax.random.randint(
+            jax.random.PRNGKey(7000), (head_len,), 0, cfg.vocab
+        )
+    ]
+
+    def tailed(seed: int) -> list[int]:
+        return head + [
+            int(t) for t in jax.random.randint(
+                jax.random.PRNGKey(seed), (tail_len,), 0, cfg.vocab
+            )
+        ]
+
+    engine = DecodeEngine(
+        model, comp, max_batch=1, max_len=plen + pgen + 1,
+        num_pages=4 * ((plen + pgen) // ps + 2), page_size=ps,
+        prefix_cache=True,
+    )
+    _ttft_ms(engine, tailed(7001), pgen)  # cold warmup (compiles prefill)
+    _ttft_ms(engine, tailed(7002), pgen)  # hit warmup (compiles chunk path)
+    hits0 = engine.prefix_hits
+    cold = []
+    for i in range(3):
+        engine._prefix.clear()
+        cold.append(_ttft_ms(engine, tailed(7003 + i), pgen))
+    ttft_cold = min(cold)
+    engine._prefix.clear()
+    _ttft_ms(engine, tailed(7010), pgen)  # re-seed the index, untimed
+    ttft_hit = min(_ttft_ms(engine, tailed(7011 + i), pgen) for i in range(3))
+    timed_hits = engine.prefix_hits - hits0  # 3 of the 6 timed probes hit
+    hit_rate = timed_hits / 6.0
+    st = engine.stats()
+    emit(
+        f"serve/{arch}/{n}:{m}/prefix_cache/ttft",
+        ttft_hit * 1e3,
+        f"cold_ms={ttft_cold:.2f} hit_ms={ttft_hit:.2f} "
+        f"hit_rate={hit_rate:.2f} hit_tokens={st['prefix_hit_tokens']} "
+        f"cow={st['cow_copies']}",
+    )
+    records.append(
+        {
+            "suite": "serve",
+            "sweep": "prefix_cache",
+            "mesh": MESH_SINGLE,
+            "arch": arch,
+            "nm": f"{n}:{m}",
+            "mode": "compressed",
+            "layout": "paged",
+            "prompt_len": plen,
+            "shared_prefix_len": head_len,
+            "ttft_cold_ms": ttft_cold,
+            "ttft_hit_ms": ttft_hit,
+            "ttft_speedup": ttft_cold / ttft_hit if ttft_hit else 0.0,
+            "prefix_hit_rate": hit_rate,
+            "prefix_hit_tokens": st["prefix_hit_tokens"],
+            "cow_copies": st["cow_copies"],
+            "shared_pages_peak": st["shared_pages"],
+        }
+    )
+    if hit_rate >= 0.5 and not ttft_hit < ttft_cold:
+        failures.append(
+            f"prefix hit TTFT {ttft_hit:.2f}ms not under cold "
+            f"{ttft_cold:.2f}ms at hit rate {hit_rate:.2f}"
+        )
+
+    # (b) admitted concurrency at equal KV HBM bytes: per-page bytes are
+    # probed from each layout's live pool, then the int8 engine gets
+    # however many pages fit in the default-dtype pool's byte budget.
+    # fp_pages is sized so page-granular rounding of the int8 budget
+    # (q_pages = floor(fp_bytes / int8_bytes_per_page)) cannot eat the
+    # headline gain: at 12 fp pages a lane's 2-page steady state divides
+    # both pools with at most one stranded page.
+    cq_len, cq_gen, cq_ps, fp_pages, lanes = 8, 8, 8, 12, 16
+    cq_max_len = cq_len + cq_gen + 1
+
+    def probe_bpp(quant: bool) -> float:
+        eng = DecodeEngine(
+            model, comp, max_batch=1, max_len=cq_max_len,
+            num_pages=fp_pages, page_size=cq_ps, kv_quant=quant,
+        )
+        return eng.kv_cache_bytes() / fp_pages
+
+    bpp_fp, bpp_q = probe_bpp(False), probe_bpp(True)
+    q_pages = int(fp_pages * bpp_fp // bpp_q)
+    cq_prompts = [
+        [
+            int(t) for t in jax.random.randint(
+                jax.random.PRNGKey(7100 + r), (cq_len,), 0, cfg.vocab
+            )
+        ]
+        for r in range(lanes)
+    ]
+    conc = {}
+    for label, quant, pages in (
+        ("fp", False, fp_pages), ("int8", True, q_pages)
+    ):
+        eng = DecodeEngine(
+            model, comp, max_batch=lanes, max_len=cq_max_len,
+            num_pages=pages, page_size=cq_ps, kv_quant=quant,
+        )
+        st = _drain(eng, cq_prompts, cq_gen)
+        conc[label] = st["max_concurrency"]
+        emit(
+            f"serve/{arch}/{n}:{m}/kv_int8/{label}",
+            st["ms_per_decode_step"] * 1e3,
+            f"pages={pages} kv_bytes={st['kv_cache_bytes']} "
+            f"concurrency={st['max_concurrency']} "
+            f"preempt={st['preemptions']}",
+        )
+        records.append(
+            {
+                "suite": "serve",
+                "sweep": "kv_int8",
+                "mesh": MESH_SINGLE,
+                "arch": arch,
+                "nm": f"{n}:{m}",
+                "mode": "compressed",
+                "layout": "paged",
+                "kv_quant": quant,
+                "num_pages": pages,
+                "bytes_per_page": bpp_q if quant else bpp_fp,
+                "kv_cache_bytes": st["kv_cache_bytes"],
+                "max_concurrency": st["max_concurrency"],
+                "preemptions": st["preemptions"],
+                "tokens_per_s": st["tokens_per_s"],
+                "us_per_decode_step": st["ms_per_decode_step"] * 1e3,
+            }
+        )
+    gain = conc["int8"] / conc["fp"] if conc.get("fp") else 0.0
+    emit(
+        f"serve/{arch}/{n}:{m}/kv_int8/concurrency_gain", 0.0,
+        f"int8={conc.get('int8')} fp={conc.get('fp')} gain={gain:.2f}x",
+    )
+    if gain < 1.8:
+        failures.append(
+            f"int8 concurrency gain {gain:.2f}x < 1.8x at equal KV HBM "
+            f"({conc})"
+        )
     return records, failures
 
 
@@ -446,20 +664,17 @@ def run(
     sharded_records, route_failures = _sharded_sweep(arch, nm, prompt_len, gen)
     records.extend(sharded_records)
 
+    # -- sweep 5: prefix caching + int8 KV pages -------------------------------
+    prefix_records, prefix_failures = _prefix_int8_sweep(
+        model, comp, cfg, arch, nm, gen
+    )
+    records.extend(prefix_records)
+
     if out_json:
-        # one-time schema note: documents the mesh field + per-shard columns
-        have_note = False
-        if os.path.exists(out_json):
-            try:
-                with open(out_json) as f:
-                    have_note = any(
-                        r.get("sweep") == "schema" for r in json.load(f)
-                    )
-            except (json.JSONDecodeError, OSError):
-                pass
-        append_json(
-            out_json, records if have_note else [SCHEMA_NOTE] + records
-        )
+        # schema note: documents the mesh field + per-shard / prefix-cache
+        # columns; upserted so the note tracks the current schema exactly
+        _upsert_schema_note(out_json)
+        append_json(out_json, records)
     # fail *after* persisting: a parity break must not discard the run's
     # records (the greedy_parity_with_k1 / greedy_parity_across_routes
     # fields mark the offending rows)
@@ -468,5 +683,8 @@ def run(
     )
     assert not route_failures, (
         f"xla vs shard_map kernel routes diverged: {route_failures}"
+    )
+    assert not prefix_failures, (
+        f"prefix-cache/int8 sweep regressions: {prefix_failures}"
     )
     return records

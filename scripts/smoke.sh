@@ -38,6 +38,21 @@ REPRO_KERNEL_MODE=xla python -m repro.launch.serve --arch gpt2-paper \
     --batch 2 --requests 3 --prompt-len 20 --gen 8 --paged --page-size 4 \
     --num-pages 32 --steps-per-dispatch 4 --prefill-chunk 8
 
+echo "== serve smoke (prefix cache + int8 pages: shared head must hit) =="
+# batch=1 staggers the two admissions, so the second request's shared
+# 8-token head is already indexed — a zero hit rate means the radix
+# index / COW admission path regressed
+python -m repro.launch.serve --arch gpt2-paper --batch 1 --requests 2 \
+    --prompt-len 12 --gen 4 --paged --page-size 4 --num-pages 32 \
+    --prefix-cache --kv-int8 --shared-prefix 8 \
+  | tail -1 | python -c '
+import json, sys
+s = json.loads(sys.stdin.read())["summary"]
+assert s["prefix_hits"] > 0 and s["prefix_hit_rate"] > 0, s
+assert s["kv_quant"], s
+print("prefix_hit_rate:", s["prefix_hit_rate"])
+'
+
 echo "== serve smoke (mesh-native engine, degenerate 1x1 mesh) =="
 python -m repro.launch.serve --arch gpt2-paper --batch 2 --requests 2 \
     --prompt-len 6 --gen 6 --paged --page-size 4 --num-pages 16 --mesh 1,1

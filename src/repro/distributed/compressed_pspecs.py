@@ -285,7 +285,14 @@ def serving_cache_pspecs(
         stacked = re.search(r"(^|/)body/", name) is not None
         if stacked:
             nd -= 1
-        if parts[-1] in ("k", "v", "ckv", "krope"):
+        if parts[-1].endswith("_scale"):
+            # int8 page scale planes (P, ps): no feature axis, so they
+            # shard with their pool's pages axis or replicate.
+            if kv_shard == "seq":
+                spec = (MODEL_AXIS,) + (None,) * (nd - 1)
+            else:
+                spec = (None,) * nd
+        elif parts[-1] in ("k", "v", "ckv", "krope"):
             if kv_shard == "seq":
                 spec = (MODEL_AXIS,) + (None,) * (nd - 1)  # pages axis
             else:

@@ -266,12 +266,17 @@ def nm_mask(w, n: int, m: int, *, mode: Optional[str] = None):
 def paged_attn(
     q, k_pages, v_pages, tables, lengths, *, scale: float,
     window: int = 0, win_slots: int = 0, q2=None, k2_pages=None,
+    k_scale=None, v_scale=None, k2_scale=None,
     v_is_k: bool = False, shards: int = 1, mode: Optional[str] = None,
 ):
     """Paged decode attention over a ``(P, ps, Hkv, D)`` pool + page table.
 
     See ``kernels.paged_attn`` for the argument contract (GQA and
     MLA-latent layouts, sentinel slots, windowed modular tables).
+    ``k_scale``/``v_scale``/``k2_scale`` are the int8 pool's per-(page,
+    slot) dequantization planes (``PagedLayout.quant``); every route —
+    Pallas, interpret, the XLA gathered twin, and the shard_map stats
+    variant — applies them per page under the same flash math.
 
     ``shards``: how many mesh shards partition the pool's pages axis
     (``PagedLayout.shards``).  With ``shards > 1`` and an active
@@ -291,6 +296,7 @@ def paged_attn(
     kw = dict(
         scale=scale, window=window, win_slots=win_slots, q2=q2,
         k2_pages=k2_pages, v_is_k=v_is_k,
+        k_scale=k_scale, v_scale=v_scale, k2_scale=k2_scale,
     )
     if picked == "shard_map":
         kw["mesh"] = active_mesh()

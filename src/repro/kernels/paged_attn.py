@@ -77,6 +77,7 @@ def _paged_attn_kernel(
     scale: float,
     sentinel: int,
     has_k2: bool,
+    has_scale: bool,
     v_is_k: bool,
     emit_stats: bool,
 ):
@@ -84,8 +85,11 @@ def _paged_attn_kernel(
     q_ref = next(it)
     q2_ref = next(it) if has_k2 else None
     k_ref = next(it)
+    ks_ref = next(it) if has_scale else None
     k2_ref = next(it) if has_k2 else None
+    k2s_ref = next(it) if (has_k2 and has_scale) else None
     v_ref = k_ref if v_is_k else next(it)
+    vs_ref = None if v_is_k else (next(it) if has_scale else None)
     o_ref = next(it)
     m_ref = next(it) if emit_stats else None
     l_ref = next(it) if emit_stats else None
@@ -124,12 +128,18 @@ def _paged_attn_kernel(
     def _page():
         q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)  # (ps, D)
+        if has_scale:
+            # int8 pages: per-(page, slot) scales dequantize in VMEM, so
+            # HBM only ever streams the 1-byte codes
+            k = k * ks_ref[0, :, 0, :]  # (ps, 1) f32
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (G, ps)
         if has_k2:
             q2 = q2_ref[0, 0].astype(jnp.float32)
             k2 = k2_ref[0, :, 0, :].astype(jnp.float32)
+            if has_scale:
+                k2 = k2 * k2s_ref[0, :, 0, :]
             s = s + jax.lax.dot_general(
                 q2, k2, (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32,
@@ -143,7 +153,12 @@ def _paged_attn_kernel(
         pexp = jnp.where(ok, jnp.exp(s - m_new), 0.0)
         corr = jnp.exp(m_prev - m_new)
         l_new = corr * l_scr[:, :1] + jnp.sum(pexp, axis=-1, keepdims=True)
-        v = k if v_is_k else v_ref[0, :, 0, :].astype(jnp.float32)  # (ps, Dv)
+        if v_is_k:
+            v = k  # (ps, Dv) — already dequantized above
+        else:
+            v = v_ref[0, :, 0, :].astype(jnp.float32)  # (ps, Dv)
+            if has_scale:
+                v = v * vs_ref[0, :, 0, :]
         acc_scr[...] = corr * acc_scr[...] + jax.lax.dot_general(
             pexp, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -184,6 +199,9 @@ def paged_attn_pallas(
     win_slots: int = 0,
     q2: Optional[jnp.ndarray] = None,  # (B, Hkv, G, D2)
     k2_pages: Optional[jnp.ndarray] = None,  # (P, ps, Hkv, D2)
+    k_scale: Optional[jnp.ndarray] = None,  # (P, ps) int8-page scales
+    v_scale: Optional[jnp.ndarray] = None,  # (P, ps)
+    k2_scale: Optional[jnp.ndarray] = None,  # (P, ps)
     v_is_k: bool = False,
     interpret: bool = False,
     emit_stats: bool = False,
@@ -195,6 +213,11 @@ def paged_attn_pallas(
     move HBM→VMEM (consecutive sentinel slots clamp to the same resident
     page and re-use the previous DMA).
 
+    int8 pools pass ``k_scale``/``v_scale`` (``k2_scale`` for the RoPE
+    stream; ``v_is_k`` reuses ``k_scale``): per-(page, slot) scales (any
+    fp dtype; upcast to f32) that ride the same table-addressed DMA and
+    dequantize each page in VMEM before the dot — identical flash math, 1-byte HBM traffic.
+
     With ``emit_stats=True`` the normalization is skipped and the raw
     flash triple ``(acc, m, l)`` comes back in f32 — ``acc`` is the
     unnormalized ``(B, Hkv, G, Dv)`` accumulator, ``m``/``l`` the running
@@ -205,6 +228,7 @@ def paged_attn_pallas(
     p_pages, ps = k_pages.shape[0], k_pages.shape[1]
     n_slots = tables.shape[1]
     has_k2 = q2 is not None
+    has_scale = k_scale is not None
     dv = d if v_is_k else v_pages.shape[-1]
 
     def q_index(b_, h_, p_, tables_, lengths_):
@@ -213,6 +237,16 @@ def paged_attn_pallas(
     def page_index(b_, h_, p_, tables_, lengths_):
         return (jnp.minimum(tables_[b_, p_], p_pages - 1), 0, h_, 0)
 
+    def scale_index(b_, h_, p_, tables_, lengths_):
+        # scales have no head axis: (P, ps, 1, 1) blocks pin dims 2/3 to 0
+        return (jnp.minimum(tables_[b_, p_], p_pages - 1), 0, 0, 0)
+
+    def scale_spec():
+        return pl.BlockSpec((1, ps, 1, 1), scale_index)
+
+    def scale_op(s):
+        return s.astype(jnp.float32).reshape(p_pages, ps, 1, 1)
+
     in_specs = [pl.BlockSpec((1, 1, g, d), q_index)]
     operands = [q]
     if has_k2:
@@ -220,12 +254,21 @@ def paged_attn_pallas(
         operands.append(q2)
     in_specs.append(pl.BlockSpec((1, ps, 1, d), page_index))
     operands.append(k_pages)
+    if has_scale:
+        in_specs.append(scale_spec())
+        operands.append(scale_op(k_scale))
     if has_k2:
         in_specs.append(pl.BlockSpec((1, ps, 1, k2_pages.shape[-1]), page_index))
         operands.append(k2_pages)
+        if has_scale:
+            in_specs.append(scale_spec())
+            operands.append(scale_op(k2_scale))
     if not v_is_k:
         in_specs.append(pl.BlockSpec((1, ps, 1, dv), page_index))
         operands.append(v_pages)
+        if has_scale:
+            in_specs.append(scale_spec())
+            operands.append(scale_op(v_scale))
 
     if emit_stats:
         # m/l leave as 128-wide lane-aligned blocks, sliced outside
@@ -262,6 +305,7 @@ def paged_attn_pallas(
         scale=scale,
         sentinel=p_pages,
         has_k2=has_k2,
+        has_scale=has_scale,
         v_is_k=v_is_k,
         emit_stats=emit_stats,
     )
@@ -285,6 +329,7 @@ def paged_attn_pallas(
 def _gathered_stats(
     q, k_pages, v_pages, tables, lengths, *,
     scale, window, win_slots, q2, k2_pages, v_is_k,
+    k_scale=None, v_scale=None, k2_scale=None,
 ):
     """Gathered masking math in unnormalized-stats form: ``(acc, m, l)``
     f32 with ``acc = (B, Hkv, G, Dv)``, ``m``/``l`` ``(B, Hkv, G)``.
@@ -311,21 +356,25 @@ def _gathered_stats(
         & (pg[..., None] >= 0)
     )
     phys = jnp.minimum(tables, p_pages - 1)  # (B, S)
-    kg = k_pages[phys]  # (B, S, ps, Hkv, D) — the gather
-    s = jnp.einsum(
-        "bhgd,bsphd->bhgsp", q.astype(jnp.float32), kg.astype(jnp.float32)
-    )
+
+    def deq(pages, sc):
+        g_ = pages[phys].astype(jnp.float32)  # (B, S, ps, Hkv, D) — the gather
+        if sc is not None:
+            g_ = g_ * sc[phys].astype(jnp.float32)[..., None, None]
+        return g_
+
+    kg = deq(k_pages, k_scale)
+    s = jnp.einsum("bhgd,bsphd->bhgsp", q.astype(jnp.float32), kg)
     if q2 is not None:
-        k2g = k2_pages[phys]
         s = s + jnp.einsum(
-            "bhgd,bsphd->bhgsp", q2.astype(jnp.float32), k2g.astype(jnp.float32)
+            "bhgd,bsphd->bhgsp", q2.astype(jnp.float32), deq(k2_pages, k2_scale)
         )
     s = jnp.where(valid[:, None, None], s * scale, _NEG)
     m = jnp.max(s, axis=(-2, -1))  # (B, Hkv, G); _NEG on dead lanes
     pexp = jnp.exp(s - m[..., None, None]) * valid[:, None, None]
     l = jnp.sum(pexp, axis=(-2, -1))
-    vg = kg if v_is_k else v_pages[phys]
-    acc = jnp.einsum("bhgsp,bsphd->bhgd", pexp, vg.astype(jnp.float32))
+    vg = kg if v_is_k else deq(v_pages, v_scale)
+    acc = jnp.einsum("bhgsp,bsphd->bhgd", pexp, vg)
     return acc, m, l
 
 
@@ -344,6 +393,9 @@ def paged_attn_xla(
     win_slots: int = 0,
     q2: Optional[jnp.ndarray] = None,
     k2_pages: Optional[jnp.ndarray] = None,
+    k_scale: Optional[jnp.ndarray] = None,
+    v_scale: Optional[jnp.ndarray] = None,
+    k2_scale: Optional[jnp.ndarray] = None,
     v_is_k: bool = False,
 ) -> jnp.ndarray:
     """Gathered reference: materializes the ``(B, n_slots·ps, ...)`` view
@@ -353,6 +405,7 @@ def paged_attn_xla(
     acc, m, l = _gathered_stats(
         q, k_pages, v_pages, tables, lengths, scale=scale, window=window,
         win_slots=win_slots, q2=q2, k2_pages=k2_pages, v_is_k=v_is_k,
+        k_scale=k_scale, v_scale=v_scale, k2_scale=k2_scale,
     )
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.astype(q.dtype)
@@ -373,6 +426,9 @@ def paged_attn_stats_xla(
     win_slots: int = 0,
     q2: Optional[jnp.ndarray] = None,
     k2_pages: Optional[jnp.ndarray] = None,
+    k_scale: Optional[jnp.ndarray] = None,
+    v_scale: Optional[jnp.ndarray] = None,
+    k2_scale: Optional[jnp.ndarray] = None,
     v_is_k: bool = False,
 ):
     """Stats-form gathered path: same math as :func:`paged_attn_xla` with
@@ -380,6 +436,7 @@ def paged_attn_stats_xla(
     return _gathered_stats(
         q, k_pages, v_pages, tables, lengths, scale=scale, window=window,
         win_slots=win_slots, q2=q2, k2_pages=k2_pages, v_is_k=v_is_k,
+        k_scale=k_scale, v_scale=v_scale, k2_scale=k2_scale,
     )
 
 

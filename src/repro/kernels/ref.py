@@ -2,9 +2,17 @@
 
 These re-export / compose the reference implementations in ``repro.core.
 masking`` so the kernel tests have a single import point.
+``paged_attn_ref`` is the dense oracle for the paged decode-attention
+family: gather-everything + one softmax, no flash decomposition, no page
+walking — deliberately the dumbest correct program, so the Pallas / XLA /
+shard_map twins (and the int8 per-page dequantization they share) have an
+independent yardstick.
 """
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
 
 from repro.core.masking import (
@@ -20,6 +28,7 @@ __all__ = [
     "nm_compress",
     "nm_decompress",
     "nm_spmm_ref",
+    "paged_attn_ref",
 ]
 
 
@@ -33,3 +42,67 @@ def nm_spmm_ref(
     """Oracle for the compressed N:M matmul: decompress then dense matmul."""
     w = nm_decompress(values, indices, n, m, group_axis=0)  # (K, O)
     return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+def _dequant_pages(
+    pages: jnp.ndarray,  # (P, ps, Hkv, D) — fp or int8
+    scale: Optional[jnp.ndarray],  # (P, ps) f32 or None
+) -> jnp.ndarray:
+    x = pages.astype(jnp.float32)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)[..., None, None]
+    return x
+
+
+def paged_attn_ref(
+    q: jnp.ndarray,  # (B, Hkv, G, D)
+    k_pages: jnp.ndarray,  # (P, ps, Hkv, D)
+    v_pages: Optional[jnp.ndarray],  # (P, ps, Hkv, Dv); None when v_is_k
+    tables: jnp.ndarray,  # (B, n_slots) int32, append-only, sentinel = P
+    lengths: jnp.ndarray,  # (B,) int32
+    *,
+    scale: float,
+    q2: Optional[jnp.ndarray] = None,
+    k2_pages: Optional[jnp.ndarray] = None,
+    v_is_k: bool = False,
+    k_scale: Optional[jnp.ndarray] = None,  # (P, ps) per-page-row scales
+    v_scale: Optional[jnp.ndarray] = None,
+    k2_scale: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Dense oracle for paged decode attention over *append-only* tables.
+
+    Gathers every table slot into a contiguous logical view (slot ``p``
+    holds positions ``[p*ps, (p+1)*ps)``; the sentinel gathers a zero
+    page, dead under the length mask), optionally dequantizing int8 pages
+    with their per-page-row scales, then runs one masked softmax in f32.
+    Windowed (modular) tables are out of scope — the oracle's job is the
+    full-table math the prefix-cache / int8 paths build on.
+    """
+    b, hkv, g, d = q.shape
+    p, ps = k_pages.shape[0], k_pages.shape[1]
+    n_slots = tables.shape[1]
+    s = n_slots * ps
+    phys = jnp.clip(tables, 0, p)  # sentinel stays on the zero page
+
+    def gather(pages, sc):
+        x = _dequant_pages(pages, sc)
+        x = jnp.concatenate([x, jnp.zeros_like(x[:1])], axis=0)  # zero page
+        out = x[phys]  # (B, n_slots, ps, Hkv, Dx)
+        return out.reshape(b, s, x.shape[2], x.shape[3])
+
+    kg = gather(k_pages, k_scale)  # (B, S, Hkv, D)
+    logits = jnp.einsum(
+        "bhgd,bshd->bhgs", q.astype(jnp.float32), kg
+    ) * scale
+    if q2 is not None:
+        k2g = gather(k2_pages, k2_scale)
+        logits = logits + jnp.einsum(
+            "bhgd,bshd->bhgs", q2.astype(jnp.float32), k2g
+        ) * scale
+    mask = jnp.arange(s)[None, :] < lengths[:, None]  # (B, S)
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(mask[:, None, None, :], w, 0.0)  # all-dead rows -> 0
+    vg = kg if v_is_k else gather(v_pages, v_scale)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, vg)
+    return out.astype(q.dtype)

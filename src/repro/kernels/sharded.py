@@ -97,6 +97,9 @@ def paged_attn_shard_map(
     win_slots: int = 0,
     q2: Optional[jnp.ndarray] = None,
     k2_pages: Optional[jnp.ndarray] = None,
+    k_scale: Optional[jnp.ndarray] = None,  # (P, ps), pages axis sharded
+    v_scale: Optional[jnp.ndarray] = None,
+    k2_scale: Optional[jnp.ndarray] = None,
     v_is_k: bool = False,
     mesh=None,
     inner_mode: Optional[str] = None,
@@ -106,27 +109,42 @@ def paged_attn_shard_map(
     The dispatch shard guard already checked ``num_pages % shards == 0``.
     Queries/tables/lengths stay replicated (batch is small and may not
     divide the data axis; GSPMD reshards the tiny activations around the
-    wrapper for free) — the point is that the *pool* never moves.
+    wrapper for free) — the point is that the *pool* never moves.  int8
+    scale planes shard with their pages axis and dequantize inside each
+    shard's inner kernel.
     """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     shards = int(sizes.get(MODEL_AXIS, 1))
     per = k_pages.shape[0] // shards
     has_k2 = q2 is not None
+    has_scale = k_scale is not None
 
     operands = [q, tables, lengths, k_pages]
     specs = [P(), P(), P(), P(MODEL_AXIS)]
+    if has_scale:
+        operands.append(k_scale)
+        specs.append(P(MODEL_AXIS))
     if has_k2:
         operands += [q2, k2_pages]
         specs += [P(), P(MODEL_AXIS)]
+        if has_scale:
+            operands.append(k2_scale)
+            specs.append(P(MODEL_AXIS))
     if not v_is_k:
         operands.append(v_pages)
         specs.append(P(MODEL_AXIS))
+        if has_scale:
+            operands.append(v_scale)
+            specs.append(P(MODEL_AXIS))
 
     def body(q_, tables_, lengths_, k_local, *rest):
         it = iter(rest)
+        ks_ = next(it) if has_scale else None
         q2_ = next(it) if has_k2 else None
         k2_ = next(it) if has_k2 else None
+        k2s_ = next(it) if (has_k2 and has_scale) else None
         v_ = None if v_is_k else next(it)
+        vs_ = None if v_is_k else (next(it) if has_scale else None)
         shard = jax.lax.axis_index(MODEL_AXIS)
         local, _ = shard_local_tables(tables_, shard, per)
         _, fn = dispatch.resolve(
@@ -137,6 +155,7 @@ def paged_attn_shard_map(
         acc, m, l = fn(
             q_, k_local, v_, local, lengths_, scale=scale, window=window,
             win_slots=win_slots, q2=q2_, k2_pages=k2_, v_is_k=v_is_k,
+            k_scale=ks_, v_scale=vs_, k2_scale=k2s_,
         )
         return combine_stats(acc, m, l, MODEL_AXIS).astype(q_.dtype)
 

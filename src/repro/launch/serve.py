@@ -23,6 +23,13 @@ bit-identical across K), ``--prefill-chunk N`` absorbs long prompts in
 N-token chunks interleaved with decode dispatches, and ``--no-donate``
 disables cache-buffer donation (the copying A/B baseline).
 
+Paged-pool extensions: ``--prefix-cache`` indexes every prefilled prompt's
+pages in a radix trie and maps cached prefixes into later requests' tables
+(shared refcounted pages, copy-on-write on divergence; ``--shared-prefix N``
+gives the synthetic requests a common head so hits actually occur), and
+``--kv-int8`` stores KV pages as int8 with per-page-row scales — a ~4x
+smaller pool at the same page count, dequantized inside the kernels.
+
 ``--mesh data,model`` serves **tensor-parallel**: every engine executable
 is jitted with explicit NamedShardings (weights TP via the compressed
 pspec seam, KV caches sequence/pages-sharded per ``--kv-shard``), and the
@@ -120,7 +127,20 @@ def main(argv=None) -> dict:
                          "collective counts")
     ap.add_argument("--kv-shard", default="seq", choices=("seq", "feature"),
                     help="model-axis dim of the KV caches under --mesh")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix KV pages across requests via "
+                         "the radix index (paged, attention-family archs); "
+                         "hits skip prefilling the cached tokens")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV pages with per-page-row scales (~4x "
+                         "smaller pool at equal page count; paged only)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give every request the same leading N prompt "
+                         "tokens (exercises --prefix-cache; the tail stays "
+                         "per-request random)")
     args = ap.parse_args(argv)
+    if (args.prefix_cache or args.kv_int8) and not args.paged:
+        raise SystemExit("--prefix-cache/--kv-int8 require --paged")
 
     mesh = None
     if args.mesh:
@@ -156,16 +176,27 @@ def main(argv=None) -> dict:
         prefill_buckets=buckets,
         mesh=mesh,
         kv_shard=args.kv_shard,
+        prefix_cache=args.prefix_cache,
+        kv_quant=args.kv_int8,
     )
     n_requests = args.batch if args.requests is None else args.requests
     sampling = SamplingParams(
         temperature=args.temperature, top_k=args.top_k, max_new_tokens=args.gen
     )
+    shared = []
+    if args.shared_prefix:
+        n_shared = min(args.shared_prefix, args.prompt_len - 1)
+        shared = [
+            int(t) for t in jax.random.randint(
+                jax.random.PRNGKey(999), (n_shared,), 0, cfg.vocab
+            )
+        ]
     for r in range(n_requests):
         prompt = jax.random.randint(
-            jax.random.PRNGKey(1000 + r), (args.prompt_len,), 0, cfg.vocab
+            jax.random.PRNGKey(1000 + r),
+            (args.prompt_len - len(shared),), 0, cfg.vocab,
         )
-        engine.submit([int(t) for t in prompt], sampling)
+        engine.submit(shared + [int(t) for t in prompt], sampling)
     results = engine.run()
 
     st = engine.stats()
@@ -194,6 +225,20 @@ def main(argv=None) -> dict:
         # sharded sweep compares xla vs shard_map streams on this field
         "kernel_route": engine.kernel_route(),
     }
+    if args.paged:
+        # pool/page-sharing health next to the route: sync costs, window
+        # reclamation, and the prefix-cache / copy-on-write counters
+        for key in (
+            "evicted_pages", "table_full_uploads", "table_row_syncs",
+            "table_syncs", "kv_quant", "shared_pages", "cow_copies",
+        ):
+            summary[key] = st[key]
+        for key in (
+            "prefix_hits", "prefix_hit_tokens", "prefix_hit_rate",
+            "prefix_indexed_pages", "prefix_evictions",
+        ):
+            if key in st:
+                summary[key] = st[key]
     if args.temperature == 0.0:
         # greedy streams are deterministic: recorded so route/mesh A/B
         # runs can assert token-level parity from the summaries alone

@@ -250,8 +250,28 @@ class PagedLayout:
     # psum'd flash-stat combine); the GSPMD-partitionable gathered path
     # remains the correctness backstop (see kernels.dispatch).
     shards: int = 1
+    # int8 pool arrays: every paged KV leaf stores symmetric int8 with one
+    # scale per (page, slot) — ``<leaf>_scale`` arrays of shape
+    # ``(num_pages, page_size)`` living beside the pool, sharded on the
+    # same pages axis.  Scales are *stored* f16 (so small-feature smoke
+    # pools still beat the 2x HBM bar) but every producer/consumer does
+    # the scale math in f32: ``_quant`` rounds the scale through f16
+    # before dividing, and all dequant sites upcast.  Writes quantize on
+    # scatter (per-token absmax over the head/feature dims); reads — the
+    # Pallas kernel, the gathered XLA twin, and every reference/chunk
+    # view — dequantize per page under the same math, so streams match fp
+    # pages to quantization tolerance (and HBM per cached token drops ~4x
+    # vs f32).
+    quant: bool = False
 
     kind = "paged"
+
+    # quantized clamp floor: keeps all-zero pages (and true zero tokens)
+    # from dividing by zero.  Must survive the f16 storage round-trip as a
+    # nonzero *normal* (f16 min normal ~6.1e-5); binds only for tokens
+    # with absmax < 127*_QEPS ~ 0.013, where the absolute error it adds
+    # (<= _QEPS/2) is far below quantization noise.
+    _QEPS = 1e-4
 
     @property
     def pages_full(self) -> int:
@@ -275,14 +295,53 @@ class PagedLayout:
     def attn_alloc(self, batch: int, window: Optional[int], n_kv: int,
                    hd: int, dtype) -> dict:
         shp = (self.num_pages, self.page_size, n_kv, hd)
+        if self.quant:
+            sc = (self.num_pages, self.page_size)
+            return {
+                "k": jnp.zeros(shp, jnp.int8),
+                "v": jnp.zeros(shp, jnp.int8),
+                "k_scale": jnp.zeros(sc, jnp.float16),
+                "v_scale": jnp.zeros(sc, jnp.float16),
+            }
         return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
 
     def mla_alloc(self, batch: int, kv_lora: int, rope_dim: int, dtype) -> dict:
         shp = (self.num_pages, self.page_size)
+        if self.quant:
+            return {
+                "ckv": jnp.zeros(shp + (kv_lora,), jnp.int8),
+                "krope": jnp.zeros(shp + (rope_dim,), jnp.int8),
+                "ckv_scale": jnp.zeros(shp, jnp.float16),
+                "krope_scale": jnp.zeros(shp, jnp.float16),
+            }
         return {
             "ckv": jnp.zeros(shp + (kv_lora,), dtype),
             "krope": jnp.zeros(shp + (rope_dim,), dtype),
         }
+
+    # -- int8 page quantization --------------------------------------------
+
+    def _quant(self, x, lead: int):
+        """Quantize ``x`` per token: absmax over dims ``lead..`` → scale."""
+        xf = x.astype(jnp.float32)
+        red = tuple(range(lead, x.ndim))
+        scale = jnp.maximum(
+            jnp.max(jnp.abs(xf), axis=red) / 127.0, self._QEPS
+        )
+        # round-trip through the f16 storage dtype so quantization divides
+        # by exactly the scale every dequant site will multiply back
+        scale = scale.astype(jnp.float16).astype(jnp.float32)
+        q = jnp.round(
+            xf / scale.reshape(scale.shape + (1,) * (x.ndim - lead))
+        ).astype(jnp.int8)
+        return q, scale.astype(jnp.float16)
+
+    @staticmethod
+    def dequant(q, scale):
+        """Inverse of :meth:`_quant`: codes x per-token scales → f32."""
+        return q.astype(jnp.float32) * scale.astype(jnp.float32).reshape(
+            scale.shape + (1,) * (q.ndim - scale.ndim)
+        )
 
     def tables(self, batch: int) -> Optional[dict]:
         t = {}
@@ -336,6 +395,41 @@ class PagedLayout:
         idx = phys * self.page_size + a % self.page_size
         return jnp.take(flat, idx, axis=0, mode="clip")
 
+    def _scatter(self, c: dict, entries: dict, widx) -> dict:
+        """Scatter new tokens into the flat pools at ``widx`` (sentinel
+        slots drop); the single write seam shared by decode, batched
+        prefill, and chunked prefill.
+
+        ``entries``: leaf name → new values whose leading dims flatten to
+        match ``widx``.  Under ``quant`` each token quantizes on the way
+        in and its scale scatters into the ``<name>_scale`` plane at the
+        same flat slot.  Returns ``c`` with the touched leaves replaced
+        (scale planes included), so callers can hand the dict straight
+        back as the layer's new cache."""
+        out = dict(c)
+        for name, x in entries.items():
+            flat = c[name].reshape((-1,) + c[name].shape[2:])
+            if self.quant:
+                q, s = self._quant(x, 1)
+                flat = flat.at[widx].set(q, mode="drop")
+                sname = name + "_scale"
+                out[sname] = (
+                    c[sname].reshape(-1).at[widx].set(s, mode="drop")
+                ).reshape(c[sname].shape)
+            else:
+                flat = flat.at[widx].set(x.astype(c[name].dtype), mode="drop")
+            out[name] = flat.reshape(c[name].shape)
+        return out
+
+    def _gather_view(self, c: dict, name: str, pt, a, tslot):
+        """Gathered logical view of one leaf, dequantized under ``quant``."""
+        flat = c[name].reshape((-1,) + c[name].shape[2:])
+        v = self._gather(flat, pt, a, tslot)
+        if self.quant:
+            s = self._gather(c[name + "_scale"].reshape(-1), pt, a, tslot)
+            v = self.dequant(v, s)
+        return v
+
     # -- decode-step read/write --------------------------------------------
 
     def attn_write(self, c: dict, k_new, v_new, pos, tables, window) -> dict:
@@ -347,46 +441,34 @@ class PagedLayout:
         ever materialized.
         """
         pt = tables[self.table_key(window)]
-        kf = c["k"].reshape((-1,) + c["k"].shape[2:])
-        vf = c["v"].reshape((-1,) + c["v"].shape[2:])
         widx = self._write_slot(pt, pos, window)
-        kf = kf.at[widx].set(k_new, mode="drop")
-        vf = vf.at[widx].set(v_new, mode="drop")
-        return {"k": kf.reshape(c["k"].shape), "v": vf.reshape(c["v"].shape)}
+        return self._scatter(c, {"k": k_new, "v": v_new}, widx)
 
     def mla_write(self, c: dict, ckv_new, krope_new, pos, tables) -> dict:
         """Latent-cache analogue of :meth:`attn_write` (append-only table)."""
         pt = tables["full"]
-        cf = c["ckv"].reshape((-1,) + c["ckv"].shape[2:])
-        rf = c["krope"].reshape((-1,) + c["krope"].shape[2:])
         widx = self._write_slot(pt, pos, None)
-        cf = cf.at[widx].set(ckv_new, mode="drop")
-        rf = rf.at[widx].set(krope_new, mode="drop")
-        return {
-            "ckv": cf.reshape(c["ckv"].shape),
-            "krope": rf.reshape(c["krope"].shape),
-        }
+        return self._scatter(c, {"ckv": ckv_new, "krope": krope_new}, widx)
 
     def attn_rw(self, c: dict, k_new, v_new, pos, tables, window):
         """Write + *gathered* logical view — the parity reference path
-        (bit-identical to the slab; see module docstring)."""
+        (bit-identical to the slab; see module docstring).  Under ``quant``
+        the view dequantizes what the write just stored — every read,
+        including the current token's, sees the int8-rounded values, same
+        as the kernel fast path."""
         new = self.attn_write(c, k_new, v_new, pos, tables, window)
         a, tslot, key = self._view_index(pos, window)
         pt = tables[key]
-        kf = new["k"].reshape((-1,) + new["k"].shape[2:])
-        vf = new["v"].reshape((-1,) + new["v"].shape[2:])
-        k_view = self._gather(kf, pt, a, tslot)
-        v_view = self._gather(vf, pt, a, tslot)
+        k_view = self._gather_view(new, "k", pt, a, tslot)
+        v_view = self._gather_view(new, "v", pt, a, tslot)
         return k_view, v_view, new
 
     def mla_rw(self, c: dict, ckv_new, krope_new, pos, tables):
         new = self.mla_write(c, ckv_new, krope_new, pos, tables)
         a, tslot, key = self._view_index(pos, None)
         pt = tables[key]
-        cf = new["ckv"].reshape((-1,) + new["ckv"].shape[2:])
-        rf = new["krope"].reshape((-1,) + new["krope"].shape[2:])
-        ckv_view = self._gather(cf, pt, a, tslot)
-        krope_view = self._gather(rf, pt, a, tslot)
+        ckv_view = self._gather_view(new, "ckv", pt, a, tslot)
+        krope_view = self._gather_view(new, "krope", pt, a, tslot)
         return ckv_view, krope_view, new
 
     # -- batched prefill writes --------------------------------------------
@@ -415,32 +497,26 @@ class PagedLayout:
                         tables, window):
         lp = k_rows.shape[1]
         widx = self._row_write_idx(lanes, lens, lp, tables, window).reshape(-1)
-        kf = c["k"].reshape((-1,) + c["k"].shape[2:])
-        vf = c["v"].reshape((-1,) + c["v"].shape[2:])
-        kf = kf.at[widx].set(
-            k_rows.astype(c["k"].dtype).reshape((-1,) + k_rows.shape[2:]),
-            mode="drop",
+        return self._scatter(
+            c,
+            {
+                "k": k_rows.reshape((-1,) + k_rows.shape[2:]),
+                "v": v_rows.reshape((-1,) + v_rows.shape[2:]),
+            },
+            widx,
         )
-        vf = vf.at[widx].set(
-            v_rows.astype(c["v"].dtype).reshape((-1,) + v_rows.shape[2:]),
-            mode="drop",
-        )
-        return {"k": kf.reshape(c["k"].shape), "v": vf.reshape(c["v"].shape)}
 
     def mla_write_rows(self, c: dict, ckv_rows, krope_rows, lanes, lens, tables):
         lp = ckv_rows.shape[1]
         widx = self._row_write_idx(lanes, lens, lp, tables, None).reshape(-1)
-        cf = c["ckv"].reshape((-1,) + c["ckv"].shape[2:])
-        rf = c["krope"].reshape((-1,) + c["krope"].shape[2:])
-        cf = cf.at[widx].set(
-            ckv_rows.astype(c["ckv"].dtype).reshape((-1,) + ckv_rows.shape[2:]),
-            mode="drop",
+        return self._scatter(
+            c,
+            {
+                "ckv": ckv_rows.reshape((-1,) + ckv_rows.shape[2:]),
+                "krope": krope_rows.reshape((-1,) + krope_rows.shape[2:]),
+            },
+            widx,
         )
-        rf = rf.at[widx].set(
-            krope_rows.astype(c["krope"].dtype).reshape((-1,) + krope_rows.shape[2:]),
-            mode="drop",
-        )
-        return {"ckv": cf.reshape(c["ckv"].shape), "krope": rf.reshape(c["krope"].shape)}
 
     # -- chunked-prefill writes / views ------------------------------------
     #
@@ -467,17 +543,14 @@ class PagedLayout:
         widx = self._chunk_write_idx(
             lanes, starts, lengths, k_rows.shape[1], tables
         ).reshape(-1)
-        kf = c["k"].reshape((-1,) + c["k"].shape[2:])
-        vf = c["v"].reshape((-1,) + c["v"].shape[2:])
-        kf = kf.at[widx].set(
-            k_rows.astype(c["k"].dtype).reshape((-1,) + k_rows.shape[2:]),
-            mode="drop",
+        return self._scatter(
+            c,
+            {
+                "k": k_rows.reshape((-1,) + k_rows.shape[2:]),
+                "v": v_rows.reshape((-1,) + v_rows.shape[2:]),
+            },
+            widx,
         )
-        vf = vf.at[widx].set(
-            v_rows.astype(c["v"].dtype).reshape((-1,) + v_rows.shape[2:]),
-            mode="drop",
-        )
-        return {"k": kf.reshape(c["k"].shape), "v": vf.reshape(c["v"].shape)}
 
     def _chunk_gather(self, flat, lanes, tables):
         ps = self.page_size
@@ -486,11 +559,18 @@ class PagedLayout:
         phys = rows[:, a // ps]  # (L, S); sentinel slots -> clip garbage
         return jnp.take(flat, phys * ps + a % ps, axis=0, mode="clip")
 
+    def _chunk_view(self, c: dict, name: str, lanes, tables):
+        flat = c[name].reshape((-1,) + c[name].shape[2:])
+        v = self._chunk_gather(flat, lanes, tables)
+        if self.quant:
+            s = self._chunk_gather(c[name + "_scale"].reshape(-1), lanes, tables)
+            v = self.dequant(v, s)
+        return v
+
     def attn_chunk_view(self, c: dict, lanes, tables):
-        kf = c["k"].reshape((-1,) + c["k"].shape[2:])
-        vf = c["v"].reshape((-1,) + c["v"].shape[2:])
-        return self._chunk_gather(kf, lanes, tables), self._chunk_gather(
-            vf, lanes, tables
+        return (
+            self._chunk_view(c, "k", lanes, tables),
+            self._chunk_view(c, "v", lanes, tables),
         )
 
     def mla_write_chunk(self, c: dict, ckv_rows, krope_rows, lanes, starts,
@@ -498,26 +578,19 @@ class PagedLayout:
         widx = self._chunk_write_idx(
             lanes, starts, lengths, ckv_rows.shape[1], tables
         ).reshape(-1)
-        cf = c["ckv"].reshape((-1,) + c["ckv"].shape[2:])
-        rf = c["krope"].reshape((-1,) + c["krope"].shape[2:])
-        cf = cf.at[widx].set(
-            ckv_rows.astype(c["ckv"].dtype).reshape((-1,) + ckv_rows.shape[2:]),
-            mode="drop",
+        return self._scatter(
+            c,
+            {
+                "ckv": ckv_rows.reshape((-1,) + ckv_rows.shape[2:]),
+                "krope": krope_rows.reshape((-1,) + krope_rows.shape[2:]),
+            },
+            widx,
         )
-        rf = rf.at[widx].set(
-            krope_rows.astype(c["krope"].dtype).reshape((-1,) + krope_rows.shape[2:]),
-            mode="drop",
-        )
-        return {
-            "ckv": cf.reshape(c["ckv"].shape),
-            "krope": rf.reshape(c["krope"].shape),
-        }
 
     def mla_chunk_view(self, c: dict, lanes, tables):
-        cf = c["ckv"].reshape((-1,) + c["ckv"].shape[2:])
-        rf = c["krope"].reshape((-1,) + c["krope"].shape[2:])
-        return self._chunk_gather(cf, lanes, tables), self._chunk_gather(
-            rf, lanes, tables
+        return (
+            self._chunk_view(c, "ckv", lanes, tables),
+            self._chunk_view(c, "krope", lanes, tables),
         )
 
 
@@ -526,7 +599,7 @@ CacheLayout = (SlabLayout, PagedLayout)  # for isinstance checks
 
 def paged_layout_for(
     cfg, max_len: int, *, page_size: int, num_pages: int, lookahead: int = 1,
-    shards: int = 1,
+    shards: int = 1, quant: bool = False,
 ) -> PagedLayout:
     """Derive the PagedLayout an arch needs at a given logical capacity.
 
@@ -554,5 +627,5 @@ def paged_layout_for(
     return PagedLayout(
         page_size=page_size, num_pages=num_pages, max_len=max_len,
         win=win, has_full=has_full, lookahead=max(1, lookahead),
-        shards=max(1, shards),
+        shards=max(1, shards), quant=quant,
     )

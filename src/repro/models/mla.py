@@ -220,6 +220,8 @@ def mla_decode(
             k2_pages=new_cache["krope"][:, :, None, :],
             v_is_k=True,
             shards=layout.shards,
+            k_scale=new_cache.get("ckv_scale"),
+            k2_scale=new_cache.get("krope_scale"),
         )  # (B, 1, H, kv_lora)
         out = jnp.einsum(
             "bhl,lhv->bhv", o_lat[:, 0], wv.astype(jnp.float32)

@@ -734,6 +734,7 @@ def _attn_decode(x, p, cfg: ArchConfig, c: dict, pos, layout, tables):
             scale=hd ** -0.5, window=win,
             win_slots=layout.pages_win if win else 0,
             shards=layout.shards,
+            k_scale=new_c.get("k_scale"), v_scale=new_c.get("v_scale"),
         )
         out = out.reshape(b, 1, h, hd)
     else:

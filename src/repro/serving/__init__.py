@@ -1,4 +1,5 @@
 """Compressed-native serving: continuous-batching decode over N:M trees."""
 from repro.serving.engine import DecodeEngine, GenerationResult
 from repro.serving.kv_pool import PagedKVPool
+from repro.serving.prefix_cache import PrefixIndex
 from repro.serving.sampling import SamplingParams, sample_tokens

@@ -236,6 +236,17 @@ class DecodeEngine:
         the ``cache_pspecs`` layouts.  ``"feature"`` is rejected on
         meshes with a model axis > 1: its prefill write miscompiles under
         the SPMD partitioner (see ``compressed_pspecs.check_kv_shard``).
+    prefix_cache: index every fully-prefilled prompt's pages in a radix
+        trie (``serving.prefix_cache.PrefixIndex``); later requests
+        sharing a prefix map the cached pages into their table (shared,
+        refcounted, copy-on-write on divergence) and prefill only the
+        uncached tail.  Paged + append-only + attention-family only;
+        silently ignored (with a warning) otherwise.
+    kv_quant: store KV pages as int8 with per-page-row scales (f16
+        storage, f32 compute)
+        (``models.cache.PagedLayout.quant``) — ~4x smaller pool at equal
+        page count, dequantized inside the attention kernels.  Greedy
+        streams may differ from fp pools within quantization tolerance.
     """
 
     def __init__(
@@ -256,6 +267,8 @@ class DecodeEngine:
         max_prefill_batch: Optional[int] = None,
         mesh=None,
         kv_shard: str = "seq",
+        prefix_cache: bool = False,
+        kv_quant: bool = False,
     ):
         self.model = model
         self.params = params
@@ -272,6 +285,12 @@ class DecodeEngine:
                 model, max_batch=max_batch, max_len=max_len,
                 num_pages=num_pages, page_size=page_size,
                 lookahead=steps_per_dispatch, mesh=mesh, kv_shard=kv_shard,
+                quant=kv_quant,
+            )
+        if kv_quant and kv_pool is not None and not kv_pool.layout.quant:
+            raise ValueError(
+                "kv_quant=True needs a pool built with quant=True (pass "
+                "quant= to PagedKVPool, or let the engine build it)"
             )
         self.pool = kv_pool
         if self.pool is not None:
@@ -348,6 +367,8 @@ class DecodeEngine:
         self.dispatches = 0  # jitted decode calls == host syncs
         self.admitted = 0
         self.preemptions = 0
+        self.prefix_hits = 0  # admissions that reused cached prefix pages
+        self.prefix_hit_tokens = 0  # prompt tokens skipped via the index
         self.max_concurrency = 0
         self.prefill_batches = 0
         self.prefill_chunks = 0  # chunked-prefill dispatches
@@ -380,6 +401,31 @@ class DecodeEngine:
             and model.cfg.local_window is None
         )
         self.prefill_chunk = prefill_chunk if self._chunk_ok else None
+        # prefix caching rides the chunked-prefill machinery (a prefix-hit
+        # lane is admitted as "already absorbed its first chunks" and the
+        # uncached tail drains through _advance_chunks), so it carries the
+        # same arch gate — attention-family, non-windowed — plus an
+        # append-only full table (windowed pools evict shared pages).
+        self._prefix = None
+        if prefix_cache:
+            lay = self.pool.layout if self.pool is not None else None
+            if (
+                lay is not None
+                and lay.has_full and not lay.win
+                and not self._exact_prefill
+                and model.cfg.local_window is None
+            ):
+                from repro.serving.prefix_cache import PrefixIndex
+
+                self._prefix = PrefixIndex(self.pool, lay.page_size)
+            else:
+                warnings.warn(
+                    "prefix_cache=True ignored: needs a paged append-only "
+                    "full table on an attention-family, non-windowed arch"
+                )
+        # tail prefill of a prefix hit reuses the chunk executable even when
+        # chunked prefill itself is off — pick a chunk size for that case
+        self._tail_chunk = self.prefill_chunk or min(64, max_len)
         if prefill_buckets:
             buckets = sorted(int(b) for b in prefill_buckets if 0 < int(b) <= max_len)
         else:
@@ -591,7 +637,13 @@ class DecodeEngine:
 
         Prompts longer than ``prefill_chunk`` take the chunked route: the
         lane is claimed (and its pages reserved) now, but the prompt is
-        absorbed chunk-by-chunk across the following scheduling steps."""
+        absorbed chunk-by-chunk across the following scheduling steps.
+
+        With a prefix index, admission first asks it for the longest
+        cached prefix (page granularity): the hit pages are mapped shared
+        into the lane's table and only the uncached tail is absorbed —
+        through the chunked machinery, since a prefix-hit lane is exactly
+        a lane that already absorbed its first chunks."""
         picked: list[tuple[_Request, int, int]] = []
         n_taken = 0
         while self.queue and n_taken < self.max_prefill_batch:
@@ -599,15 +651,47 @@ class DecodeEngine:
             if i is None:
                 break
             req = self.queue[0]
-            length = len(req.prompt) + len(req.prefix)
-            if self.pool is not None and not self.pool.alloc_prefill(i, length):
-                break  # pool pressure: retry next step, after frees/evictions
+            seq = list(req.prompt) + list(req.prefix)
+            length = len(seq)
+            shared_len, shared_pids = 0, ()
+            if self._prefix is not None:
+                shared_len, shared_pids = self._prefix.match(seq)
+            if self.pool is not None:
+                ok = self.pool.alloc_prefill(
+                    i, length, shared_full=shared_pids, shared_len=shared_len
+                )
+                # pool pressure: shed LRU index entries before giving up —
+                # each evict() can invalidate matched pages, so re-match
+                while (
+                    not ok
+                    and self._prefix is not None
+                    and self._prefix.evict(1)
+                ):
+                    shared_len, shared_pids = self._prefix.match(seq)
+                    ok = self.pool.alloc_prefill(
+                        i, length, shared_full=shared_pids,
+                        shared_len=shared_len,
+                    )
+                if not ok:
+                    break  # retry next step, after frees/preemptions
             self.queue.popleft()
             n_taken += 1
+            if shared_len > 0:
+                # prefix hit: absorb only the uncached tail, chunk-wise
+                self.prefix_hits += 1
+                self.prefix_hit_tokens += shared_len
+                self.slots[i] = _Slot(
+                    req, pos=shared_len, seq=self._admit_seq,
+                    pending=seq[shared_len:],
+                )
+                self._admit_seq += 1
+                self.admitted += 1
+                self._slots_dirty = True
+                continue
             if self.prefill_chunk is not None and length > self.prefill_chunk:
                 self.slots[i] = _Slot(
                     req, pos=0, seq=self._admit_seq,
-                    pending=list(req.prompt) + list(req.prefix),
+                    pending=seq,
                 )
                 self._admit_seq += 1
                 self.admitted += 1
@@ -645,6 +729,8 @@ class DecodeEngine:
         need_topk = any(req.sampling.top_k > 0 for req, _, _ in items)
         self.key, sub = jax.random.split(self.key)
         if self.pool is not None:
+            if self.pool.pending_copies:
+                self.cache = self.pool.apply_pending(self.cache)
             dt = self.pool.device_tables()
             if dt:  # ssm-only paged archs have no table'd layers
                 self.cache["tables"] = dt
@@ -661,6 +747,16 @@ class DecodeEngine:
         self.tokens = self.tokens.at[lanes].set(first, mode="drop")
         self.prefill_batches += 1
         host_first = np.asarray(first)
+        if self._prefix is not None:
+            # index the freshly written pages while the lane still maps
+            # them (_absorb may finish the lane and release its claim;
+            # the index's own references keep the KV resident)
+            for req, i, length in items:
+                full, tail = self.pool.prompt_pages(i, length)
+                self._prefix.insert(
+                    req.prompt + req.prefix, full, tail,
+                    length % self.pool.layout.page_size,
+                )
         for r, (req, i, _) in enumerate(items):
             self.admitted += 1
             self._absorb(i, int(host_first[r]), out)
@@ -676,7 +772,9 @@ class DecodeEngine:
         token, so a lane never idles fully-prefilled-but-unsampled across a
         dispatch.
         """
-        csz = self.prefill_chunk
+        # prefix-hit lanes drain their uncached tail here even when chunked
+        # prefill proper is off — _tail_chunk covers that case
+        csz = self.prefill_chunk or self._tail_chunk
         chunking = [
             i for i, s in enumerate(self.slots) if s is not None and s.pending
         ]
@@ -695,6 +793,8 @@ class DecodeEngine:
             starts[r] = s.pos
             lengths[r] = len(part)
         if self.pool is not None:
+            if self.pool.pending_copies:
+                self.cache = self.pool.apply_pending(self.cache)
             dt = self.pool.device_tables()
             if dt:  # ssm-only paged archs have no table'd layers
                 self.cache["tables"] = dt
@@ -714,6 +814,16 @@ class DecodeEngine:
             s.pending = s.pending[took:]
             if not s.pending:
                 finishing.append((r, i))
+        if finishing and self._prefix is not None:
+            # the lane's whole prompt(+resume prefix) is now cached: index
+            # its pages before _absorb can finish/release the lane
+            for _, i in finishing:
+                s = self.slots[i]
+                full, tail = self.pool.prompt_pages(i, s.pos)
+                self._prefix.insert(
+                    s.prompt + s.generated, full, tail,
+                    s.pos % self.pool.layout.page_size,
+                )
         if finishing:
             temps = np.zeros((nb,), np.float32)
             topks = np.zeros((nb,), np.int32)
@@ -767,6 +877,10 @@ class DecodeEngine:
             while self.slots[i] is not None and not self.pool.ensure_steps(
                 i, self.slots[i].pos, k
             ):
+                # cached-but-idle prefix pages are cheaper to give up than
+                # a live lane: shed LRU index entries before preempting
+                if self._prefix is not None and self._prefix.evict(1):
+                    continue
                 victim = max(
                     (j for j, t in enumerate(self.slots) if t is not None),
                     key=lambda j: self.slots[j].seq,
@@ -824,7 +938,7 @@ class DecodeEngine:
         run one fused K-step decode dispatch; return finished requests."""
         out: list[GenerationResult] = []
         self._admit(out)
-        if self.prefill_chunk is not None:
+        if self.prefill_chunk is not None or self._prefix is not None:
             self._advance_chunks(out)
         t_prefill_done = time.perf_counter()
         self._ensure_capacity(out)
@@ -837,6 +951,8 @@ class DecodeEngine:
         self._util_n += 1
         self._kv_bytes_sum += self._live_kv_bytes()
         if self.pool is not None:
+            if self.pool.pending_copies:
+                self.cache = self.pool.apply_pending(self.cache)
             dt = self.pool.device_tables()
             if dt:  # ssm-only paged archs have no table'd layers
                 self.cache["tables"] = dt
@@ -1205,4 +1321,16 @@ class DecodeEngine:
             st["table_full_uploads"] = self.pool.table_full_uploads
             st["table_row_syncs"] = self.pool.table_row_syncs
             st["table_syncs"] = self.pool.table_syncs
+            st["kv_quant"] = self.pool.layout.quant
+            st["shared_pages"] = self.pool.shared_pages
+            st["cow_copies"] = self.pool.cow_copies
+        if self._prefix is not None:
+            st["prefix_cache"] = True
+            st["prefix_indexed_pages"] = self._prefix.pages
+            st["prefix_evictions"] = self._prefix.evictions
+            st["prefix_hits"] = self.prefix_hits
+            st["prefix_hit_tokens"] = self.prefix_hit_tokens
+            st["prefix_hit_rate"] = (
+                self.prefix_hits / self.admitted if self.admitted else 0.0
+            )
         return st

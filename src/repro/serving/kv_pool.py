@@ -36,6 +36,23 @@ occur), and ``release`` on finish or preemption.  When the engine donates
 the cache into its jitted executables it must hand the returned table
 arrays back via ``adopt_tables`` — the device buffers the pool scattered
 into were consumed by the donation.
+
+**Shared pages (prefix caching).**  Pages are refcounted: ``_take`` hands
+a page out at refcount 1, ``add_ref``/``decref`` adjust it, and a page
+only returns to the free list when its count hits zero — ``release`` is a
+decref over the lane's pages, so a prefix index (or another lane) holding
+a reference keeps the KV resident after the original request finishes.
+``alloc_prefill(..., shared_full=, shared_len=)`` maps an already-cached
+prefix into a new lane's table instead of allocating fresh pages for it.
+The invariant "never write into a page another holder can still read"
+is enforced by **copy-on-write**: any write path about to touch a page
+with refcount > 1 (the tail of a partially-shared page at admission, or
+a decode write into a page the prefix index pinned) first repoints the
+lane's table row at a fresh page and records a ``(src, dst)`` pair in
+``pending_copies``; the engine materializes those as page-granular device
+copies via ``apply_pending(cache)`` before its next dispatch.  Bookkeeping
+(table rows, refcounts) commits immediately — only the bulk KV copy is
+deferred to batch with the dispatch.
 """
 from __future__ import annotations
 
@@ -77,6 +94,7 @@ class PagedKVPool:
         lookahead: int = 1,
         mesh=None,
         kv_shard: str = "seq",
+        quant: bool = False,
     ):
         shards = 1
         if mesh is not None:
@@ -84,7 +102,7 @@ class PagedKVPool:
             shards = int(sizes.get("model", 1))
         self.layout: PagedLayout = paged_layout_for(
             model.cfg, max_len, page_size=page_size, num_pages=num_pages,
-            lookahead=lookahead, shards=shards,
+            lookahead=lookahead, shards=shards, quant=quant,
         )
         self.mesh = mesh
         self.kv_shard = kv_shard
@@ -116,7 +134,16 @@ class PagedKVPool:
         self._win_pages: list[dict[int, int]] = [dict() for _ in range(max_batch)]
         self._dirty_lanes: set[int] = set(range(max_batch))
         self._dev_tables: Optional[dict] = None
+        # page refcounts: 0 = free, 1 = privately owned, >1 = shared (a
+        # lane plus the prefix index and/or other lanes).  used/free page
+        # accounting is unchanged — a page is "used" while its count > 0.
+        self._ref = np.zeros(num_pages, np.int32)
+        # (src, dst) page pairs whose bulk KV copy is still pending; the
+        # engine drains these via apply_pending(cache) before dispatching.
+        # Each pending src holds one extra ref until the copy lands.
+        self.pending_copies: list[tuple[int, int]] = []
         self.evicted_pages = 0  # whole pages freed by window sliding
+        self.cow_copies = 0  # copy-on-write page forks
         # sync accounting (serve_bench host-overhead reporting)
         self.table_full_uploads = 0  # whole-table device uploads
         self.table_row_syncs = 0  # dirty rows scattered incrementally
@@ -131,6 +158,11 @@ class PagedKVPool:
     @property
     def used_pages(self) -> int:
         return self.layout.num_pages - len(self._free)
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages currently held by more than one reference."""
+        return int((self._ref > 1).sum())
 
     def _win_span_pages(self, length: int) -> int:
         """Distinct pages covering the live window of a length-`length` seq."""
@@ -172,25 +204,92 @@ class PagedKVPool:
 
     # -- allocation ----------------------------------------------------------
 
-    def can_admit(self, prompt_len: int) -> bool:
-        return self.prefill_pages(prompt_len) <= len(self._free)
+    def can_admit(self, prompt_len: int, shared_len: int = 0) -> bool:
+        return self.fresh_prefill_pages(prompt_len, shared_len) <= len(self._free)
+
+    def fresh_prefill_pages(self, prompt_len: int, shared_len: int = 0) -> int:
+        """Fresh pages an admission needs when the first ``shared_len``
+        prompt tokens are already backed by cached pages.  A mid-page
+        shared boundary costs one extra page: the shared partial page is
+        copy-on-write forked so the lane can write its tail."""
+        if shared_len <= 0:
+            return self.prefill_pages(prompt_len)
+        ps = self.layout.page_size
+        n_shared = cdiv(shared_len, ps)
+        cow = 1 if shared_len % ps else 0
+        return self.prefill_pages(prompt_len) - n_shared + cow
 
     def _take(self) -> int:
-        return self._free.pop()
+        pid = self._free.pop()
+        self._ref[pid] = 1
+        return pid
 
-    def alloc_prefill(self, lane: int, prompt_len: int) -> bool:
+    def add_ref(self, pid: int) -> None:
+        """Pin a live page (prefix index / shared-prefix admission)."""
+        assert self._ref[pid] > 0, f"add_ref on free page {pid}"
+        self._ref[pid] += 1
+
+    def decref(self, pid: int) -> None:
+        """Drop one reference; the page frees when the count hits zero."""
+        assert self._ref[pid] > 0, f"decref on free page {pid}"
+        self._ref[pid] -= 1
+        if self._ref[pid] == 0:
+            self._free.append(pid)
+
+    def _cow_full(self, lane: int, pg: int) -> None:
+        """Fork a shared full-table page the lane is about to write: map a
+        fresh page in its place and queue the page-granular device copy.
+        The source keeps one extra ref until ``apply_pending`` lands the
+        copy (so it cannot be reallocated and overwritten first)."""
+        src = self._full_pages[lane][pg]
+        dst = self._take()
+        self._ref[src] += 1  # pending-copy pin
+        self.pending_copies.append((src, dst))
+        self.cow_copies += 1
+        self._full_pages[lane][pg] = dst
+        self._pt_full[lane, pg] = dst
+        self._dirty_lanes.add(lane)
+        self.decref(src)  # the lane's own claim moves to dst
+
+    def alloc_prefill(
+        self,
+        lane: int,
+        prompt_len: int,
+        shared_full: tuple[int, ...] = (),
+        shared_len: int = 0,
+    ) -> bool:
         """Map every page the prompt's cache entries land in, plus the page
         backing the first decode write at ``prompt_len``; False if short.
+
+        ``shared_full`` maps already-cached pages (from the engine's prefix
+        index) at logical full-table pages ``0..len(shared_full)-1`` —
+        each gains a reference instead of coming off the free list, and
+        only the uncached tail allocates fresh pages.  ``shared_len`` is
+        the token length the shared pages cover; when it ends mid-page the
+        last shared page is copy-on-write forked (the lane's tail prefill
+        writes into it).  Shared prefixes require a full (append-only)
+        table — windowed layouts evict pages, so the engine never offers
+        them a shared prefix.
 
         No window eviction happens here: the prefill still scatters into
         the oldest window page, so it must stay mapped until the first
         ``ensure_steps`` (whose eviction runs after the prefill wrote)."""
-        if self.prefill_pages(prompt_len) > len(self._free):
+        assert not shared_full or (self.layout.has_full and not self.layout.win)
+        assert shared_len < prompt_len or not shared_full
+        if self.fresh_prefill_pages(prompt_len, shared_len) > len(self._free):
             return False
         lo, ps = self.layout, self.layout.page_size
         next_pg = prompt_len // ps  # page of the first decode write
         if lo.has_full:
+            for pg, pid in enumerate(shared_full):
+                self.add_ref(pid)
+                self._full_pages[lane][pg] = pid
+                self._pt_full[lane, pg] = pid
+            if shared_full and shared_len % ps:
+                self._cow_full(lane, len(shared_full) - 1)
             for pg in range(cdiv(prompt_len, ps)):
+                if pg in self._full_pages[lane]:
+                    continue
                 pid = self._take()
                 self._full_pages[lane][pg] = pid
                 self._pt_full[lane, pg] = pid
@@ -210,6 +309,19 @@ class PagedKVPool:
                 self._pt_win[lane, next_pg % lo.pages_win] = pid
         self._dirty_lanes.add(lane)
         return True
+
+    def prompt_pages(
+        self, lane: int, length: int
+    ) -> tuple[list[int], Optional[int]]:
+        """The full-table pages backing a lane's first ``length`` cached
+        tokens, for prefix-index insertion: ``(complete_page_ids,
+        partial_tail_id)`` where the tail id (None when ``length`` is
+        page-aligned) holds only ``length % page_size`` valid tokens."""
+        ps = self.layout.page_size
+        n_full = length // ps
+        full = [self._full_pages[lane][pg] for pg in range(n_full)]
+        tail = self._full_pages[lane].get(n_full) if length % ps else None
+        return full, tail
 
     def ensure_steps(self, lane: int, pos: int, k: int = 1) -> bool:
         """Back the next ``k`` decode writes at ``pos..pos+k-1``; False =
@@ -232,11 +344,23 @@ class PagedKVPool:
         need_full = [
             pg for pg in pages if lo.has_full and pg not in self._full_pages[lane]
         ]
+        # mapped pages the dispatch will write that another holder (the
+        # prefix index, or a forked lane) can still read: copy-on-write
+        # them, which costs one fresh page each
+        cow_full = [
+            pg
+            for pg in pages
+            if lo.has_full
+            and pg in self._full_pages[lane]
+            and self._ref[self._full_pages[lane][pg]] > 1
+        ]
         need_win = [
             pg for pg in pages if lo.win and pg not in self._win_pages[lane]
         ]
-        if len(need_full) + len(need_win) > len(self._free):
+        if len(need_full) + len(cow_full) + len(need_win) > len(self._free):
             return False
+        for pg in cow_full:
+            self._cow_full(lane, pg)
         for pg in need_full:
             pid = self._take()
             self._full_pages[lane][pg] = pid
@@ -249,8 +373,12 @@ class PagedKVPool:
             self._dirty_lanes.add(lane)
         return True
 
-    # back-compat alias (PR-2/3 call sites and tests)
     def ensure_step(self, lane: int, pos: int) -> bool:
+        """Deprecated PR-2/3 alias — call ``ensure_steps(lane, pos, 1)``.
+
+        Kept only so external callers written against the PR-2/3 pool keep
+        importing; new code (and the K-step fused dispatch) must reserve
+        all K writes at once via ``ensure_steps``."""
         return self.ensure_steps(lane, pos, 1)
 
     def _evict_win(self, lane: int, pos: int) -> None:
@@ -259,24 +387,84 @@ class PagedKVPool:
         expired = [pg for pg in self._win_pages[lane] if (pg + 1) * ps - 1 < start]
         for pg in expired:
             pid = self._win_pages[lane].pop(pg)
-            self._free.append(pid)
+            self.decref(pid)
             self.evicted_pages += 1
             if self._pt_win[lane, pg % lo.pages_win] == pid:
                 self._pt_win[lane, pg % lo.pages_win] = lo.sentinel
             self._dirty_lanes.add(lane)
 
     def release(self, lane: int) -> None:
-        """Free every page a lane holds (request finished or preempted)."""
+        """Drop the lane's reference on every page it holds (request
+        finished or preempted).  Pages the prefix index (or a forked lane)
+        still references stay resident; privately-held pages free."""
         for pg, pid in self._full_pages[lane].items():
-            self._free.append(pid)
+            self.decref(pid)
         for pg, pid in self._win_pages[lane].items():
-            self._free.append(pid)
+            self.decref(pid)
         if self._full_pages[lane] or self._win_pages[lane]:
             self._dirty_lanes.add(lane)
         self._full_pages[lane] = {}
         self._win_pages[lane] = {}
         self._pt_full[lane, :] = self.layout.sentinel
         self._pt_win[lane, :] = self.layout.sentinel
+
+    # -- copy-on-write materialization ---------------------------------------
+
+    _POOL_LEAVES = ("k", "v", "ckv", "krope")
+
+    def apply_pending(self, cache: dict) -> dict:
+        """Materialize queued copy-on-write forks as page-granular device
+        copies on ``cache`` and return the updated tree.
+
+        Must run on the *live* cache (the engine re-binds its tree from
+        every donated executable, so the pool's own ``self.cache`` handle
+        goes stale) before any dispatch that could write a forked page.
+        Every paged pool leaf — KV arrays and their quantization scales —
+        copies rows ``src → dst`` in one batched gather/scatter; chained
+        pairs (a dst later re-forked as a src) fall back to per-pair order.
+        Sources drop their pending pin afterwards, freeing any whose last
+        reader was the fork itself."""
+        if not self.pending_copies:
+            return cache
+        pairs = self.pending_copies
+        self.pending_copies = []
+        srcs = [s for s, _ in pairs]
+        dsts = [d for _, d in pairs]
+        chained = bool(set(srcs) & set(dsts))
+        batches = [(s, d) for s, d in pairs] if chained else [(srcs, dsts)]
+
+        def copy_rows(arr, stacked):
+            for s, d in batches:
+                si, di = jnp.asarray(s), jnp.asarray(d)
+                arr = (
+                    arr.at[:, di].set(arr[:, si])
+                    if stacked
+                    else arr.at[di].set(arr[si])
+                )
+            return arr
+
+        def walk(node, shd, stacked):
+            out = {}
+            for name, v in node.items():
+                if isinstance(v, dict):
+                    sub = shd.get(name) if isinstance(shd, dict) else None
+                    out[name] = walk(v, sub, stacked or name == "body")
+                elif (
+                    name in self._POOL_LEAVES or name.endswith("_scale")
+                ) and hasattr(v, "ndim"):
+                    nv = copy_rows(v, stacked)
+                    if isinstance(shd, dict) and name in shd:
+                        # eager scatters may drop the NamedSharding; re-pin
+                        nv = jax.device_put(nv, shd[name])
+                    out[name] = nv
+                else:
+                    out[name] = v
+            return out
+
+        cache = walk(cache, self.cache_shardings, False)
+        for s in srcs:
+            self.decref(s)
+        return cache
 
     # -- device view ---------------------------------------------------------
 

@@ -202,9 +202,9 @@ def test_kv_pool_alloc_ensure_release_accounting():
     assert pool.free_pages == 10
     assert pool.alloc_prefill(0, 5)  # positions 0..4 -> pages 0..2
     assert pool.used_pages == 3
-    assert pool.ensure_step(0, 5)  # page 2 already mapped
+    assert pool.ensure_steps(0, 5)  # page 2 already mapped
     assert pool.used_pages == 3
-    assert pool.ensure_step(0, 6)  # crosses into page 3
+    assert pool.ensure_steps(0, 6)  # crosses into page 3
     assert pool.used_pages == 4
     assert pool.alloc_prefill(1, 5)
     assert pool.used_pages == 7
@@ -224,7 +224,7 @@ def test_kv_pool_window_eviction_frees_whole_pages():
     assert pool.used_pages == 3
     before = pool.used_pages
     for pos in range(10, 30):
-        assert pool.ensure_step(0, pos)
+        assert pool.ensure_steps(0, pos)
     # live window spans <= pages_win pages; everything older was evicted
     assert pool.used_pages <= pool.layout.pages_win
     assert pool.evicted_pages > 0

@@ -1,0 +1,459 @@
+"""Prefix caching: refcounted shared pages, COW forks, radix index, int8 KV.
+
+Load-bearing guarantees of the PR-7 serving stack:
+
+1. **Pool conservation** — under randomized churn (admissions, shared-
+   prefix admissions, decode growth with COW forks, preemptive releases)
+   ``free + used == num_pages`` holds at every step, every mapped page
+   carries a reference, and after everything releases the pool is byte-
+   for-byte empty (zero leaks, all refcounts zero).
+2. **Fork ≡ cold** — a prefix-hit admission (pages mapped from the radix
+   index, only the tail prefilled) produces the *same greedy stream* as a
+   cold admission of the identical prompt, for full attention and MLA,
+   single-device and on a (2, 4) mesh.
+3. **int8 pages** — per-(page, slot) symmetric int8 with f16-stored /
+   f32-compute scales: kernel outputs match fp pages to quantization
+   tolerance, streams keep the same finish profile (stop decisions and
+   lengths never change), and int8 fork-vs-cold parity is bit-exact
+   (same codes written ⇒ same codes read).
+4. **Oracle** — ``paged_attn_ref`` (dense gather + one softmax) agrees
+   with the XLA gathered route and the Pallas kernel (interpret) on both
+   fp and int8 pages.
+"""
+import random
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.configs import get_config
+from repro.kernels.paged_attn import paged_attn_pallas, paged_attn_xla
+from repro.kernels.ref import paged_attn_ref
+from repro.launch.mesh import make_local_mesh
+from repro.models.cache import PagedLayout
+from repro.serving import DecodeEngine, PagedKVPool, SamplingParams
+from repro.serving.prefix_cache import PrefixIndex
+from repro.models.model import TransformerLM
+from repro.sparse_infer import compress_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+N_DEV = len(jax.devices())
+needs8 = pytest.mark.skipif(
+    N_DEV < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+def _compressed(arch: str, seed=0):
+    cfg = get_config(arch, smoke=True)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    recipe = core.make_recipe(
+        "step", core.SparsityConfig(default=core.NMSparsity(2, 4))
+    )
+    return cfg, model, compress_params(recipe.export_sparse(params), recipe.sparsity)
+
+
+def _rand_prompt(seed, n, vocab):
+    return [int(t) for t in jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, vocab)]
+
+
+def _waves(eng, waves):
+    """Submit + drain wave by wave (so later waves can hit pages the
+    earlier waves indexed); returns ([tokens...], [finish_reason...])."""
+    toks, reasons = [], []
+    for prompts, sps in waves:
+        uids = [eng.submit(p, sp) for p, sp in zip(prompts, sps)]
+        res = eng.run()
+        toks += [res[u].tokens for u in uids]
+        reasons += [res[u].finish_reason for u in uids]
+    return toks, reasons
+
+
+def _shared_waves(cfg, head_len=12, tails=(3, 5, 2), gen=5, seed=500):
+    """Wave 1 = one cold prompt; wave 2 = len(tails)-1 prompts sharing its
+    head.  All greedy."""
+    head = _rand_prompt(seed, head_len, cfg.vocab)
+    prompts = [head + _rand_prompt(seed + 1 + i, t, cfg.vocab)
+               for i, t in enumerate(tails)]
+    sp = SamplingParams(max_new_tokens=gen)
+    return [([prompts[0]], [sp]), (prompts[1:], [sp] * (len(prompts) - 1))]
+
+
+# ---------------------------------------------------------------------------
+# pool conservation under randomized churn
+# ---------------------------------------------------------------------------
+
+
+def _check_conserved(pool):
+    n = pool.layout.num_pages
+    assert pool.free_pages + pool.used_pages == n
+    assert pool.used_pages == int((pool._ref > 0).sum())
+    assert pool.shared_pages == int((pool._ref > 1).sum())
+    for lane_map in pool._full_pages:
+        for pid in lane_map.values():
+            assert pool._ref[pid] > 0, f"mapped page {pid} has no reference"
+
+
+def test_pool_conservation_random_churn():
+    """300 random ops — admissions (some forking a live lane's prefix),
+    decode growth (COW on shared pages), preemptive releases, periodic
+    pending-copy drains — never break ``free + used == num_pages``; at
+    the end the pool is fully free with every refcount at zero."""
+    _, model, _ = _compressed("gpt2-paper")
+    pool = PagedKVPool(model, max_batch=4, max_len=32, num_pages=24, page_size=4)
+    rng = random.Random(7)
+    lens: dict[int, int] = {}  # lane -> cached length (next write pos)
+
+    for _ in range(300):
+        op = rng.random()
+        idle = [l for l in range(pool.max_batch) if l not in lens]
+        live = sorted(lens)
+        if op < 0.40 and idle:
+            lane = rng.choice(idle)
+            plen = rng.randint(2, 16)
+            shared, shared_len = (), 0
+            donors = [l for l in live if lens[l] >= 2]
+            if donors and rng.random() < 0.6:
+                d = rng.choice(donors)
+                shared_len = rng.randint(1, min(lens[d], plen) - 1)
+                full, tail = pool.prompt_pages(d, shared_len)
+                shared = tuple(full + ([tail] if tail is not None else []))
+            if pool.alloc_prefill(lane, plen, shared_full=shared,
+                                  shared_len=shared_len):
+                lens[lane] = plen
+        elif op < 0.75 and live:
+            lane = rng.choice(live)
+            k = rng.randint(1, 3)
+            if lens[lane] + k > pool.max_len:
+                pool.release(lane)
+                del lens[lane]
+            elif pool.ensure_steps(lane, lens[lane], k):
+                lens[lane] += k
+            else:  # pool full: all-or-nothing, preempt the lane
+                pool.release(lane)
+                del lens[lane]
+        elif op < 0.9 and live:
+            lane = rng.choice(live)
+            pool.release(lane)
+            del lens[lane]
+        elif pool.pending_copies:
+            pool.cache = pool.apply_pending(pool.cache)
+            assert not pool.pending_copies
+        _check_conserved(pool)
+
+    for lane in list(lens):
+        pool.release(lane)
+    pool.cache = pool.apply_pending(pool.cache)
+    assert pool.free_pages == pool.layout.num_pages
+    assert pool.used_pages == 0
+    assert (pool._ref == 0).all()
+    assert pool.cow_copies > 0  # the churn actually exercised COW
+
+
+def test_cow_pins_source_until_copy_lands():
+    """A forked page's source stays allocated (pending-copy pin) until
+    ``apply_pending`` materializes the copy — even if every other holder
+    releases first."""
+    _, model, _ = _compressed("gpt2-paper")
+    pool = PagedKVPool(model, max_batch=2, max_len=32, num_pages=12, page_size=4)
+    assert pool.alloc_prefill(0, 8)  # pages 0..1 + decode page
+    full, _ = pool.prompt_pages(0, 6)  # 1 full page + mid-page boundary
+    assert pool.alloc_prefill(1, 9, shared_full=tuple(
+        full + [pool._full_pages[0][1]]), shared_len=6)
+    assert pool.cow_copies == 1 and len(pool.pending_copies) == 1
+    src, dst = pool.pending_copies[0]
+    pool.release(0)
+    pool.release(1)
+    assert pool._ref[src] == 1  # only the pending pin keeps it alive
+    pool.cache = pool.apply_pending(pool.cache)
+    assert pool._ref[src] == 0 and pool._ref[dst] == 0
+    assert pool.free_pages == pool.layout.num_pages
+
+
+# ---------------------------------------------------------------------------
+# radix index semantics
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_index_match_insert_evict():
+    _, model, _ = _compressed("gpt2-paper")
+    pool = PagedKVPool(model, max_batch=2, max_len=32, num_pages=16, page_size=4)
+    idx = PrefixIndex(pool, 4)
+    prompt = list(range(10))  # 2 full pages + a 2-token tail
+    assert pool.alloc_prefill(0, 10)
+    full, tail = pool.prompt_pages(0, 10)
+    idx.insert(prompt, full, tail, 2)
+    assert idx.pages == 3  # 2 full + 1 partial, each holding a pool ref
+    assert all(pool._ref[p] == 2 for p in full)
+
+    # exact full-page + partial match (capped at len-1 so the tail's 2nd
+    # token can never be the whole remaining prompt)
+    m, pids = idx.match(prompt + [99])
+    assert m == 10 and list(pids) == full + [tail]
+    # diverging second page: only the first full page matches
+    m, pids = idx.match(list(range(4)) + [77, 78, 79, 80, 81])
+    assert m == 4 and list(pids) == full[:1]
+    # the cap: matching may cover at most len(prompt) - 1 tokens
+    m, _ = idx.match(list(range(8)))
+    assert m == 4
+    # no match at all
+    m, pids = idx.match([55, 56, 57, 58, 59])
+    assert (m, pids) == (0, ())
+
+    # duplicate insert is a no-op (first entry keeps its single ref)
+    idx.insert(prompt, full, tail, 2)
+    assert idx.pages == 3 and all(pool._ref[p] == 2 for p in full)
+
+    # release the producing lane; indexed pages stay resident
+    pool.release(0)
+    assert all(pool._ref[p] == 1 for p in full)
+    used = pool.used_pages
+    freed = idx.evict(used)
+    assert freed == used and idx.pages == 0
+    assert pool.free_pages == pool.layout.num_pages
+    m, pids = idx.match(prompt + [99])
+    assert (m, pids) == (0, ())
+
+
+def test_prefix_index_partial_dominated_by_longer():
+    """Inserting a longer partial for the same node evicts the shorter one
+    it extends (single ref moves over, no leak)."""
+    _, model, _ = _compressed("gpt2-paper")
+    pool = PagedKVPool(model, max_batch=2, max_len=32, num_pages=16, page_size=4)
+    idx = PrefixIndex(pool, 4)
+    assert pool.alloc_prefill(0, 2)
+    _, t0 = pool.prompt_pages(0, 2)
+    idx.insert([1, 2], [], t0, 2)
+    assert pool.alloc_prefill(1, 3)
+    _, t1 = pool.prompt_pages(1, 3)
+    idx.insert([1, 2, 3], [], t1, 3)
+    assert idx.pages == 1  # the 3-token partial dominated the 2-token one
+    m, pids = idx.match([1, 2, 3, 9])
+    assert m == 3 and pids == (t1,)
+    pool.release(0)
+    pool.release(1)
+    idx.clear()
+    assert pool.free_pages == pool.layout.num_pages
+
+
+# ---------------------------------------------------------------------------
+# fork ≡ cold: engine-level stream parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,ps", [("gpt2-paper", 4), ("deepseek-v2-lite-16b", 4)])
+def test_prefix_hit_stream_matches_cold(arch, ps):
+    """Wave 2 shares wave 1's 12-token head: with the index on it admits
+    via mapped pages + tail chunk-prefill, and its greedy streams are
+    bit-identical to the index-off engine's; afterwards clearing the
+    index leaves zero pages behind."""
+    cfg, model, comp = _compressed(arch)
+    waves = _shared_waves(cfg)
+    kw = dict(max_batch=2, max_len=32, num_pages=32, page_size=ps, seed=3)
+    cold = _waves(DecodeEngine(model, comp, **kw), waves)
+    eng = DecodeEngine(model, comp, prefix_cache=True, **kw)
+    warm = _waves(eng, waves)
+    assert warm == cold
+    assert eng.prefix_hits == 2  # both wave-2 requests reused the head
+    assert eng.prefix_hit_tokens == 2 * 12
+    st = eng.stats()
+    assert st["prefix_hits"] == 2 and st["cow_copies"] == eng.pool.cow_copies
+    # zero leaks: all lanes done, so the index holds every live page
+    eng._prefix.clear()
+    assert eng.pool.free_pages == eng.pool.layout.num_pages
+    assert (eng.pool._ref == 0).all()
+
+
+def test_prefix_hit_parity_with_chunked_prefill_and_k_steps():
+    """Prefix cache composes with the fused-decode / chunked-prefill
+    engine configuration (the hit tail drains through the same chunk
+    lane)."""
+    cfg, model, comp = _compressed("gpt2-paper")
+    waves = _shared_waves(cfg, head_len=11, tails=(4, 6), gen=4)
+    kw = dict(max_batch=2, max_len=32, num_pages=32, page_size=4, seed=0,
+              steps_per_dispatch=4, prefill_chunk=4)
+    cold = _waves(DecodeEngine(model, comp, **kw), waves)
+    eng = DecodeEngine(model, comp, prefix_cache=True, **kw)
+    assert _waves(eng, waves) == cold
+    assert eng.prefix_hits == 1
+
+
+def test_prefix_cache_refused_without_full_table():
+    """Windowed layouts evict pages, so the engine warns and disables the
+    index instead of serving stale prefixes."""
+    cfg, model, comp = _compressed("recurrentgemma-9b")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        eng = DecodeEngine(
+            model, comp, max_batch=1, max_len=24, num_pages=16, page_size=4,
+            prefix_cache=True,
+        )
+    assert eng._prefix is None
+    assert any("prefix" in str(x.message).lower() for x in w)
+    # slab engines (no pool at all) get the same guard
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        slab = DecodeEngine(model, comp, max_batch=1, max_len=24,
+                            prefix_cache=True)
+    assert slab._prefix is None
+    assert any("prefix" in str(x.message).lower() for x in w)
+
+
+@needs8
+def test_prefix_hit_stream_matches_cold_on_mesh():
+    """Fork ≡ cold holds on a (2, 4) mesh (sharded pool, shard_map or
+    gathered kernel route underneath)."""
+    cfg, model, comp = _compressed("gpt2-paper")
+    mesh = make_local_mesh(4, data=2)
+    waves = _shared_waves(cfg)
+    kw = dict(max_batch=2, max_len=32, num_pages=32, page_size=4, seed=3)
+    cold = _waves(DecodeEngine(model, comp, **kw), waves)
+    eng = DecodeEngine(model, comp, mesh=mesh, prefix_cache=True, **kw)
+    assert _waves(eng, waves) == cold
+    assert eng.prefix_hits == 2
+
+
+# ---------------------------------------------------------------------------
+# int8 KV pages
+# ---------------------------------------------------------------------------
+
+
+def test_quant_roundtrip_error_bound():
+    """Per-token absmax int8 with the f16 scale round-trip: stored scales
+    are f16, codes never overflow (the f16-rounded scale is within 5e-4
+    relative, far under the 1/254 that could push |code| past 127), and
+    the reconstruction error is <= scale/2 elementwise."""
+    lo = PagedLayout(page_size=4, num_pages=8, max_len=32, quant=True)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 4, 2, 16)) * 3.0
+    q, s = lo._quant(x, 2)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float16
+    assert s.shape == (8, 4)
+    assert int(jnp.max(jnp.abs(q))) <= 127
+    xr = lo.dequant(q, s)
+    err = np.abs(np.asarray(xr) - np.asarray(x, np.float32))
+    bound = 0.5 * np.asarray(s, np.float32)[..., None, None] + 1e-6
+    assert (err <= bound).all()
+    # all-zero tokens stay exactly zero (clamp floor, no NaN/Inf)
+    q0, s0 = lo._quant(jnp.zeros((2, 4, 2, 16)), 2)
+    assert (np.asarray(lo.dequant(q0, s0)) == 0).all()
+
+
+def test_int8_kernel_matches_fp_within_tolerance():
+    """Quantize fp pages, run the gathered XLA route with scales: output
+    stays within int8 quantization tolerance of the fp-page output, and
+    the Pallas kernel (interpret) agrees with the XLA route on the same
+    int8 operands to fp32 accuracy."""
+    b, hkv, g, d, ps, num_pages, n_slots = 3, 2, 2, 16, 4, 10, 4
+    lengths = jnp.asarray([3, 9, 14], jnp.int32)
+    lo = PagedLayout(page_size=ps, num_pages=num_pages, max_len=16, quant=True)
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, hkv, g, d))
+    k_pages = jax.random.normal(jax.random.PRNGKey(1), (num_pages, ps, hkv, d))
+    v_pages = jax.random.normal(jax.random.PRNGKey(2), (num_pages, ps, hkv, d))
+    t = np.full((b, n_slots), num_pages, np.int32)
+    nxt = 0
+    for i, ln in enumerate([3, 9, 14]):
+        for pg in range(-(-ln // ps)):
+            t[i, pg] = nxt
+            nxt += 1
+    tables = jnp.asarray(t)
+    scale = d ** -0.5
+    kq, ks = lo._quant(k_pages, 2)
+    vq, vs = lo._quant(v_pages, 2)
+
+    y_fp = paged_attn_xla(q, k_pages, v_pages, tables, lengths, scale=scale)
+    y_q = paged_attn_xla(
+        q, kq, vq, tables, lengths, scale=scale, k_scale=ks, v_scale=vs
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_q), np.asarray(y_fp), atol=5e-2, rtol=5e-2
+    )
+    y_pl = paged_attn_pallas(
+        q, kq, vq, tables, lengths, scale=scale, k_scale=ks, v_scale=vs,
+        interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_pl), np.asarray(y_q), atol=1e-5, rtol=1e-5
+    )
+    # and both agree with the dense oracle on the identical int8 operands
+    y_ref = paged_attn_ref(
+        q, kq, vq, tables, lengths, scale=scale, k_scale=ks, v_scale=vs
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_q), np.asarray(y_ref), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_paged_attn_ref_oracle_fp():
+    """fp pages: XLA gathered route and Pallas interpret both match the
+    dense gather-everything oracle."""
+    b, hkv, g, d, ps, num_pages, n_slots = 4, 2, 3, 16, 4, 12, 6
+    lengths = jnp.asarray([1, 7, 21, 0], jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, hkv, g, d))
+    k_pages = jax.random.normal(jax.random.PRNGKey(1), (num_pages, ps, hkv, d))
+    v_pages = jax.random.normal(jax.random.PRNGKey(2), (num_pages, ps, hkv, d))
+    t = np.full((b, n_slots), num_pages, np.int32)
+    nxt = 0
+    for i, ln in enumerate([1, 7, 21, 0]):
+        for pg in range(-(-ln // ps)):
+            t[i, pg] = nxt % num_pages
+            nxt += 1
+    tables = jnp.asarray(t)
+    scale = d ** -0.5
+    y_ref = paged_attn_ref(q, k_pages, v_pages, tables, lengths, scale=scale)
+    y_x = paged_attn_xla(q, k_pages, v_pages, tables, lengths, scale=scale)
+    y_k = paged_attn_pallas(
+        q, k_pages, v_pages, tables, lengths, scale=scale, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_ref), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), atol=1e-5, rtol=1e-5)
+    assert float(jnp.max(jnp.abs(y_ref[3]))) == 0.0  # idle lane exact zeros
+
+
+@pytest.mark.parametrize("arch", ["gpt2-paper", "deepseek-v2-lite-16b"])
+def test_int8_stream_same_finish_profile(arch):
+    """int8 pages may perturb near-tie greedy picks on untrained weights,
+    but the finish *profile* — reasons and lengths — must match fp, and
+    the per-request first chunk of tokens tracks fp closely."""
+    cfg, model, comp = _compressed(arch)
+    prompts = [_rand_prompt(700 + r, 5 + 2 * r, cfg.vocab) for r in range(3)]
+    sps = [SamplingParams(max_new_tokens=6)] * 3
+    kw = dict(max_batch=2, max_len=32, num_pages=32, page_size=4, seed=0)
+
+    def run(quant):
+        eng = DecodeEngine(model, comp, kv_quant=quant, **kw)
+        uids = [eng.submit(p, sp) for p, sp in zip(prompts, sps)]
+        res = eng.run()
+        return [(len(res[u].tokens), res[u].finish_reason) for u in uids]
+
+    assert run(True) == run(False)
+
+
+def test_int8_fork_vs_cold_bit_exact():
+    """Within int8, a prefix hit is bit-exact vs cold: the hit lane reads
+    the very codes the cold lane would have written (same inputs ⇒ same
+    quantization), so determinism survives quantization."""
+    cfg, model, comp = _compressed("gpt2-paper")
+    waves = _shared_waves(cfg, seed=900)
+    kw = dict(max_batch=2, max_len=32, num_pages=32, page_size=4, seed=3,
+              kv_quant=True)
+    cold = _waves(DecodeEngine(model, comp, **kw), waves)
+    eng = DecodeEngine(model, comp, prefix_cache=True, **kw)
+    assert _waves(eng, waves) == cold
+    assert eng.prefix_hits == 2
+    assert eng.pool.layout.quant
+
+
+def test_engine_rejects_quant_mismatch():
+    """Handing the engine a pre-built fp pool while asking kv_quant=True
+    must fail loudly (silent fp fallback would fake the HBM win)."""
+    _, model, comp = _compressed("gpt2-paper")
+    pool = PagedKVPool(model, max_batch=1, max_len=16, num_pages=8, page_size=4)
+    with pytest.raises(ValueError):
+        DecodeEngine(
+            model, comp, max_batch=1, max_len=16, kv_pool=pool, kv_quant=True
+        )
