@@ -104,7 +104,15 @@ SCHEMA_NOTE = {
         "prefix-cache PR onward, prefix_cache rows carry ttft_cold_ms / "
         "ttft_hit_ms / prefix_hit_rate, and kv_int8 rows compare admitted "
         "concurrency on a default-dtype vs int8 pool at the same KV HBM "
-        "byte budget (kv_cache_bytes / num_pages per variant)."
+        "byte budget (kv_cache_bytes / num_pages per variant). from the "
+        "device-scheduler PR onward, device_scheduler rows record the "
+        "run-until-stop while-loop engine (variant device | device_async): "
+        "host_syncs counts full-drain cycle boundaries (not dispatches), "
+        "host_syncs_per_token amortizes them over decode tokens, "
+        "us_per_decode_step_host_fixedk carries the best fixed-K sweep-3 "
+        "baseline for comparison, refills counts on-device lane swaps from "
+        "the staged ring, and itl_ms_p50/p99 are host-side inter-token "
+        "latencies."
     ),
 }
 
@@ -618,6 +626,7 @@ def run(
         k_prompts, gen,
     )
     parity_failures: list[int] = []
+    fixedk_st: dict = {}
     for k in steps_sweep:
         engine = DecodeEngine(
             model, comp, max_batch=k_batch, max_len=k_max_len,
@@ -659,6 +668,84 @@ def run(
                 "table_syncs": st["table_syncs"],
             }
         )
+        if k == max(steps_sweep):
+            fixedk_st = st
+
+    # -- sweep 3b: device-resident scheduler (run-until-stop + async) ----------
+    # Same workload as sweep 3, but the while-loop scheduler: the host only
+    # syncs at full-drain cycle boundaries (refill staging keeps lanes busy
+    # in between), and async double-buffers the token-block fetch.  Streams
+    # must stay bit-identical to the K=1 sync baseline; host µs/token must
+    # beat the best fixed-K dispatch above.
+    k_dev = max(steps_sweep)
+    for variant, kw in (
+        ("device", dict(max_steps_per_dispatch=k_dev)),
+        (
+            "device_async",
+            dict(
+                max_steps_per_dispatch=k_dev,
+                staged_lanes=k_batch,
+                async_stream=True,
+            ),
+        ),
+    ):
+        engine = DecodeEngine(
+            model, comp, max_batch=k_batch, max_len=k_max_len,
+            num_pages=k_pages, page_size=k_page_size, donate=True, **kw,
+        )
+        st, streams = _drain_streams(engine, k_prompts, gen)
+        parity = streams == base_streams
+        if not parity:
+            parity_failures.append(variant)
+        # one host sync should buy >> 1 token: amortized syncs per token
+        # lands well under the 1/(K*batch) a fixed-K dispatch pays
+        syncs_per_tok = (
+            st["host_syncs"] / st["decode_tokens"]
+            if st["decode_tokens"] else float("inf")
+        )
+        emit(
+            f"serve/{arch}/{n}:{m}/device_scheduler/{variant}",
+            st["ms_per_decode_step"] * 1e3,
+            f"host_us/tok={st['ms_per_decode_step_host'] * 1e3:.1f} "
+            f"syncs={st['host_syncs']} syncs/tok={syncs_per_tok:.4f} "
+            f"refills={st['refills']} itl_p50={st['itl_ms_p50']:.2f}ms "
+            f"itl_p99={st['itl_ms_p99']:.2f}ms parity={parity}",
+        )
+        records.append(
+            {
+                "suite": "serve",
+                "sweep": "device_scheduler",
+                "variant": variant,
+                "mesh": MESH_SINGLE,
+                "arch": arch,
+                "nm": f"{n}:{m}",
+                "mode": "compressed",
+                "layout": "paged",
+                "batch": k_batch,
+                "max_steps_per_dispatch": k_dev,
+                "staged_lanes": st["staged_lanes"],
+                "async_stream": st["async_stream"],
+                "donate": True,
+                "greedy_parity_with_k1": parity,
+                "us_per_decode_step": st["ms_per_decode_step"] * 1e3,
+                "us_per_decode_step_host": st["ms_per_decode_step_host"] * 1e3,
+                "us_per_decode_step_host_fixedk": (
+                    fixedk_st["ms_per_decode_step_host"] * 1e3
+                ),
+                "host_overhead_frac": st["host_overhead_frac"],
+                "host_syncs": st["host_syncs"],
+                "host_syncs_per_token": syncs_per_tok,
+                "cycles": st["cycles"],
+                "dispatches": st["dispatches"],
+                "block_fetches": st["block_fetches"],
+                "refills": st["refills"],
+                "itl_ms_p50": st["itl_ms_p50"],
+                "itl_ms_p99": st["itl_ms_p99"],
+                "decode_steps": st["decode_steps"],
+                "decode_tokens": st["decode_tokens"],
+                "tokens_per_s": st["tokens_per_s"],
+            }
+        )
 
     # -- sweep 4: sharded serving on an emulated 8-device CPU mesh -------------
     sharded_records, route_failures = _sharded_sweep(arch, nm, prompt_len, gen)
@@ -679,7 +766,8 @@ def run(
     # records (the greedy_parity_with_k1 / greedy_parity_across_routes
     # fields mark the offending rows)
     assert not parity_failures, (
-        f"fused decode diverged from the K=1 baseline at K={parity_failures}"
+        "fused/device-scheduler decode diverged from the K=1 baseline at "
+        f"{parity_failures}"
     )
     assert not route_failures, (
         f"xla vs shard_map kernel routes diverged: {route_failures}"

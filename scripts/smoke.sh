@@ -38,6 +38,21 @@ REPRO_KERNEL_MODE=xla python -m repro.launch.serve --arch gpt2-paper \
     --batch 2 --requests 3 --prompt-len 20 --gen 8 --paged --page-size 4 \
     --num-pages 32 --steps-per-dispatch 4 --prefill-chunk 8
 
+echo "== serve smoke (device scheduler: run-until-stop + refill + async) =="
+# more requests than lanes so frozen lanes refill from the staged ring
+# inside the dispatch; host_syncs must come in under the dispatch count
+python -m repro.launch.serve --arch gpt2-paper --batch 2 --requests 5 \
+    --prompt-len 8 --gen 10 --paged --page-size 4 --num-pages 48 \
+    --max-steps-per-dispatch 6 --staged-lanes 2 --async-stream \
+  | tail -1 | python -c '
+import json, sys
+s = json.loads(sys.stdin.read())["summary"]
+assert s["scheduler"] == "device", s
+assert s["refills"] > 0, s
+assert s["host_syncs"] < s["dispatches"], s
+print("host_syncs:", s["host_syncs"], "refills:", s["refills"])
+'
+
 echo "== serve smoke (prefix cache + int8 pages: shared head must hit) =="
 # batch=1 staggers the two admissions, so the second request's shared
 # 8-token head is already indexed — a zero hit rate means the radix

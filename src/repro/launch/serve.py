@@ -23,6 +23,14 @@ bit-identical across K), ``--prefill-chunk N`` absorbs long prompts in
 N-token chunks interleaved with decode dispatches, and ``--no-donate``
 disables cache-buffer donation (the copying A/B baseline).
 
+Device-resident scheduler: ``--max-steps-per-dispatch K`` replaces the
+fixed-K scan with a run-until-stop ``while_loop`` (the host is consulted
+only when a lane freezes or the bound is hit), ``--staged-lanes Q``
+pre-stages queued prompts on device so a frozen lane refills and starts
+prefilling inside the same dispatch, and ``--async-stream``
+double-buffers dispatches so token-block fetches overlap decode.
+Streams stay bit-identical to the sync scheduler.
+
 Paged-pool extensions: ``--prefix-cache`` indexes every prefilled prompt's
 pages in a radix trie and maps cached prefixes into later requests' tables
 (shared refcounted pages, copy-on-write on divergence; ``--shared-prefix N``
@@ -110,6 +118,18 @@ def main(argv=None) -> dict:
     ap.add_argument("--steps-per-dispatch", type=int, default=1,
                     help="decode steps fused into one on-device scan (the "
                          "host syncs once per K tokens)")
+    ap.add_argument("--max-steps-per-dispatch", type=int, default=None,
+                    help="device-resident scheduler: run-until-stop decode "
+                         "bounded by this many steps per dispatch (replaces "
+                         "the fixed-K scan; streams stay bit-identical)")
+    ap.add_argument("--staged-lanes", type=int, default=0,
+                    help="queued prompts pre-staged on device per cycle so "
+                         "frozen lanes refill inside the dispatch (needs "
+                         "--max-steps-per-dispatch)")
+    ap.add_argument("--async-stream", action="store_true",
+                    help="double-buffer decode dispatches: fetch dispatch "
+                         "N's tokens while N+1 runs (needs "
+                         "--max-steps-per-dispatch)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="absorb prompts longer than this in fixed-size "
                          "chunks interleaved with decode dispatches "
@@ -171,6 +191,9 @@ def main(argv=None) -> dict:
         num_pages=num_pages if args.paged else None,
         page_size=args.page_size,
         steps_per_dispatch=args.steps_per_dispatch,
+        max_steps_per_dispatch=args.max_steps_per_dispatch,
+        staged_lanes=args.staged_lanes,
+        async_stream=args.async_stream,
         donate=args.donate,
         prefill_chunk=args.prefill_chunk,
         prefill_buckets=buckets,
@@ -213,6 +236,11 @@ def main(argv=None) -> dict:
         "decode_steps": st["decode_steps"],
         "dispatches": st["dispatches"],
         "steps_per_dispatch": st["steps_per_dispatch"],
+        "scheduler": st["scheduler"],
+        "host_syncs": st["host_syncs"],
+        "refills": st["refills"],
+        "itl_ms_p50": st["itl_ms_p50"],
+        "itl_ms_p99": st["itl_ms_p99"],
         "prefill_batches": st["prefill_batches"],
         "prefill_chunks": st["prefill_chunks"],
         "max_concurrency": st["max_concurrency"],

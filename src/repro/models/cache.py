@@ -183,10 +183,11 @@ class SlabLayout:
     # ``i < lengths[r]`` land at positions ``starts[r] + i`` of lane
     # ``lanes[r]`` (a lane index >= the batch size marks a padding row and
     # drops).  Only non-windowed slabs support chunking (the engine gates
-    # chunked prefill off sliding-window archs).
+    # slab sliding-window archs off the chunked path; the paged layout
+    # chunks windowed layers through the modular table below).
 
     def attn_write_chunk(self, c: dict, k_rows, v_rows, lanes, starts,
-                         lengths, tables):
+                         lengths, tables, window=None):
         """k_rows/v_rows: (L, C, n_kv, hd); lanes/starts/lengths: (L,)."""
         s = c["k"].shape[1]
         i = jnp.arange(k_rows.shape[1])[None, :]  # (1, C)
@@ -521,27 +522,37 @@ class PagedLayout:
     # -- chunked-prefill writes / views ------------------------------------
     #
     # One prompt chunk per chunking lane, batched, through each lane's
-    # *full* (append-only) table row; the engine gates chunked prefill off
-    # sliding-window archs, so only the ``full`` table is involved.  All of
-    # a chunk's pages were mapped at admission (``alloc_prefill`` covers
-    # the whole prompt), so every valid row has a physical slot; pad rows
-    # (``i >= lengths[r]`` or a sentinel lane) route to the sentinel.
+    # table row.  Non-windowed layers chunk through the *full*
+    # (append-only) table: all of a chunk's pages were mapped at admission
+    # (``alloc_prefill`` covers the whole prompt), so every valid row has
+    # a physical slot.  Windowed layers chunk through the *modular* ``win``
+    # table: the engine maps each chunk's pages just before its dispatch
+    # (``ensure_steps(lane, start, csz)``, which also evicts pages wholly
+    # before ``start - win + 1``), so a chunk only ever needs
+    # ``win + csz - 1`` live positions — the exact span
+    # :meth:`attn_chunk_view_win` gathers.  Pad rows (``i >= lengths[r]``
+    # or a sentinel lane) route to the sentinel.
 
-    def _chunk_write_idx(self, lanes, starts, lengths, csz, tables):
+    def _chunk_write_idx(self, lanes, starts, lengths, csz, tables,
+                         window=None):
         ps = self.page_size
         i = jnp.arange(csz)[None, :]  # (1, C)
         pos = starts[:, None] + i  # (L, C)
-        rows = jnp.take(tables["full"], lanes, axis=0, mode="clip")
-        phys = jnp.take_along_axis(
-            rows, jnp.clip(pos // ps, 0, self.pages_full - 1), axis=1
-        )  # (L, C)
-        valid = (i < lengths[:, None]) & (lanes < tables["full"].shape[0])[:, None]
+        if self._windowed(window):
+            pt = tables["win"]
+            tslot = (pos // ps) % self.pages_win
+        else:
+            pt = tables["full"]
+            tslot = jnp.clip(pos // ps, 0, self.pages_full - 1)
+        rows = jnp.take(pt, lanes, axis=0, mode="clip")
+        phys = jnp.take_along_axis(rows, tslot, axis=1)  # (L, C)
+        valid = (i < lengths[:, None]) & (lanes < pt.shape[0])[:, None]
         return jnp.where(valid, phys * ps + pos % ps, self.num_pages * ps)
 
     def attn_write_chunk(self, c: dict, k_rows, v_rows, lanes, starts,
-                         lengths, tables):
+                         lengths, tables, window=None):
         widx = self._chunk_write_idx(
-            lanes, starts, lengths, k_rows.shape[1], tables
+            lanes, starts, lengths, k_rows.shape[1], tables, window
         ).reshape(-1)
         return self._scatter(
             c,
@@ -572,6 +583,44 @@ class PagedLayout:
             self._chunk_view(c, "k", lanes, tables),
             self._chunk_view(c, "v", lanes, tables),
         )
+
+    def attn_chunk_view_win(self, c: dict, lanes, starts, csz: int,
+                            window: int, tables):
+        """Windowed chunk view through the modular table.
+
+        Returns ``(k_view, v_view)`` of static width ``win + csz - 1``:
+        the logical positions ``[starts - win + 1, starts + csz - 1]`` —
+        everything the chunk's last token can attend under a ``win``-wide
+        sliding window, ending at the chunk's final position.  Early in a
+        sequence the left edge dips below position 0; those slots gather
+        clip-garbage and the caller masks them via ``chunked_attention``'s
+        ``kv_valid_from = max(0, -(starts - win + 1))``.  Every in-range
+        position is still mapped: the engine's per-chunk ``ensure_steps``
+        evicts only pages wholly before ``starts - win + 1``.
+        """
+        ps = self.page_size
+        win = min(self.max_len, window)
+        s_view = win + csz - 1
+        vbase = starts - win + 1  # (L,), may be negative
+        a = vbase[:, None] + jnp.arange(s_view)[None, :]  # (L, S_v)
+        an = jnp.maximum(a, 0)
+        pt = tables["win"]
+        rows = jnp.take(pt, lanes, axis=0, mode="clip")
+        phys = jnp.take_along_axis(rows, (an // ps) % self.pages_win, axis=1)
+        valid = (a >= 0) & (lanes < pt.shape[0])[:, None]
+        idx = jnp.where(valid, phys * ps + an % ps, self.num_pages * ps)
+
+        def g(name):
+            flat = c[name].reshape((-1,) + c[name].shape[2:])
+            v = jnp.take(flat, idx, axis=0, mode="clip")
+            if self.quant:
+                s = jnp.take(
+                    c[name + "_scale"].reshape(-1), idx, axis=0, mode="clip"
+                )
+                v = self.dequant(v, s)
+            return v
+
+        return g("k"), g("v")
 
     def mla_write_chunk(self, c: dict, ckv_rows, krope_rows, lanes, starts,
                         lengths, tables):

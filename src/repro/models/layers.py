@@ -194,6 +194,7 @@ def chunked_attention(
     causal: bool = True,
     window: Optional[int] = None,  # sliding-window (local) attention
     q_offset=0,  # position of q[0] within the kv sequence: scalar or (B,)
+    kv_valid_from=0,  # first valid kv slot: scalar or (B,)
     chunk: int = 512,
 ) -> jnp.ndarray:
     """Online-softmax attention, scanning over KV chunks (flash style).
@@ -203,6 +204,9 @@ def chunked_attention(
     grouping query heads over each KV head.  ``q_offset`` may be a per-row
     ``(B,)`` vector — batched chunked prefill runs every chunking lane's
     chunk in one call, each at its own position in its own sequence.
+    ``kv_valid_from`` masks leading kv slots (per-row or scalar): a windowed
+    chunk view early in a sequence pads its left edge with out-of-range
+    gathers, which must not attend.
     """
     b, sq, h, d = q.shape
     _, sk, hkv, _ = k.shape
@@ -222,6 +226,8 @@ def chunked_attention(
     off = jnp.asarray(q_offset)
     off = off.reshape(-1, 1) if off.ndim else off[None, None]  # (B|1, 1)
     q_pos = off + jnp.arange(sq)[None, :]  # (B|1, Sq)
+    vf = jnp.asarray(kv_valid_from)
+    vf = vf.reshape(-1, 1) if vf.ndim else vf[None, None]  # (B|1, 1)
 
     def body(carry, inputs):
         m_prev, l_prev, acc = carry
@@ -236,6 +242,7 @@ def chunked_attention(
             mask = jnp.ones((1, sq, chunk), bool)
         if window is not None:
             mask = mask & (kv_pos[None, None, :] > q_pos[:, :, None] - window)
+        mask = mask & (kv_pos[None, None, :] >= vf[:, :, None])
         mask = mask & (kv_pos[None, None, :] < sk)  # padding
         s = jnp.where(mask[:, None, None], s, -jnp.inf)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))

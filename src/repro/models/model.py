@@ -547,15 +547,57 @@ def write_prefill(
     return out
 
 
+def reset_lanes(cfg: ArchConfig, cache: dict, mask) -> dict:
+    """Zero the recurrent (SSM / RG-LRU) state rows of masked lanes.
+
+    The device-resident scheduler refills a freed lane *inside* the decode
+    loop: paged/slab attention entries need no reset — stale KV is dead
+    under the lane's length mask once ``cache["len"]`` rewinds to 0 — but
+    O(1) recurrent states are read unconditionally, so masked lanes' rows
+    must return to the zeros a fresh prompt starts from.  ``mask`` is
+    ``(B,)`` bool; attention-only archs pass through untouched.
+    """
+    plan = layer_plan(cfg)
+
+    def zero(c: dict, stacked: bool) -> dict:
+        def z(x):
+            m = mask[None, :] if stacked else mask  # body leaves: (n_body, B, ...)
+            mm = m.reshape(m.shape + (1,) * (x.ndim - m.ndim))
+            return jnp.where(mm, jnp.zeros_like(x), x)
+
+        return {k: z(v) for k, v in c.items()}
+
+    def recurrent(kind: str) -> bool:
+        return _block_mixer_mlp(kind, cfg)[0] in ("ssm", "rec")
+
+    out = dict(cache)
+    for i, kind in enumerate(plan.head):
+        if recurrent(kind):
+            out[f"head_{i}"] = zero(cache[f"head_{i}"], False)
+    if plan.n_body and any(recurrent(k) for k in plan.period):
+        body = dict(cache["body"])
+        for j, kind in enumerate(plan.period):
+            if recurrent(kind):
+                body[f"sb_{j}"] = zero(cache["body"][f"sb_{j}"], True)
+        out["body"] = body
+    for i, kind in enumerate(plan.tail):
+        if recurrent(kind):
+            out[f"tail_{i}"] = zero(cache[f"tail_{i}"], False)
+    return out
+
+
 def _attn_chunk(x, p, cfg: ArchConfig, c: dict, lanes, starts, lengths,
                 layout, tables, chunk: int):
     """One prompt chunk per chunking lane, batched: row ``r`` writes K/V at
     ``starts[r]..starts[r]+lengths[r]-1`` of lane ``lanes[r]`` and attends
     its queries over that lane's whole cached prefix.
 
-    x: (L, C, d).  Chunked prefill is gated to non-windowed attention
-    (``DecodeEngine`` only routes prompts here when ``local_window`` is
-    None), so the logical views are the append-only full caches."""
+    x: (L, C, d).  Non-windowed attention reads the append-only full view;
+    sliding-window layers on a paged layout read the modular-table view —
+    the last ``win + C - 1`` positions ending at the chunk's final token
+    (everything a ``win``-wide window can reach), with the below-zero left
+    edge masked via ``kv_valid_from``.  Windowed *slab* caches stay gated
+    off chunking by the engine."""
     b, csz, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
     q = L.matmul(x, p["wq"])
@@ -574,14 +616,32 @@ def _attn_chunk(x, p, cfg: ArchConfig, c: dict, lanes, starts, lengths,
         p3 = jnp.broadcast_to(posb[..., None], (b, csz, 3))
         q = L.apply_mrope(q, p3, theta=cfg.rope_theta)
         k = L.apply_mrope(k, p3, theta=cfg.rope_theta)
-    new_c = layout.attn_write_chunk(c, k, v, lanes, starts, lengths, tables)
-    k_view, v_view = layout.attn_chunk_view(new_c, lanes, tables)
+    windowed = isinstance(layout, C.PagedLayout) and layout._windowed(
+        cfg.local_window
+    )
+    new_c = layout.attn_write_chunk(
+        c, k, v, lanes, starts, lengths, tables,
+        window=cfg.local_window if windowed else None,
+    )
     # pad rows (i >= length, or a sentinel lane) attend garbage — discarded
     # by the caller, which reads logits only at row length-1 (and only on
     # the final chunk)
-    out = L.chunked_attention(
-        q, k_view, v_view, causal=True, q_offset=starts, chunk=chunk
-    )
+    if windowed:
+        win = min(layout.max_len, cfg.local_window)
+        k_view, v_view = layout.attn_chunk_view_win(
+            new_c, lanes, starts, csz, cfg.local_window, tables
+        )
+        out = L.chunked_attention(
+            q, k_view, v_view, causal=True, window=win,
+            q_offset=win - 1,  # q[0] sits at view slot S_v - C = win - 1
+            kv_valid_from=jnp.maximum(0, win - 1 - starts),
+            chunk=chunk,
+        )
+    else:
+        k_view, v_view = layout.attn_chunk_view(new_c, lanes, tables)
+        out = L.chunked_attention(
+            q, k_view, v_view, causal=True, q_offset=starts, chunk=chunk
+        )
     out = L.matmul(out.reshape(b, csz, h * hd), p["wo"])
     if cfg.o_bias:
         out = out + p["bias_o"]
@@ -986,3 +1046,6 @@ class TransformerLM:
 
     def write_prefill(self, cache, produced, lanes, lens, layout=None):
         return write_prefill(cache, self.cfg, produced, lanes, lens, layout)
+
+    def reset_lanes(self, cache, mask):
+        return reset_lanes(self.cfg, cache, mask)

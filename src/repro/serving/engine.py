@@ -41,7 +41,44 @@ prefill — it is absorbed N tokens at a time, one chunk per scheduling
 step, interleaved with the decode dispatches of the running lanes; the
 final chunk samples the request's first token and the lane joins the next
 decode dispatch.  Attention-family archs only (recurrent state cannot
-resume mid-prompt; sliding-window archs keep whole-prompt prefill).
+resume mid-prompt).  Sliding-window archs chunk on the *paged* layout:
+each chunk reads a windowed ring view of the cache
+(``cache.PagedLayout.attn_chunk_view_win``) and maps its window-ring
+pages chunk-by-chunk (``alloc_prefill(defer_win=True)`` at admission,
+``ensure_steps`` per chunk), so a window that slides during the prompt
+stays collision-free as long as the pool's ``lookahead >= chunk``.
+Slab windowed prompts keep whole-prompt prefill.
+
+Device-resident scheduling (run-until-stop, refill, async streams)
+------------------------------------------------------------------
+``max_steps_per_dispatch=K`` swaps the fixed-K ``lax.scan`` for an
+on-device ``lax.while_loop``: the loop decodes until **some lane
+freezes** (``sampling.advance_stops`` decides continuation on device) or
+the K-step bound, so short answers stop syncing the host every K tokens
+and long answers amortize one host sync over up to K·B tokens.  Sampling
+keys are a pure function of ``(request uid, generated-token index)``
+(``sampling.request_keys``), so streams — greedy *and* sampled — are
+bit-identical to the fixed-K sync scheduler no matter how dispatches are
+cut.
+
+``staged_lanes=Q`` pre-stages up to Q queued prompts on device: their
+token buffers and pre-reserved page-table rows
+(``kv_pool.PagedKVPool.stage_alloc``) ride along in the scheduler state,
+and when a lane freezes mid-loop the while-loop swaps a staged request
+into the dead lane — table rows installed, recurrent state zeroed
+(``model.reset_lanes``), prompt fed token-by-token from the staged
+buffer — and starts its prefill **inside the same dispatch**.  The host
+finds out at the next sync (``consumed_lane``/``consumed_step``) and
+replays the swap in its bookkeeping.
+
+``async_stream=True`` double-buffers dispatches: two while-loop calls
+are enqueued back-to-back (the scheduler state and cache chain device
+side), so dispatch N+1 executes while the host fetches and replays
+dispatch N's token block — decode never waits on a host read.  All host
+mutations (admission, staging, page reservation, table sync) happen only
+at full-drain cycle boundaries, which is what keeps the
+never-write-unmapped invariant without mid-flight synchronization; the
+host-side stop replay is unchanged, so streams stay bit-identical.
 
 Cache layouts
 -------------
@@ -134,9 +171,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.cache import SlabLayout
-from repro.models.model import TransformerLM, _block_mixer_mlp, layer_plan
+from repro.models.model import (
+    TransformerLM,
+    _block_mixer_mlp,
+    layer_plan,
+    reset_lanes,
+)
 from repro.serving.kv_pool import PagedKVPool
-from repro.serving.sampling import SamplingParams, advance_stops, sample_tokens
+from repro.serving.sampling import (
+    SamplingParams,
+    advance_stops,
+    request_keys,
+    sample_tokens,
+)
 from repro.sparse_infer.compress import CompressedTensor
 
 
@@ -177,10 +224,10 @@ class _Slot:
     """Host-side bookkeeping for one active batch lane."""
 
     __slots__ = ("uid", "prompt", "sampling", "generated", "pos", "seq",
-                 "pending")
+                 "pending", "feed")
 
     def __init__(self, req: _Request, pos: int, seq: int,
-                 pending: Optional[list[int]] = None):
+                 pending: Optional[list[int]] = None, feed: bool = False):
         self.uid = req.uid
         self.prompt = req.prompt
         self.sampling = req.sampling
@@ -190,6 +237,10 @@ class _Slot:
         # chunked prefill: prompt(+prefix) tokens not yet absorbed into the
         # cache; the lane joins decode once this drains
         self.pending: list[int] = pending or []
+        # device-scheduler refill: pending drains token-by-token *on
+        # device* (fed from the staged buffer inside the while-loop), not
+        # through the host's chunked-prefill dispatches
+        self.feed = feed
 
 
 def _next_pow2(n: int) -> int:
@@ -215,6 +266,19 @@ class DecodeEngine:
     steps_per_dispatch: decode steps fused into one on-device scan (K).
         The host syncs once per K tokens; admission/preemption happen at
         dispatch boundaries.  Greedy streams are bit-identical across K.
+    max_steps_per_dispatch: enable the device-resident scheduler — the
+        fixed-K scan becomes a run-until-stop ``lax.while_loop`` bounded
+        by this many steps per dispatch (see "Device-resident
+        scheduling" in the module docstring).  ``None`` (default) keeps
+        the fixed-K sync scheduler.  Streams are bit-identical across
+        schedulers.
+    staged_lanes: device scheduler only — queued prompts pre-staged on
+        device per cycle, so a lane that freezes mid-loop refills (and
+        starts prefilling the staged prompt) inside the same dispatch.
+        0 disables on-device refill.
+    async_stream: device scheduler only — double-buffer dispatches: the
+        next while-loop launches before the previous one's token block
+        is fetched, so the host read overlaps device decode.
     donate: donate the cache pytree + token buffer into the jitted
         executables so the cache updates in place (no per-step full-cache
         copy).  ``False`` keeps the copying baseline; streams are
@@ -261,6 +325,9 @@ class DecodeEngine:
         num_pages: Optional[int] = None,
         page_size: int = 16,
         steps_per_dispatch: int = 1,
+        max_steps_per_dispatch: Optional[int] = None,
+        staged_lanes: int = 0,
+        async_stream: bool = False,
         donate: bool = True,
         prefill_chunk: Optional[int] = None,
         prefill_buckets: Optional[Sequence[int]] = None,
@@ -280,11 +347,60 @@ class DecodeEngine:
             raise ValueError(f"steps_per_dispatch must be >= 1, got {steps_per_dispatch}")
         self.steps_per_dispatch = steps_per_dispatch
         self.donate = donate
+        # device-resident scheduler configuration.  The write horizon H is
+        # the most positions any lane can append between two host syncs:
+        # k_loop steps per dispatch times the number of in-flight
+        # dispatches per cycle (2 when async double-buffering).  All page
+        # reservation (live-lane runway and staged-refill exposure) is
+        # sized by H, which is what keeps mid-loop writes on mapped pages.
+        self._device = max_steps_per_dispatch is not None
+        if self._device and max_steps_per_dispatch < 1:
+            raise ValueError(
+                f"max_steps_per_dispatch must be >= 1, got {max_steps_per_dispatch}"
+            )
+        if (staged_lanes or async_stream) and not self._device:
+            raise ValueError(
+                "staged_lanes/async_stream need the device scheduler: "
+                "pass max_steps_per_dispatch="
+            )
+        if staged_lanes < 0:
+            raise ValueError(f"staged_lanes must be >= 0, got {staged_lanes}")
+        self.k_loop = max_steps_per_dispatch
+        self.staged_lanes = staged_lanes
+        self.async_stream = async_stream
+        self._w = 2 if async_stream else 1
+        self._horizon = (
+            self.k_loop * self._w if self._device else steps_per_dispatch
+        )
+        # chunked-prefill gating must precede pool construction: windowed
+        # chunking sizes the pool's window-ring lookahead by the chunk
+        windowed_arch = model.cfg.local_window is not None
+        plan = layer_plan(model.cfg)
+        kinds = list(plan.head) + list(plan.period) * plan.n_body + list(plan.tail)
+        # recurrent state cannot absorb pad tokens: group by exact length
+        self._exact_prefill = any(
+            _block_mixer_mlp(k, model.cfg)[0] in ("ssm", "rec") for k in kinds
+        )
+        # chunked prefill needs every mixer to read mid-prompt state from
+        # the cache: attention-family only.  Windowed archs additionally
+        # need the paged layout (the windowed chunk view reads the
+        # window-ring page table; the slab has no ring to view)
+        self._chunk_ok = (
+            prefill_chunk is not None
+            and not self._exact_prefill
+            and (not windowed_arch or kv_pool is not None or num_pages is not None)
+        )
         if kv_pool is None and num_pages is not None:
+            lookahead = max(steps_per_dispatch, self._horizon)
+            if self._chunk_ok and windowed_arch:
+                # windowed chunk writes walk the window ring csz slots per
+                # chunk; lookahead >= csz keeps them collision-free with
+                # the positions the chunk view still reads
+                lookahead = max(lookahead, prefill_chunk)
             kv_pool = PagedKVPool(
                 model, max_batch=max_batch, max_len=max_len,
                 num_pages=num_pages, page_size=page_size,
-                lookahead=steps_per_dispatch, mesh=mesh, kv_shard=kv_shard,
+                lookahead=lookahead, mesh=mesh, kv_shard=kv_shard,
                 quant=kv_quant,
             )
         if kv_quant and kv_pool is not None and not kv_pool.layout.quant:
@@ -300,6 +416,25 @@ class DecodeEngine:
                     f"steps_per_dispatch {steps_per_dispatch}; build the pool "
                     "with lookahead >= K"
                 )
+            if self._device and self.pool.layout.lookahead < self._horizon:
+                raise ValueError(
+                    f"pool lookahead {self.pool.layout.lookahead} < write "
+                    f"horizon {self._horizon} (max_steps_per_dispatch x "
+                    f"{self._w} in-flight dispatches); build the pool with "
+                    "lookahead >= the horizon"
+                )
+            if (
+                self._chunk_ok
+                and windowed_arch
+                and self.pool.layout.lookahead < prefill_chunk
+            ):
+                warnings.warn(
+                    "windowed chunked prefill disabled: pool lookahead "
+                    f"{self.pool.layout.lookahead} < prefill_chunk "
+                    f"{prefill_chunk} (the window ring would recycle pages "
+                    "the chunk view still reads)"
+                )
+                self._chunk_ok = False
             if mesh is not None and (
                 self.pool.mesh is not mesh
                 or getattr(self.pool, "kv_shard", kv_shard) != kv_shard
@@ -360,11 +495,28 @@ class DecodeEngine:
         self.tokens = jnp.zeros((max_batch,), jnp.int32)
         if self._shardings is not None:
             self.tokens = jax.device_put(self.tokens, self._shardings["lane"])
+        # the base sampling key is never split: per-token keys derive from
+        # it as fold_in(fold_in(base, uid), token_index) (request_keys), so
+        # streams are scheduler- and batch-mix-independent
         self.key = jax.random.PRNGKey(seed)
         self._next_uid = 0
         self._admit_seq = 0
-        self.decode_steps = 0  # logical token steps (dispatches × K)
-        self.dispatches = 0  # jitted decode calls == host syncs
+        self.decode_steps = 0  # logical token steps actually executed
+        self.dispatches = 0  # jitted decode calls
+        self.cycles = 0  # device-scheduler cycles (full-drain host syncs)
+        self.refills = 0  # on-device lane refills from the staged ring
+        self.block_fetches = 0  # device->host token-block reads
+        # staged-but-unconsumed queue entries for on-device refill:
+        # [{"req": _Request, "rec": stage_alloc record | None,
+        #   "tokens": np(S,), "len": int}] — rebuilt every cycle
+        self._staged: list[dict] = []
+        # seam for tests: how a device token block becomes host numpy
+        # (forced-slow reads exercise async double-buffer ordering)
+        self._fetch_block = lambda b: np.asarray(b)
+        # inter-token latency: wall-clock deltas between consecutive
+        # emissions of the same request, recorded at absorb time
+        self._itl_ms: list[float] = []
+        self._last_emit: dict[int, float] = {}
         self.admitted = 0
         self.preemptions = 0
         self.prefix_hits = 0  # admissions that reused cached prefix pages
@@ -386,21 +538,10 @@ class DecodeEngine:
         self._slots_dirty = True
         self._consts: Optional[dict] = None
 
-        # recurrent state cannot absorb pad tokens: group by exact length
-        plan = layer_plan(model.cfg)
-        kinds = list(plan.head) + list(plan.period) * plan.n_body + list(plan.tail)
-        self._exact_prefill = any(
-            _block_mixer_mlp(k, model.cfg)[0] in ("ssm", "rec") for k in kinds
-        )
-        # chunked prefill needs every mixer to read mid-prompt state from
-        # the cache: attention-family only, and non-windowed (a window that
-        # slides during the prompt would need windowed chunk views)
-        self._chunk_ok = (
-            prefill_chunk is not None
-            and not self._exact_prefill
-            and model.cfg.local_window is None
-        )
         self.prefill_chunk = prefill_chunk if self._chunk_ok else None
+        # windowed chunking maps window-ring pages chunk-by-chunk
+        # (alloc_prefill defers them; _advance_chunks reserves per chunk)
+        self._win_chunk = self.prefill_chunk is not None and windowed_arch
         # prefix caching rides the chunked-prefill machinery (a prefix-hit
         # lane is admitted as "already absorbed its first chunks" and the
         # uncached tail drains through _advance_chunks), so it carries the
@@ -440,42 +581,49 @@ class DecodeEngine:
 
         layout = self.layout
         eng_max_len = max_len
+        n_lanes = max_batch
+        n_staged = max(1, staged_lanes)
 
         def _decode(params, tok, cache, temps, topks, active, keep, key,
-                    eos, budget, k, need_sample, need_topk):
+                    eos, budget, uids, counts, k, need_sample, need_topk):
             # K decode steps fused into one on-device scan: embed → attend →
             # sample → scatter-into-cache → stop-detect, K times, one host
             # sync.  ``active`` lanes decode; ``keep`` lanes (occupied but
             # not decoding, e.g. mid chunked-prefill) hold their length;
             # free lanes pin to 0 so they cannot creep past the cache bound.
+            # Sampling keys derive per row from (uid, generated-token
+            # index); ``counts`` advances with each sampled token so the
+            # stream is independent of how dispatches are cut.
             def body(carry, _):
-                tok, cache, active, budget, key = carry
+                tok, cache, active, budget, counts = carry
                 len_prev = cache["len"]
                 logits, cache = model.decode_step(params, tok, cache, layout)
                 cache["len"] = jnp.where(
                     active, cache["len"], jnp.where(keep, len_prev, 0)
                 )
-                ks = jax.random.split(key)
-                key, sub = ks[0], ks[1]
+                keys = request_keys(key, uids, counts)
                 nxt = sample_tokens(
-                    logits, temps, topks, sub,
+                    logits, temps, topks, keys,
                     need_sample=need_sample, need_topk=need_topk,
+                    rowwise=True,
                 )
+                counts = counts + active.astype(counts.dtype)
                 nxt, active, budget = advance_stops(
                     nxt, active, budget, eos, cache["len"], eng_max_len
                 )
-                return (nxt, cache, active, budget, key), nxt
+                return (nxt, cache, active, budget, counts), nxt
 
-            (tok, cache, active, budget, key), block = jax.lax.scan(
-                body, (tok, cache, active, budget, key), None, length=k
+            (tok, cache, active, budget, counts), block = jax.lax.scan(
+                body, (tok, cache, active, budget, counts), None, length=k
             )
-            return block, tok, cache, key
+            return block, tok, cache
 
         def _prefill(params, tokens, lens, lanes, cache, temps, topks, key,
-                     need_sample, need_topk):
+                     uids, counts, need_sample, need_topk):
             # one jitted call per (bucket_len, group_size): forward the whole
             # padded group, write each row's cache into its lane through the
             # layout, and sample each row's first token at position len-1
+            # under that row's (uid, token-index) key
             logits_all, _, produced = model.forward(
                 params, {"tokens": tokens}, remat=False, want_cache=True
             )
@@ -483,10 +631,157 @@ class DecodeEngine:
             logits = jnp.take_along_axis(logits_all, idx[:, None, None], axis=1)[:, 0]
             cache = model.write_prefill(cache, produced, lanes, lens, layout)
             first = sample_tokens(
-                logits, temps, topks, key,
-                need_sample=need_sample, need_topk=need_topk,
+                logits, temps, topks, request_keys(key, uids, counts),
+                need_sample=need_sample, need_topk=need_topk, rowwise=True,
             )
             return first, cache
+
+        def _dloop(params, cache, dstate, key, k_max, need_sample, need_topk):
+            # device-resident scheduler: one while-loop iteration is one
+            # decode step for every live lane — feeding lanes consume their
+            # staged prompt token-by-token, drained lanes sample — followed
+            # by at most one dead-lane refill from the staged ring.  The
+            # loop exits on the step bound, on a freeze the refill did not
+            # cover (the host must schedule), or when nothing is live and
+            # nothing is staged.  The host reads back only (block, steps,
+            # consumed_lane, consumed_step); the scheduler state chains
+            # device-side between dispatches and is rebuilt from host
+            # bookkeeping at every cycle boundary.  The state crosses the
+            # jit boundary *packed* — same-dtype lane/ring vectors stacked
+            # into a few matrices — so a cycle pays a handful of host→
+            # device transfers instead of ~25; rows unpack here at trace
+            # time for free.
+            B, S, Q = n_lanes, eng_max_len, n_staged
+            li = dstate["lanes_i"]
+            ring = dstate["ring_i"]
+            s_len, s_uid, s_count0 = ring[0], ring[1], ring[2]
+            s_topks, s_eos, s_budget = ring[3], ring[4], ring[5]
+            s_temps, s_tokens = dstate["s_temps"], dstate["s_tokens"]
+            s_avail = dstate["scal"][1]
+
+            def cond(c):
+                more = jnp.any(c["live"]) | (c["s_next"] < s_avail)
+                return (c["t"] < k_max) & more & ~c["stall"]
+
+            def body(c):
+                t = c["t"]
+                cache = c["cache"]
+                live, occupied = c["live"], c["occupied"]
+                pend, fed, feed_buf = c["pend"], c["fed"], c["feed_buf"]
+                feeding = pend > 0
+                feed = jnp.where(
+                    feeding,
+                    feed_buf[jnp.arange(B), jnp.clip(fed, 0, S - 1)],
+                    c["tok"],
+                )
+                len_prev = cache["len"]
+                logits, cache = model.decode_step(params, feed, cache, layout)
+                cache["len"] = jnp.where(
+                    live, cache["len"], jnp.where(occupied, len_prev, 0)
+                )
+                pend = jnp.where(feeding, pend - 1, pend)
+                fed = fed + feeding.astype(fed.dtype)
+                # a lane samples the step its prompt drains — the feed of
+                # the last prompt token doubles as the first-token forward
+                sample_now = live & (pend == 0)
+                keys = request_keys(key, c["uids"], c["counts"])
+                nxt = sample_tokens(
+                    logits, c["temps"], c["topks"], keys,
+                    need_sample=need_sample, need_topk=need_topk,
+                    rowwise=True,
+                )
+                counts = c["counts"] + sample_now.astype(c["counts"].dtype)
+                tokens_out, act_out, budget = advance_stops(
+                    nxt, sample_now, c["budget"], c["eos"], cache["len"],
+                    eng_max_len,
+                )
+                tok = jnp.where(sample_now, tokens_out, c["tok"])
+                nf = sample_now & ~act_out  # newly frozen lanes
+                live = act_out | (pend > 0)
+                occupied = occupied | nf
+                block = c["block"].at[t].set(tokens_out)
+                # at most one refill per iteration: swap the first dead
+                # lane for the next staged request, entirely on device
+                free = ~live
+                do = (c["s_next"] < s_avail) & jnp.any(free)
+                lane = jnp.argmax(free).astype(jnp.int32)
+                row = jnp.clip(c["s_next"], 0, Q - 1)
+                lm = (jnp.arange(B) == lane) & do
+                uids = jnp.where(lm, s_uid[row], c["uids"])
+                temps = jnp.where(lm, s_temps[row], c["temps"])
+                topks = jnp.where(lm, s_topks[row], c["topks"])
+                eos = jnp.where(lm, s_eos[row], c["eos"])
+                budget = jnp.where(lm, s_budget[row], budget)
+                counts = jnp.where(lm, s_count0[row], counts)
+                pend = jnp.where(lm, s_len[row], pend)
+                fed = jnp.where(lm, 0, fed)
+                feed_buf = jnp.where(
+                    lm[:, None], s_tokens[row][None, :], feed_buf
+                )
+                cache["len"] = jnp.where(lm, 0, cache["len"])
+                tbl = cache.get("tables")
+                if tbl is not None and "s_tbl_full" in dstate and "full" in tbl:
+                    tbl["full"] = jnp.where(
+                        lm[:, None], dstate["s_tbl_full"][row][None, :],
+                        tbl["full"],
+                    )
+                if tbl is not None and "s_tbl_win" in dstate and "win" in tbl:
+                    tbl["win"] = jnp.where(
+                        lm[:, None], dstate["s_tbl_win"][row][None, :],
+                        tbl["win"],
+                    )
+                cache = reset_lanes(model.cfg, cache, lm)
+                live = live | lm
+                occupied = occupied | lm
+                consumed_lane = jnp.where(
+                    do, c["consumed_lane"].at[row].set(lane),
+                    c["consumed_lane"],
+                )
+                consumed_step = jnp.where(
+                    do, c["consumed_step"].at[row].set(t),
+                    c["consumed_step"],
+                )
+                s_next = c["s_next"] + do.astype(c["s_next"].dtype)
+                # a freeze the refill did not cover stalls the loop: the
+                # host has to admit / restage at the next cycle boundary
+                stall = c["stall"] | jnp.any(nf & ~lm)
+                return {
+                    "t": t + 1, "tok": tok, "cache": cache, "live": live,
+                    "occupied": occupied, "pend": pend, "fed": fed,
+                    "counts": counts, "budget": budget, "uids": uids,
+                    "temps": temps, "topks": topks, "eos": eos,
+                    "feed_buf": feed_buf, "s_next": s_next, "stall": stall,
+                    "block": block, "consumed_lane": consumed_lane,
+                    "consumed_step": consumed_step,
+                }
+
+            init = {
+                "t": jnp.asarray(0, jnp.int32),
+                "tok": li[0], "cache": cache,
+                "live": li[1].astype(bool), "occupied": li[2].astype(bool),
+                "pend": li[3], "fed": li[4],
+                "counts": li[5], "budget": li[6],
+                "uids": li[7], "temps": dstate["temps"],
+                "topks": li[8], "eos": li[9],
+                "feed_buf": dstate["feed_buf"],
+                "s_next": dstate["scal"][0],
+                "stall": jnp.asarray(False),
+                "block": jnp.zeros((k_max, B), jnp.int32),
+                "consumed_lane": jnp.full((Q,), -1, jnp.int32),
+                "consumed_step": jnp.full((Q,), -1, jnp.int32),
+            }
+            f = jax.lax.while_loop(cond, body, init)
+            dstate = dict(dstate)
+            dstate["lanes_i"] = jnp.stack(
+                [f["tok"], f["live"].astype(jnp.int32),
+                 f["occupied"].astype(jnp.int32), f["pend"], f["fed"],
+                 f["counts"], f["budget"], f["uids"], f["topks"], f["eos"]]
+            )
+            dstate["temps"] = f["temps"]
+            dstate["feed_buf"] = f["feed_buf"]
+            dstate["scal"] = jnp.stack([f["s_next"], s_avail])
+            return (f["block"], f["t"], f["consumed_lane"],
+                    f["consumed_step"], dstate, f["cache"])
 
         def _chunk(params, tokens, cache, lanes, starts, lengths):
             # one dispatch absorbs a chunk of every currently-chunking lane
@@ -500,12 +795,14 @@ class DecodeEngine:
         # donate_argnums hands the cache (and the decode's token buffer) to
         # XLA for in-place update — without it every dispatch copies the
         # whole pool because the engine reuses the input cache.
-        jit_kw: dict = {"decode": {}, "prefill": {}, "chunk": {}}
+        jit_kw: dict = {"decode": {}, "prefill": {}, "chunk": {}, "dloop": {}}
         if self._shardings is not None:
             # pin explicit in/out shardings on every executable: params TP,
             # cache seq/pages-sharded, per-lane vectors over DP, prefill /
             # chunk row batches replicated (they scatter into the sharded
-            # cache), rng keys replicated
+            # cache), rng keys replicated.  The device scheduler's state
+            # dict is all scheduling metadata (a few KB) — replicated via
+            # a prefix sharding rather than lane-split for simplicity.
             from jax.sharding import NamedSharding, PartitionSpec as _P
 
             psh = self._shardings["params"]
@@ -515,35 +812,46 @@ class DecodeEngine:
             blk = NamedSharding(mesh, _P(None, *tuple(lane.spec)))
             jit_kw["decode"] = dict(
                 in_shardings=(psh, lane, csh, lane, lane, lane, lane, repl,
-                              lane, lane),
-                out_shardings=(blk, lane, csh, repl),
+                              lane, lane, lane, lane),
+                out_shardings=(blk, lane, csh),
             )
             jit_kw["prefill"] = dict(
-                in_shardings=(psh, repl, repl, repl, csh, repl, repl, repl),
+                in_shardings=(psh, repl, repl, repl, csh, repl, repl, repl,
+                              repl, repl),
                 out_shardings=(repl, csh),
             )
             jit_kw["chunk"] = dict(
                 in_shardings=(psh, repl, csh, repl, repl, repl),
                 out_shardings=(repl, csh),
             )
+            jit_kw["dloop"] = dict(
+                in_shardings=(psh, csh, repl, repl),
+                out_shardings=(repl, repl, repl, repl, repl, csh),
+            )
         # statics are passed *positionally* (static_argnums): pjit rejects
         # kwargs outright once in_shardings is specified
         self._decode = jax.jit(
             _decode,
-            static_argnums=(10, 11, 12),  # k, need_sample, need_topk
+            static_argnums=(12, 13, 14),  # k, need_sample, need_topk
             donate_argnums=(1, 2) if donate else (),
             **jit_kw["decode"],
         )
         self._prefill = jax.jit(
             _prefill,
-            static_argnums=(8, 9),  # need_sample, need_topk
+            static_argnums=(10, 11),  # need_sample, need_topk
             donate_argnums=(4,) if donate else (),
             **jit_kw["prefill"],
         )
         self._chunk = jax.jit(
             _chunk, donate_argnums=(2,) if donate else (), **jit_kw["chunk"]
         )
-        self._warmed: set[tuple[bool, bool]] = set()
+        self._dloop = jax.jit(
+            _dloop,
+            static_argnums=(4, 5, 6),  # k_max, need_sample, need_topk
+            donate_argnums=(1, 2) if donate else (),
+            **jit_kw["dloop"],
+        )
+        self._warmed: set[tuple] = set()
 
     # -- request intake ------------------------------------------------------
 
@@ -587,6 +895,7 @@ class DecodeEngine:
         self.tokens_generated += len(s.generated)
         self.slots[i] = None
         self._slots_dirty = True
+        self._last_emit.pop(s.uid, None)
         if self.pool is not None:
             self.pool.release(i)
 
@@ -604,6 +913,11 @@ class DecodeEngine:
             self._finish(i, "eos", out)
             return
         s.generated.append(token)
+        now = time.perf_counter()
+        last = self._last_emit.get(s.uid)
+        if last is not None:
+            self._itl_ms.append((now - last) * 1e3)
+        self._last_emit[s.uid] = now
         if from_decode:
             self.decode_tokens += 1
         if len(s.generated) >= sp.max_new_tokens:
@@ -653,12 +967,20 @@ class DecodeEngine:
             req = self.queue[0]
             seq = list(req.prompt) + list(req.prefix)
             length = len(seq)
+            chunked = (
+                self.prefill_chunk is not None and length > self.prefill_chunk
+            )
+            # a windowed chunked admission defers its window-ring mapping:
+            # the ring slots are claimed chunk-by-chunk (_advance_chunks)
+            # as the window slides over the prompt
+            defer = chunked and self._win_chunk
             shared_len, shared_pids = 0, ()
             if self._prefix is not None:
                 shared_len, shared_pids = self._prefix.match(seq)
             if self.pool is not None:
                 ok = self.pool.alloc_prefill(
-                    i, length, shared_full=shared_pids, shared_len=shared_len
+                    i, length, shared_full=shared_pids, shared_len=shared_len,
+                    defer_win=defer,
                 )
                 # pool pressure: shed LRU index entries before giving up —
                 # each evict() can invalidate matched pages, so re-match
@@ -670,7 +992,7 @@ class DecodeEngine:
                     shared_len, shared_pids = self._prefix.match(seq)
                     ok = self.pool.alloc_prefill(
                         i, length, shared_full=shared_pids,
-                        shared_len=shared_len,
+                        shared_len=shared_len, defer_win=defer,
                     )
                 if not ok:
                     break  # retry next step, after frees/preemptions
@@ -688,7 +1010,7 @@ class DecodeEngine:
                 self.admitted += 1
                 self._slots_dirty = True
                 continue
-            if self.prefill_chunk is not None and length > self.prefill_chunk:
+            if chunked:
                 self.slots[i] = _Slot(
                     req, pos=0, seq=self._admit_seq,
                     pending=seq,
@@ -719,15 +1041,20 @@ class DecodeEngine:
         lanes = np.full((nb,), self.max_batch, np.int32)  # sentinel = pad row
         temps = np.zeros((nb,), np.float32)
         topks = np.zeros((nb,), np.int32)
+        uids = np.zeros((nb,), np.int32)
+        counts = np.zeros((nb,), np.int32)
         for r, (req, i, length) in enumerate(items):
             tokens[r, :length] = req.prompt + req.prefix
             lens[r] = length
             lanes[r] = i
             temps[r] = req.sampling.temperature
             topks[r] = req.sampling.top_k
+            uids[r] = req.uid
+            # first sampled token's index: resume prefixes already hold
+            # the request's first len(prefix) generated tokens
+            counts[r] = len(req.prefix)
         need_sample = any(req.sampling.temperature > 0 for req, _, _ in items)
         need_topk = any(req.sampling.top_k > 0 for req, _, _ in items)
-        self.key, sub = jax.random.split(self.key)
         if self.pool is not None:
             if self.pool.pending_copies:
                 self.cache = self.pool.apply_pending(self.cache)
@@ -738,7 +1065,8 @@ class DecodeEngine:
             first, self.cache = self._prefill(
                 self.params, jnp.asarray(tokens), jnp.asarray(lens),
                 jnp.asarray(lanes), self.cache, jnp.asarray(temps),
-                jnp.asarray(topks), sub, need_sample, need_topk,
+                jnp.asarray(topks), self.key, jnp.asarray(uids),
+                jnp.asarray(counts), need_sample, need_topk,
             )
         if self.pool is not None:
             # the donated call consumed the table buffers the pool held;
@@ -773,13 +1101,39 @@ class DecodeEngine:
         dispatch.
         """
         # prefix-hit lanes drain their uncached tail here even when chunked
-        # prefill proper is off — _tail_chunk covers that case
+        # prefill proper is off — _tail_chunk covers that case.  Refill-fed
+        # lanes (s.feed) drain on device instead, never through this path.
         csz = self.prefill_chunk or self._tail_chunk
         chunking = [
-            i for i, s in enumerate(self.slots) if s is not None and s.pending
+            i for i, s in enumerate(self.slots)
+            if s is not None and s.pending and not s.feed
         ]
         if not chunking:
             return
+        if self._win_chunk and self.pool is not None:
+            # windowed chunk writes walk the window ring: claim this
+            # chunk's ring slots now (full pages were mapped whole at
+            # admission; alloc_prefill deferred the ring).  Pool pressure
+            # preempts youngest-first, like the decode runway reservation.
+            for i in list(chunking):
+                s = self.slots[i]
+                if s is None:
+                    continue
+                k = min(csz, len(s.pending))
+                while self.slots[i] is not None and not self.pool.ensure_steps(
+                    i, self.slots[i].pos, k
+                ):
+                    victim = max(
+                        (j for j, t_ in enumerate(self.slots)
+                         if t_ is not None),
+                        key=lambda j: self.slots[j].seq,
+                    )
+                    self._preempt(victim, out)
+                    if victim == i:
+                        break
+            chunking = [i for i in chunking if self.slots[i] is not None]
+            if not chunking:
+                return
         nb = _next_pow2(len(chunking))
         toks = np.zeros((nb, csz), np.int32)
         lanes = np.full((nb,), self.max_batch, np.int32)  # sentinel = pad row
@@ -827,15 +1181,22 @@ class DecodeEngine:
         if finishing:
             temps = np.zeros((nb,), np.float32)
             topks = np.zeros((nb,), np.int32)
+            uids = np.zeros((nb,), np.int32)
+            counts = np.zeros((nb,), np.int32)
             for r, i in finishing:
-                sp = self.slots[i].sampling
-                temps[r] = sp.temperature
-                topks[r] = sp.top_k
-            self.key, sub = jax.random.split(self.key)
+                s = self.slots[i]
+                temps[r] = s.sampling.temperature
+                topks[r] = s.sampling.top_k
+                uids[r] = s.uid
+                counts[r] = len(s.generated)
+            keys = request_keys(
+                self.key, jnp.asarray(uids), jnp.asarray(counts)
+            )
             first = sample_tokens(
-                logits, jnp.asarray(temps), jnp.asarray(topks), sub,
+                logits, jnp.asarray(temps), jnp.asarray(topks), keys,
                 need_sample=bool((temps > 0).any()),
                 need_topk=bool((topks > 0).any()),
+                rowwise=True,
             )
             host_first = np.asarray(first)
             for r, i in finishing:
@@ -856,7 +1217,7 @@ class DecodeEngine:
         order = sorted(
             (
                 i for i, s in enumerate(self.slots)
-                if s is not None and not s.pending
+                if s is not None and (not s.pending or s.feed)
             ),
             key=lambda i: self.slots[i].seq,
         )
@@ -864,14 +1225,18 @@ class DecodeEngine:
             s = self.slots[i]
             if s is None:  # already evicted as an earlier lane's victim
                 continue
-            # a lane whose remaining token budget is < K freezes on device
-            # before the scan ends — don't reserve (and potentially preempt
-            # someone for) pages its writes will never reach
+            # a lane whose remaining token budget is < the horizon freezes
+            # on device before the loop ends — don't reserve (and
+            # potentially preempt someone for) pages its writes will never
+            # reach.  Refill-fed lanes also write their still-pending
+            # prompt tokens; every lane stops at the logical capacity.
             k = max(
                 1,
                 min(
-                    self.steps_per_dispatch,
-                    s.sampling.max_new_tokens - len(s.generated),
+                    self._horizon,
+                    len(s.pending)
+                    + max(1, s.sampling.max_new_tokens - len(s.generated)),
+                    self.max_len - s.pos,
                 ),
             )
             while self.slots[i] is not None and not self.pool.ensure_steps(
@@ -921,6 +1286,9 @@ class DecodeEngine:
                 ],
                 jnp.int32,
             ),
+            "uids": jnp.asarray(
+                [s.uid if s else 0 for s in self.slots], jnp.int32
+            ),
             "need_sample": any(
                 s is not None and not s.pending and s.sampling.temperature > 0
                 for s in self.slots
@@ -935,7 +1303,10 @@ class DecodeEngine:
 
     def step(self) -> list[GenerationResult]:
         """One scheduling step: admit what fits, advance chunked prefills,
-        run one fused K-step decode dispatch; return finished requests."""
+        run one decode dispatch (fixed-K scan) or one device-scheduler
+        cycle (run-until-stop while-loops); return finished requests."""
+        if self._device:
+            return self._step_device()
         out: list[GenerationResult] = []
         self._admit(out)
         if self.prefill_chunk is not None or self._prefix is not None:
@@ -958,17 +1329,20 @@ class DecodeEngine:
                 self.cache["tables"] = dt
         k = self.steps_per_dispatch
         budget = np.zeros((self.max_batch,), np.int32)
+        counts = np.zeros((self.max_batch,), np.int32)
         for i, s in enumerate(self.slots):
             if s is not None and not s.pending:
                 budget[i] = s.sampling.max_new_tokens - len(s.generated)
+                counts[i] = len(s.generated)
         args = (
             self.params, self.tokens, self.cache, consts["temps"],
             consts["topks"], consts["active"], consts["keep"], self.key,
-            consts["eos"], jnp.asarray(budget),
+            consts["eos"], jnp.asarray(budget), consts["uids"],
+            jnp.asarray(counts),
         )
         sig = (k, consts["need_sample"], consts["need_topk"])
         t_sched = time.perf_counter()  # warmup compile time is not host overhead
-        if sig not in self._warmed:
+        if ("decode",) + sig not in self._warmed:
             # untimed warmup: trace+compile of this variant must not land in
             # decode_wall_s (it would dominate ms_per_decode_step on short
             # runs).  The warmup runs on *copies* of the donated operands so
@@ -982,10 +1356,10 @@ class DecodeEngine:
                 wargs = (args[0], tok_c, cache_c) + args[3:]
             with self._kernel_ctx(), _quiet_donation():
                 jax.block_until_ready(self._decode(*wargs, *sig))
-            self._warmed.add(sig)
+            self._warmed.add(("decode",) + sig)
         t0 = time.perf_counter()
         with self._kernel_ctx(), _quiet_donation():
-            block, tok, self.cache, self.key = self._decode(*args, *sig)
+            block, tok, self.cache = self._decode(*args, *sig)
             tok.block_until_ready()
         t1 = time.perf_counter()
         self.decode_wall_s += t1 - t0
@@ -994,7 +1368,8 @@ class DecodeEngine:
         self.tokens = tok
         if self.pool is not None:
             self.pool.adopt_tables(self.cache.get("tables"))
-        host_block = np.asarray(block)  # (K, B): one sync per K tokens
+        host_block = self._fetch_block(block)  # (K, B): one sync per K tokens
+        self.block_fetches += 1
         live = [i for i in range(self.max_batch) if active[i]]
         for t in range(k):
             for i in list(live):
@@ -1005,6 +1380,303 @@ class DecodeEngine:
                     live.remove(i)
         t_end = time.perf_counter()
         self.sched_host_s += (t_sched - t_prefill_done) + (t_end - t1)
+        return out
+
+    # -- device-resident scheduler -------------------------------------------
+
+    def _stage_fill(self) -> None:
+        """Pre-stage queued prompts for on-device lane refill.
+
+        Pops up to ``staged_lanes`` requests and pre-reserves each one's
+        first-cycle pages (``PagedKVPool.stage_alloc`` — exposure capped
+        by the write horizon, so a mid-loop swap can never write an
+        unmapped page).  The ring is rebuilt every cycle: whatever the
+        loop does not consume is released and pushed back to the queue
+        front at the cycle boundary (``_unstage``).  Staged admissions
+        bypass the prefix index — they prefill token-by-token on device
+        into fresh pages."""
+        assert not self._staged
+        while len(self._staged) < self.staged_lanes and self.queue:
+            req = self.queue[0]
+            seq = list(req.prompt) + list(req.prefix)
+            budget = req.sampling.max_new_tokens - len(req.prefix)
+            rec = None
+            if self.pool is not None:
+                rec = self.pool.stage_alloc(len(seq), budget, self._horizon)
+                if rec is None:
+                    break  # pool pressure: stop staging this cycle
+            self.queue.popleft()
+            toks = np.zeros((self.max_len,), np.int32)
+            toks[: len(seq)] = seq
+            self._staged.append(
+                {"req": req, "rec": rec, "tokens": toks, "len": len(seq)}
+            )
+
+    def _unstage(self, skip: int = 0) -> None:
+        """Return staged-but-unconsumed entries (ring rows >= ``skip``) to
+        the queue front, releasing their pre-reserved pages."""
+        rest = self._staged[skip:]
+        self._staged = []
+        for e in reversed(rest):
+            if e["rec"] is not None:
+                self.pool.release_staged(e["rec"])
+            self.queue.appendleft(e["req"])
+
+    def _build_dstate(self) -> dict:
+        """Device scheduler state, rebuilt wholesale from host bookkeeping
+        at every cycle boundary (the host never reads it back — only the
+        token block and the consumed-refill records round-trip)."""
+        B, S = self.max_batch, self.max_len
+        Q = max(1, self.staged_lanes)
+        tok = np.zeros((B,), np.int32)
+        live = np.zeros((B,), bool)
+        occupied = np.zeros((B,), bool)
+        pend = np.zeros((B,), np.int32)
+        counts = np.zeros((B,), np.int32)
+        budget = np.zeros((B,), np.int32)
+        uids = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        topks = np.zeros((B,), np.int32)
+        eos = np.full((B,), -1, np.int32)
+        feed_buf = np.zeros((B, S), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            occupied[i] = True
+            uids[i] = s.uid
+            temps[i] = s.sampling.temperature
+            topks[i] = s.sampling.top_k
+            eos[i] = s.sampling.eos_id
+            counts[i] = len(s.generated)
+            budget[i] = max(0, s.sampling.max_new_tokens - len(s.generated))
+            if s.generated:
+                tok[i] = s.generated[-1]
+            if s.pending and s.feed:
+                # mid-refill lane: the unfed prompt tail re-stages into
+                # the lane's feed buffer and keeps draining on device
+                feed_buf[i, : len(s.pending)] = s.pending
+                pend[i] = len(s.pending)
+                live[i] = True
+            elif not s.pending:
+                live[i] = True
+            # host-chunked (non-feed) pending lanes stay occupied-not-live:
+            # their length pins while the host keeps chunking next cycle
+        s_tokens = np.zeros((Q, S), np.int32)
+        s_len = np.zeros((Q,), np.int32)
+        s_uid = np.zeros((Q,), np.int32)
+        s_count0 = np.zeros((Q,), np.int32)
+        s_temps = np.zeros((Q,), np.float32)
+        s_topks = np.zeros((Q,), np.int32)
+        s_eos = np.full((Q,), -1, np.int32)
+        s_budget = np.zeros((Q,), np.int32)
+        for r, e in enumerate(self._staged):
+            req = e["req"]
+            s_tokens[r] = e["tokens"]
+            s_len[r] = e["len"]
+            s_uid[r] = req.uid
+            s_count0[r] = len(req.prefix)
+            s_temps[r] = req.sampling.temperature
+            s_topks[r] = req.sampling.top_k
+            s_eos[r] = req.sampling.eos_id
+            s_budget[r] = max(
+                1, req.sampling.max_new_tokens - len(req.prefix)
+            )
+        # pack same-dtype vectors into stacked matrices: one host→device
+        # transfer each instead of one per field (the jitted loop unpacks
+        # rows at trace time).  row order is load-bearing — _dloop indexes
+        # by position
+        lanes_i = np.stack(
+            [tok, live.astype(np.int32), occupied.astype(np.int32), pend,
+             np.zeros((B,), np.int32),  # fed
+             counts, budget, uids, topks, eos]
+        )
+        ring_i = np.stack([s_len, s_uid, s_count0, s_topks, s_eos, s_budget])
+        d = {
+            "lanes_i": jnp.asarray(lanes_i),
+            "temps": jnp.asarray(temps),
+            "feed_buf": jnp.asarray(feed_buf),
+            "ring_i": jnp.asarray(ring_i),
+            "s_temps": jnp.asarray(s_temps),
+            "s_tokens": jnp.asarray(s_tokens),
+            "scal": jnp.asarray([0, len(self._staged)], jnp.int32),
+        }
+        if self.pool is not None:
+            lo = self.pool.layout
+            if lo.has_full:
+                s_tf = np.full((Q, lo.pages_full), lo.num_pages, np.int32)
+                for r, e in enumerate(self._staged):
+                    if e["rec"] is not None and e["rec"]["full_row"] is not None:
+                        s_tf[r] = e["rec"]["full_row"]
+                d["s_tbl_full"] = jnp.asarray(s_tf)
+            if lo.win:
+                s_tw = np.full((Q, lo.pages_win), lo.num_pages, np.int32)
+                for r, e in enumerate(self._staged):
+                    if e["rec"] is not None and e["rec"]["win_row"] is not None:
+                        s_tw[r] = e["rec"]["win_row"]
+                d["s_tbl_win"] = jnp.asarray(s_tw)
+        return d
+
+    def _replay(self, hb, steps: int, c_lane, c_step,
+                out: list[GenerationResult]) -> int:
+        """Mirror one dispatch's while-loop on the host: advance positions,
+        absorb sampled tokens through the same stop rules the device
+        applied (``_absorb``), and install refills at the iterations the
+        device performed them.  Returns the number of staged ring rows
+        this dispatch consumed."""
+        by_step: dict[int, list[int]] = {}
+        n = 0
+        for r in range(c_lane.shape[0]):
+            if c_step[r] >= 0:
+                by_step.setdefault(int(c_step[r]), []).append(r)
+                n += 1
+        for t in range(steps):
+            feeders: list[int] = []
+            samplers: list[int] = []
+            for i in range(self.max_batch):
+                s = self.slots[i]
+                if s is None:
+                    continue
+                if s.pending:
+                    if s.feed:
+                        feeders.append(i)
+                    # host-chunked lanes froze on device: skip
+                else:
+                    samplers.append(i)
+            for i in feeders + samplers:
+                self.slots[i].pos += 1  # mirror cache["len"] advancing
+            for i in feeders:
+                s = self.slots[i]
+                s.pending.pop(0)
+                if not s.pending:
+                    # the drain step also sampled the request's first token
+                    self._absorb(i, int(hb[t, i]), out)
+            for i in samplers:
+                self._absorb(i, int(hb[t, i]), out, from_decode=True)
+            for r in by_step.get(t, ()):
+                # the device swapped staged ring row r into a dead lane at
+                # the end of iteration t; its feeding starts at t+1
+                lane = int(c_lane[r])
+                e = self._staged[r]
+                assert self.slots[lane] is None, (
+                    "device refilled a lane the host still considers live"
+                )
+                if self.pool is not None and e["rec"] is not None:
+                    self.pool.adopt_staged(lane, e["rec"])
+                req = e["req"]
+                self.slots[lane] = _Slot(
+                    req, pos=0, seq=self._admit_seq,
+                    pending=list(req.prompt) + list(req.prefix), feed=True,
+                )
+                self._admit_seq += 1
+                self.admitted += 1
+                self.refills += 1
+                self._slots_dirty = True
+        return n
+
+    def _step_device(self) -> list[GenerationResult]:
+        """One device-scheduler cycle: a full-drain host sync (admission,
+        chunk drain, staging, runway reservation, state rebuild) followed
+        by W chained run-until-stop dispatches (W=2 when async streaming),
+        each fetched and replayed in launch order."""
+        out: list[GenerationResult] = []
+        self._admit(out)
+        if self.prefill_chunk is not None or self._prefix is not None:
+            # drain every host-chunked prompt before the (long) cycle: a
+            # mid-chunk lane cannot join the device loop, and one chunk
+            # per k_loop*W-step cycle would starve it
+            while True:
+                todo = sum(
+                    len(s.pending) for s in self.slots
+                    if s is not None and s.pending and not s.feed
+                )
+                if not todo:
+                    break
+                self._advance_chunks(out)
+                left = sum(
+                    len(s.pending) for s in self.slots
+                    if s is not None and s.pending and not s.feed
+                )
+                if left >= todo:
+                    break  # no progress (pool pressure): retry next cycle
+        t_prefill_done = time.perf_counter()
+        self._ensure_capacity(out)
+        self._stage_fill()
+        n_live = sum(
+            1 for s in self.slots
+            if s is not None and (not s.pending or s.feed)
+        )
+        self.max_concurrency = max(self.max_concurrency, n_live)
+        if not n_live and not self._staged:
+            return out
+        self._util_sum += self._cache_utilization()
+        self._util_n += 1
+        self._kv_bytes_sum += self._live_kv_bytes()
+        if self.pool is not None:
+            if self.pool.pending_copies:
+                self.cache = self.pool.apply_pending(self.cache)
+            dt = self.pool.device_tables()
+            if dt:  # ssm-only paged archs have no table'd layers
+                self.cache["tables"] = dt
+        dstate = self._build_dstate()
+        need_sample = any(
+            s is not None and s.sampling.temperature > 0 for s in self.slots
+        ) or any(e["req"].sampling.temperature > 0 for e in self._staged)
+        need_topk = any(
+            s is not None and s.sampling.top_k > 0 for s in self.slots
+        ) or any(e["req"].sampling.top_k > 0 for e in self._staged)
+        sig = (self.k_loop, need_sample, need_topk)
+        t_sched = time.perf_counter()
+        if ("dloop",) + sig not in self._warmed:
+            wargs = (self.params, self.cache, dstate, self.key)
+            if self.donate:
+                cache_c, dstate_c = jax.tree_util.tree_map(
+                    jnp.copy, (self.cache, dstate)
+                )
+                wargs = (self.params, cache_c, dstate_c, self.key)
+            with self._kernel_ctx(), _quiet_donation():
+                jax.block_until_ready(self._dloop(*wargs, *sig))
+            self._warmed.add(("dloop",) + sig)
+        t0 = time.perf_counter()
+        # launch all W dispatches up front: the scheduler state and cache
+        # chain device-side, so dispatch w+1 is enqueued before dispatch
+        # w's results exist — the double buffer async streaming rides on
+        records = []
+        cache = self.cache
+        with self._kernel_ctx(), _quiet_donation():
+            for _ in range(self._w):
+                block, steps, c_lane, c_step, dstate, cache = self._dloop(
+                    self.params, cache, dstate, self.key, *sig
+                )
+                records.append((block, steps, c_lane, c_step))
+                self.dispatches += 1
+        self.cache = cache
+        if self.pool is not None:
+            self.pool.adopt_tables(self.cache.get("tables"))
+        t_launched = time.perf_counter()
+        # fetch + replay in launch order: the block fetch of dispatch w
+        # blocks on w alone, so host replay (and token streaming) of w
+        # overlaps dispatch w+1 still executing on device
+        consumed = 0
+        fetch_s = 0.0
+        host_s = 0.0
+        for block, steps, c_lane, c_step in records:
+            f0 = time.perf_counter()
+            steps_i = int(steps)
+            hb = self._fetch_block(block)
+            c_lane_np = np.asarray(c_lane)
+            c_step_np = np.asarray(c_step)
+            f1 = time.perf_counter()
+            self.block_fetches += 1
+            self.decode_steps += steps_i
+            consumed += self._replay(hb, steps_i, c_lane_np, c_step_np, out)
+            host_s += time.perf_counter() - f1
+            fetch_s += f1 - f0
+        self.decode_wall_s += (t_launched - t0) + fetch_s
+        # cycle boundary: retire the consumed ring prefix (adopted at
+        # replay time), requeue the rest with their pages released
+        self._unstage(skip=consumed)
+        self.cycles += 1
+        self.sched_host_s += (t_sched - t_prefill_done) + host_s
         return out
 
     def run(self) -> dict[int, GenerationResult]:
@@ -1228,11 +1900,12 @@ class DecodeEngine:
 
             consts = self._slot_consts()
             budget = jnp.zeros((self.max_batch,), jnp.int32)
+            counts = jnp.zeros((self.max_batch,), jnp.int32)
             with self._kernel_ctx():
                 lowered = self._decode.lower(
                     self.params, self.tokens, self.cache, consts["temps"],
                     consts["topks"], consts["active"], consts["keep"],
-                    self.key, consts["eos"], budget,
+                    self.key, consts["eos"], budget, consts["uids"], counts,
                     self.steps_per_dispatch, False, False,
                 )
             compiled = lowered.compile()
@@ -1255,16 +1928,33 @@ class DecodeEngine:
         # each request's first token comes from (untimed) prefill and would
         # otherwise inflate tokens/s
         wb = self.weight_bytes_per_step()
-        kvb = (
-            self._kv_bytes_sum / self.dispatches if self.dispatches else 0.0
-        )
+        # _kv_bytes_sum is sampled once per host scheduling round: per
+        # dispatch in sync mode, per cycle under the device scheduler
+        kv_samples = self.cycles if self._device else self.dispatches
+        kvb = self._kv_bytes_sum / kv_samples if kv_samples else 0.0
         total_wall = self.decode_wall_s + self.sched_host_s
         st = {
             "layout": self.layout.kind,
+            "scheduler": "device" if self._device else "sync",
             "decode_steps": self.decode_steps,
             "dispatches": self.dispatches,
             "steps_per_dispatch": self.steps_per_dispatch,
-            "host_syncs": self.dispatches,
+            # a host sync is where scheduling can happen: every dispatch
+            # in sync mode, only each full-drain cycle boundary under the
+            # device scheduler
+            "host_syncs": self.cycles if self._device else self.dispatches,
+            "cycles": self.cycles,
+            "block_fetches": self.block_fetches,
+            "refills": self.refills,
+            "max_steps_per_dispatch": self.k_loop,
+            "staged_lanes": self.staged_lanes,
+            "async_stream": self.async_stream,
+            "itl_ms_p50": (
+                float(np.percentile(self._itl_ms, 50)) if self._itl_ms else 0.0
+            ),
+            "itl_ms_p99": (
+                float(np.percentile(self._itl_ms, 99)) if self._itl_ms else 0.0
+            ),
             "donate": self.donate,
             "admitted": self.admitted,
             "preemptions": self.preemptions,

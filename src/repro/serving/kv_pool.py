@@ -257,6 +257,7 @@ class PagedKVPool:
         prompt_len: int,
         shared_full: tuple[int, ...] = (),
         shared_len: int = 0,
+        defer_win: bool = False,
     ) -> bool:
         """Map every page the prompt's cache entries land in, plus the page
         backing the first decode write at ``prompt_len``; False if short.
@@ -273,7 +274,13 @@ class PagedKVPool:
 
         No window eviction happens here: the prefill still scatters into
         the oldest window page, so it must stay mapped until the first
-        ``ensure_steps`` (whose eviction runs after the prefill wrote)."""
+        ``ensure_steps`` (whose eviction runs after the prefill wrote).
+
+        ``defer_win=True`` (windowed *chunked* prefill) maps no window
+        pages at all: each chunk's pages are mapped just before its
+        dispatch via ``ensure_steps(lane, start, csz)``, which also evicts
+        pages the window slid past — the whole point of chunking a long
+        windowed prompt is never holding its full page span at once."""
         assert not shared_full or (self.layout.has_full and not self.layout.win)
         assert shared_len < prompt_len or not shared_full
         if self.fresh_prefill_pages(prompt_len, shared_len) > len(self._free):
@@ -297,7 +304,7 @@ class PagedKVPool:
                 pid = self._take()
                 self._full_pages[lane][next_pg] = pid
                 self._pt_full[lane, next_pg] = pid
-        if lo.win and prompt_len > 0:
+        if lo.win and prompt_len > 0 and not defer_win:
             start = max(0, prompt_len - lo.win)
             for pg in range(start // ps, (prompt_len - 1) // ps + 1):
                 pid = self._take()
@@ -373,14 +380,6 @@ class PagedKVPool:
             self._dirty_lanes.add(lane)
         return True
 
-    def ensure_step(self, lane: int, pos: int) -> bool:
-        """Deprecated PR-2/3 alias — call ``ensure_steps(lane, pos, 1)``.
-
-        Kept only so external callers written against the PR-2/3 pool keep
-        importing; new code (and the K-step fused dispatch) must reserve
-        all K writes at once via ``ensure_steps``."""
-        return self.ensure_steps(lane, pos, 1)
-
     def _evict_win(self, lane: int, pos: int) -> None:
         lo, ps = self.layout, self.layout.page_size
         start = max(0, pos - lo.win + 1)  # oldest live position after this write
@@ -407,6 +406,91 @@ class PagedKVPool:
         self._win_pages[lane] = {}
         self._pt_full[lane, :] = self.layout.sentinel
         self._pt_win[lane, :] = self.layout.sentinel
+
+    # -- staged admissions (device-resident refill) --------------------------
+    #
+    # The device-resident scheduler swaps a queued request into a freed
+    # lane *inside* the decode loop: the host pre-builds complete table
+    # rows ("staged rows") with fresh pages backing every position the
+    # device could write before the next host sync point, ships them as a
+    # loop operand, and the in-loop refill copies a staged row over the
+    # lane's row.  Staged pages are ordinary refcounted pages (off the
+    # free list at count 1) that no lane's table references yet; on the
+    # host-side replay of a consumed refill, ``adopt_staged`` installs the
+    # row as the lane's mirror, and an unconsumed stage is returned via
+    # ``release_staged``.
+
+    def _stage_exposure(self, prompt_len: int, budget: int, horizon: int) -> int:
+        """Positions ``0..e-1`` a staged request's refill may write before
+        the host next reconciles: one scheduling cycle's worth of steps
+        (``horizon``), capped by the request's own freeze point."""
+        cap = min(self.max_len, prompt_len + max(1, budget))
+        return min(max(1, horizon), cap)
+
+    def staged_pages(self, prompt_len: int, budget: int, horizon: int) -> int:
+        """Fresh pages one staged admission reserves."""
+        lo = self.layout
+        n = cdiv(self._stage_exposure(prompt_len, budget, horizon), lo.page_size)
+        return n * ((1 if lo.has_full else 0) + (1 if lo.win else 0))
+
+    def stage_alloc(
+        self, prompt_len: int, budget: int, horizon: int
+    ) -> Optional[dict]:
+        """Reserve pages + build sentinel-padded table rows for a staged
+        request; ``None`` when the pool is short (all-or-nothing).
+
+        The returned record is host-only bookkeeping (numpy rows + page
+        maps) — no lane's table row or device array is touched, so staging
+        is safe while dispatches are in flight.
+        """
+        lo, ps = self.layout, self.layout.page_size
+        if self.staged_pages(prompt_len, budget, horizon) > len(self._free):
+            return None
+        e = self._stage_exposure(prompt_len, budget, horizon)
+        rec: dict = {
+            "full_row": None, "win_row": None,
+            "full_pages": {}, "win_pages": {}, "exposure": e,
+        }
+        if lo.has_full:
+            row = np.full(lo.pages_full, lo.sentinel, np.int32)
+            for pg in range(cdiv(e, ps)):
+                pid = self._take()
+                rec["full_pages"][pg] = pid
+                row[pg] = pid
+            rec["full_row"] = row
+        if lo.win:
+            row = np.full(lo.pages_win, lo.sentinel, np.int32)
+            for pg in range(cdiv(e, ps)):
+                pid = self._take()
+                rec["win_pages"][pg] = pid
+                row[pg % lo.pages_win] = pid
+            rec["win_row"] = row
+        return rec
+
+    def release_staged(self, rec: dict) -> None:
+        """Return an unconsumed stage's pages (request went back to the
+        queue for a normal host admission)."""
+        for pid in rec["full_pages"].values():
+            self.decref(pid)
+        for pid in rec["win_pages"].values():
+            self.decref(pid)
+
+    def adopt_staged(self, lane: int, rec: dict) -> None:
+        """Install a consumed stage as ``lane``'s mappings (host replay of
+        an in-loop refill).  The device's loop already holds exactly this
+        row for the lane, and ``release`` of the lane's previous request
+        already marked it dirty — the next sync rewrites identical values,
+        which is harmless."""
+        assert not self._full_pages[lane] and not self._win_pages[lane], (
+            f"adopt_staged into occupied lane {lane}"
+        )
+        self._full_pages[lane] = dict(rec["full_pages"])
+        self._win_pages[lane] = dict(rec["win_pages"])
+        if rec["full_row"] is not None:
+            self._pt_full[lane, :] = rec["full_row"]
+        if rec["win_row"] is not None:
+            self._pt_win[lane, :] = rec["win_row"]
+        self._dirty_lanes.add(lane)
 
     # -- copy-on-write materialization ---------------------------------------
 
@@ -496,20 +580,38 @@ class PagedKVPool:
             self._dirty_lanes.clear()
             self.table_full_uploads += 1
             self.table_syncs += 1
+            # pre-compile every padded scatter shape (no-op scatters of row
+            # 0 onto itself): the first dirty-row sync otherwise pays a
+            # trace+compile inside a *timed* host-scheduling window, which
+            # dominates short benches
+            pad = 1
+            while pad <= self.max_batch:
+                self._scatter_rows(t, [0] * min(pad, self.max_batch))
+                pad *= 2
             return self._dev_tables
         if self._dirty_lanes:
             rows = sorted(self._dirty_lanes)
-            idx = jnp.asarray(rows, jnp.int32)
-            t = dict(self._dev_tables)
-            if self.layout.pages_full:
-                t["full"] = t["full"].at[idx].set(jnp.asarray(self._pt_full[rows]))
-            if self.layout.pages_win:
-                t["win"] = t["win"].at[idx].set(jnp.asarray(self._pt_win[rows]))
-            self._dev_tables = t
+            n_dirty = len(rows)
+            # pad the row list to the next power of two (duplicate indices
+            # rewrite identical rows) so every dirty count ≤ max_batch
+            # reuses one of O(log max_batch) compiled scatter shapes
+            pad = 1
+            while pad < n_dirty:
+                pad *= 2
+            rows = rows + [rows[0]] * (pad - n_dirty)
+            self._dev_tables = self._scatter_rows(dict(self._dev_tables), rows)
             self._dirty_lanes.clear()
-            self.table_row_syncs += len(rows)
+            self.table_row_syncs += n_dirty
             self.table_syncs += 1
         return self._dev_tables
+
+    def _scatter_rows(self, t: dict, rows: list) -> dict:
+        idx = jnp.asarray(rows, jnp.int32)
+        if self.layout.pages_full:
+            t["full"] = t["full"].at[idx].set(jnp.asarray(self._pt_full[rows]))
+        if self.layout.pages_win:
+            t["win"] = t["win"].at[idx].set(jnp.asarray(self._pt_win[rows]))
+        return t
 
     def adopt_tables(self, tables: Optional[dict]) -> None:
         """Re-anchor the incremental sync on the arrays a jitted call

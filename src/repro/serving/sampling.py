@@ -12,6 +12,14 @@ tokens, so per-lane EOS / token-budget / capacity stops are detected on
 device and finished lanes freeze (stop sampling, stop writing, stop
 advancing ``cache["len"]``) until the host absorbs the token block at the
 dispatch boundary and replays the same rules.
+
+:func:`request_keys` derives the per-row sampling keys: the key for a
+request's c-th generated token is ``fold_in(fold_in(base, uid), c)``,
+a pure function of (request, token index).  Sampled streams are therefore
+identical no matter which lane a request lands in, which dispatch
+boundary splits its decode, which scheduler (fixed-K sync or the
+device-resident run-until-stop loop) drives it, or whether it was
+preempted and resumed — the property the scheduler-equivalence tests pin.
 """
 from __future__ import annotations
 
@@ -31,6 +39,22 @@ class SamplingParams:
     eos_id: int = -1  # -1 = never stop on a token
 
 
+def request_keys(
+    base_key: jax.Array,
+    uids: jnp.ndarray,  # (B,) int32 request ids
+    counts: jnp.ndarray,  # (B,) int32 generated-token index per row
+) -> jax.Array:
+    """Per-row sampling keys: ``fold_in(fold_in(base, uid), count)``.
+
+    Deterministic per (request, generated-token index), so a request's
+    sampled stream does not depend on its lane, its batch-mates, or how
+    dispatches were cut — only on the engine's base seed.
+    """
+    return jax.vmap(
+        lambda u, c: jax.random.fold_in(jax.random.fold_in(base_key, u), c)
+    )(uids, counts)
+
+
 def sample_tokens(
     logits: jnp.ndarray,  # (B, V)
     temperature: jnp.ndarray,  # (B,) f32; 0 = greedy
@@ -39,6 +63,7 @@ def sample_tokens(
     *,
     need_sample: bool = True,  # static: False = every row is greedy
     need_topk: bool = True,  # static: False = no row filters by top-k
+    rowwise: bool = False,  # static: key is a (B,)-stacked per-row key array
 ) -> jnp.ndarray:
     """Sample one token per batch row under per-row (temperature, top_k).
 
@@ -46,6 +71,10 @@ def sample_tokens(
     the current request mix) so all-greedy batches — the common serving
     case — compile to a bare argmax with no O(B·V·logV) sort and no
     categorical draw in the decode hot path.
+
+    With ``rowwise=True`` ``key`` is a stacked per-row key array (from
+    :func:`request_keys`) and each row draws from its own key; otherwise
+    one key is shared across the batch (legacy path, kept for tests).
     """
     lf = logits.astype(jnp.float32)
     v = lf.shape[-1]
@@ -60,7 +89,13 @@ def sample_tokens(
     if not need_sample:
         return greedy
     safe_t = jnp.where(temperature > 0, temperature, 1.0)
-    sampled = jax.random.categorical(key, lf / safe_t[:, None], axis=-1)
+    scaled = lf / safe_t[:, None]
+    if rowwise:
+        sampled = jax.vmap(
+            lambda kk, row: jax.random.categorical(kk, row)
+        )(key, scaled)
+    else:
+        sampled = jax.random.categorical(key, scaled, axis=-1)
     return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
 
 

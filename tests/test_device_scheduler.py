@@ -1,0 +1,342 @@
+"""Device-resident scheduler: run-until-stop decode, on-device lane
+refill, async double-buffered token streams.
+
+Load-bearing guarantees:
+
+1. **Scheduler equivalence** — greedy *and* sampled token streams are
+   bit-identical between the fixed-K sync engine and every device-
+   scheduler variant ({run-until-stop} × {staged refill} × {async
+   double-buffer}) over {slab, paged} × {compressed, dense}, on a single
+   device and on an emulated (2,4) mesh.  Sampling keys derive from
+   (request uid, token index) — ``sampling.request_keys`` — so the
+   stream cannot depend on lanes, batch-mates, or dispatch cuts.
+2. **Mid-loop freezes** — EOS, token-budget, and logical-capacity stops
+   detected inside the while-loop freeze lanes exactly where the host
+   replay finishes them (same rules, same tokens, same finish reasons).
+3. **On-device refill** — with more requests than lanes, frozen lanes
+   are swapped for staged prompts inside the dispatch (``refills > 0``)
+   and the refilled requests' streams match their sync-scheduler runs,
+   including the interaction with prefix-cached shared pages.
+4. **Async ordering** — with a forced-slow host block fetch the
+   double-buffered engine still replays blocks in dispatch order and
+   produces identical streams.
+5. **Windowed chunked prefill** — a sliding-window arch on the paged
+   layout absorbs long prompts chunk-by-chunk (windowed ring views)
+   bit-identically to monolithic prefill; the slab stays gated off.
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.configs import get_config
+from repro.models.model import TransformerLM
+from repro.serving import DecodeEngine, SamplingParams
+
+from repro.sparse_infer import compress_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+N_DEV = len(jax.devices())
+needs8 = pytest.mark.skipif(
+    N_DEV < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+def _trees(arch: str, **overrides):
+    cfg = get_config(arch, smoke=True)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    recipe = core.make_recipe(
+        "step", core.SparsityConfig(default=core.NMSparsity(2, 4))
+    )
+    sparse = recipe.export_sparse(params)
+    return cfg, model, sparse, compress_params(sparse, recipe.sparsity)
+
+
+CFG, MODEL, SPARSE, COMP = _trees("gpt2-paper")
+
+
+def _rand_prompt(seed, n, vocab=None):
+    vocab = vocab or CFG.vocab
+    return [
+        int(t)
+        for t in jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, vocab)
+    ]
+
+
+def _mixed_load(n=6, gen=8, eos_id=-1):
+    """More requests than lanes, mixed greedy/sampled, staggered budgets."""
+    prompts = [_rand_prompt(50 + r, 2 + (r % 4)) for r in range(n)]
+    sps = []
+    for r in range(n):
+        if r % 3 == 1:
+            sps.append(SamplingParams(
+                temperature=0.8, top_k=7, max_new_tokens=gen - r % 2,
+                eos_id=eos_id,
+            ))
+        else:
+            sps.append(SamplingParams(
+                max_new_tokens=gen + (r % 3), eos_id=eos_id,
+            ))
+    return prompts, sps
+
+
+def _stream(eng, prompts, sps):
+    uids = [eng.submit(p, sp) for p, sp in zip(prompts, sps)]
+    res = eng.run()
+    return (
+        [res[u].tokens for u in uids],
+        [res[u].finish_reason for u in uids],
+    )
+
+
+def _run(tree, prompts, sps, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 32)
+    eng = DecodeEngine(MODEL, tree, seed=11, **kw)
+    return _stream(eng, prompts, sps), eng
+
+
+DEVICE_VARIANTS = [
+    dict(max_steps_per_dispatch=5),
+    dict(max_steps_per_dispatch=5, staged_lanes=2),
+    dict(max_steps_per_dispatch=5, staged_lanes=2, async_stream=True),
+]
+
+
+# ---------------------------------------------------------------------------
+# scheduler equivalence: sync fixed-K vs device variants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["slab", "paged"])
+def test_scheduler_equivalence_compressed(paged):
+    prompts, sps = _mixed_load()
+    pkw = dict(num_pages=64, page_size=4) if paged else {}
+    base, _ = _run(COMP, prompts, sps, steps_per_dispatch=4, **pkw)
+    for variant in DEVICE_VARIANTS:
+        got, eng = _run(COMP, prompts, sps, **variant, **pkw)
+        assert got == base, variant
+        if variant.get("staged_lanes"):
+            assert eng.refills > 0  # swaps actually happened on device
+        if variant.get("async_stream"):
+            assert eng.dispatches == 2 * eng.cycles  # double-buffered
+
+
+def test_scheduler_equivalence_dense_tree():
+    prompts, sps = _mixed_load(n=4)
+    base, _ = _run(SPARSE, prompts, sps, steps_per_dispatch=2)
+    got, _ = _run(
+        SPARSE, prompts, sps,
+        max_steps_per_dispatch=6, staged_lanes=2, async_stream=True,
+    )
+    assert got == base
+
+
+def test_run_until_stop_amortizes_host_syncs():
+    """Uniform long generations: the while-loop runs to its bound, so the
+    device scheduler syncs the host strictly fewer times than the
+    equal-K sync engine dispatches."""
+    prompts = [_rand_prompt(70 + r, 3) for r in range(2)]
+    sps = [SamplingParams(max_new_tokens=12) for _ in prompts]
+    base, sync_eng = _run(COMP, prompts, sps, steps_per_dispatch=4)
+    got, dev_eng = _run(COMP, prompts, sps, max_steps_per_dispatch=12)
+    assert got == base
+    assert dev_eng.stats()["host_syncs"] < sync_eng.stats()["host_syncs"]
+    assert dev_eng.stats()["scheduler"] == "device"
+
+
+# ---------------------------------------------------------------------------
+# mid-loop freezes: EOS / budget / capacity
+# ---------------------------------------------------------------------------
+
+
+def test_midloop_eos_freeze_matches_sync():
+    """Pick an EOS id off a baseline greedy stream so it actually fires
+    mid-loop; all variants must finish that lane identically."""
+    prompts = [_rand_prompt(90 + r, 3) for r in range(3)]
+    sps = [SamplingParams(max_new_tokens=10) for _ in prompts]
+    (toks, _), _ = _run(COMP, prompts, sps, steps_per_dispatch=1)
+    eos = toks[0][4]  # fires mid-while-loop for K=5
+    sps = [SamplingParams(max_new_tokens=10, eos_id=eos) for _ in prompts]
+    base, _ = _run(COMP, prompts, sps, steps_per_dispatch=1)
+    assert "eos" in base[1]
+    for variant in DEVICE_VARIANTS:
+        got, _ = _run(COMP, prompts, sps, **variant)
+        assert got == base, variant
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["slab", "paged"])
+def test_midloop_capacity_and_budget_freezes(paged):
+    """Tight max_len: some lanes hit logical capacity mid-loop (including
+    refilled lanes whose prompt+budget overruns it), others exhaust
+    budgets of different parities."""
+    prompts = [_rand_prompt(120 + r, 4 + r) for r in range(5)]
+    sps = [
+        SamplingParams(max_new_tokens=3 + 4 * r) for r in range(5)
+    ]
+    pkw = dict(num_pages=64, page_size=2) if paged else {}
+    base, _ = _run(COMP, prompts, sps, max_len=14, steps_per_dispatch=3, **pkw)
+    assert "cache_full" in base[1] and "length" in base[1]
+    for variant in DEVICE_VARIANTS:
+        got, _ = _run(COMP, prompts, sps, max_len=14, **variant, **pkw)
+        assert got == base, variant
+
+
+# ---------------------------------------------------------------------------
+# refill × prefix cache, and refill into preempt-resumed requests
+# ---------------------------------------------------------------------------
+
+
+def test_refill_with_prefix_cache_shared_pages():
+    """Staged refills write fresh pages while earlier admissions share
+    prefix-cached (refcounted, COW) pages: streams must still match the
+    prefix-less sync engine."""
+    head = _rand_prompt(7, 6)
+    prompts = [head + _rand_prompt(200 + r, 2 + r % 3) for r in range(6)]
+    sps = [SamplingParams(max_new_tokens=6 + r % 4) for r in range(6)]
+    pkw = dict(num_pages=96, page_size=2)
+    base, _ = _run(COMP, prompts, sps, steps_per_dispatch=2, **pkw)
+    # staged_lanes=1 so the overflow splits between device refills and
+    # later host admissions — the latter hit the prefix index (refills
+    # deliberately bypass it; see engine docstring).
+    got, eng = _run(
+        COMP, prompts, sps, prefix_cache=True,
+        max_steps_per_dispatch=5, staged_lanes=1, async_stream=True, **pkw,
+    )
+    assert got == base
+    assert eng.refills > 0
+    assert eng.prefix_hits > 0  # queue admissions still hit the index
+
+
+def test_refill_under_pool_pressure_preempts_and_resumes():
+    """An undersized pool: staging backs off (stage_alloc refuses), lanes
+    preempt and resume, and the device scheduler still reproduces the
+    sync streams token for token."""
+    prompts = [_rand_prompt(300 + r, 3) for r in range(4)]
+    sps = [SamplingParams(max_new_tokens=10) for _ in prompts]
+    pkw = dict(num_pages=26, page_size=2, max_len=16)
+    base, _ = _run(COMP, prompts, sps, steps_per_dispatch=2, **pkw)
+    got, eng = _run(
+        COMP, prompts, sps,
+        max_steps_per_dispatch=4, staged_lanes=2, **pkw,
+    )
+    assert got == base
+
+
+# ---------------------------------------------------------------------------
+# async double-buffering under forced-slow host reads
+# ---------------------------------------------------------------------------
+
+
+def test_async_stream_forced_slow_fetch_keeps_order():
+    prompts, sps = _mixed_load(n=5)
+    base, _ = _run(COMP, prompts, sps, steps_per_dispatch=4)
+    eng = DecodeEngine(
+        MODEL, COMP, max_batch=2, max_len=32, seed=11,
+        max_steps_per_dispatch=5, staged_lanes=2, async_stream=True,
+    )
+    fetched = []
+
+    def slow_fetch(block):
+        time.sleep(0.02)  # dispatch N+1 finishes well before this returns
+        hb = np.asarray(block)
+        fetched.append(hb.shape)
+        return hb
+
+    eng._fetch_block = slow_fetch
+    got = _stream(eng, prompts, sps)
+    assert got == base
+    assert len(fetched) == eng.dispatches == 2 * eng.cycles
+    assert eng.stats()["block_fetches"] == eng.dispatches
+    assert eng.stats()["itl_ms_p99"] >= eng.stats()["itl_ms_p50"] > 0
+
+
+# ---------------------------------------------------------------------------
+# windowed chunked prefill (paged ring views); slab stays gated
+# ---------------------------------------------------------------------------
+
+
+def test_windowed_chunked_prefill_parity_paged():
+    cfg, model, _, comp = _trees("gpt2-paper", local_window=8)
+    prompts = [_rand_prompt(400 + r, 11 + r, cfg.vocab) for r in range(3)]
+    sps = [SamplingParams(max_new_tokens=5) for _ in prompts]
+
+    def run(**kw):
+        eng = DecodeEngine(
+            model, comp, max_batch=2, max_len=32, seed=3,
+            num_pages=64, page_size=4, **kw,
+        )
+        return _stream(eng, prompts, sps), eng
+
+    base, _ = run()
+    got, eng = run(prefill_chunk=4)
+    assert eng.prefill_chunk == 4  # the windowed gate is lifted on paged
+    assert got == base
+    assert eng.prefill_chunks > 0
+
+
+def test_windowed_chunked_prefill_device_scheduler():
+    """Chunked windowed prompts drain fully at the cycle boundary, then
+    the lanes join the run-until-stop loop; streams match monolithic."""
+    cfg, model, _, comp = _trees("gpt2-paper", local_window=8)
+    prompts = [_rand_prompt(500 + r, 10 + 2 * r, cfg.vocab) for r in range(4)]
+    sps = [SamplingParams(max_new_tokens=6) for _ in prompts]
+
+    def run(**kw):
+        eng = DecodeEngine(
+            model, comp, max_batch=2, max_len=32, seed=3,
+            num_pages=96, page_size=4, **kw,
+        )
+        return _stream(eng, prompts, sps), eng
+
+    base, _ = run()
+    got, eng = run(
+        prefill_chunk=4, max_steps_per_dispatch=5, staged_lanes=2,
+        async_stream=True,
+    )
+    assert got == base
+    assert eng.prefill_chunks > 0
+
+
+def test_windowed_chunked_prefill_stays_gated_on_slab():
+    cfg, model, _, comp = _trees("gpt2-paper", local_window=8)
+    eng = DecodeEngine(model, comp, max_batch=1, max_len=32, prefill_chunk=4)
+    assert eng.prefill_chunk is None  # slab has no window ring to view
+    prompts = [_rand_prompt(600, 12, cfg.vocab)]
+    sps = [SamplingParams(max_new_tokens=4)]
+    base = _stream(
+        DecodeEngine(model, comp, max_batch=1, max_len=32, donate=False),
+        prompts, sps,
+    )
+    assert _stream(eng, prompts, sps) == base
+    assert eng.prefill_chunks == 0
+
+
+# ---------------------------------------------------------------------------
+# emulated (2,4) mesh parity
+# ---------------------------------------------------------------------------
+
+
+@needs8
+@pytest.mark.parametrize("paged", [False, True], ids=["slab", "paged"])
+def test_device_scheduler_mesh_parity(paged):
+    from repro.launch.mesh import make_local_mesh
+
+    prompts, sps = _mixed_load(n=5)
+    pkw = dict(num_pages=64, page_size=4) if paged else {}
+    base, _ = _run(COMP, prompts, sps, steps_per_dispatch=4, **pkw)
+    mesh = make_local_mesh(4, data=2)
+    got, eng = _run(
+        COMP, prompts, sps, mesh=mesh,
+        max_steps_per_dispatch=5, staged_lanes=2, async_stream=True, **pkw,
+    )
+    assert got == base
+    assert eng.refills > 0

@@ -269,8 +269,11 @@ def test_chunked_prefill_mla_paged():
 
 
 def test_chunked_prefill_gated_off_recurrent_and_windowed():
-    """Recurrent-state and sliding-window archs silently keep monolithic
-    prefill (their mixers cannot resume mid-prompt from the cache)."""
+    """Recurrent-state archs silently keep monolithic prefill (their
+    mixers cannot resume mid-prompt from the cache).  Sliding-window
+    attention now chunks on the paged layout — its ring views reconstruct
+    the live window — but stays gated on the slab; both sides are locked
+    by tests/test_device_scheduler.py."""
     cfg, model, comp = _compressed("recurrentgemma-9b")
     eng = DecodeEngine(model, comp, max_batch=1, max_len=40, prefill_chunk=4)
     assert eng.prefill_chunk is None
