@@ -55,6 +55,16 @@ paged fast path's read set).
    at equal bytes) — admitted concurrency is the column int8 exists to
    grow.
 
+6. **self-speculative decoding** (paged, greedy): the sweep-3 workload
+   served with ``spec_gamma = max(K)`` — a drafter scan plus one chunked
+   verify pass per host sync.  The ``self`` pairing (drafter == verifier,
+   acceptance 1.0 by construction) is asserted to commit strictly more
+   tokens per host sync than the best fused K=8 dispatch; the ``cross``
+   pairing (compressed drafter, masked-dense verifier) records the honest
+   acceptance rate and amortized bytes/accepted-token.  Both pairings'
+   greedy streams must be bit-identical to a plain engine serving the
+   verifier tree (losslessness).
+
 Every row is also appended to a machine-readable ``BENCH_serve.json``
 (list of record dicts) so the perf trajectory accumulates across runs.
 **Schema note**: every record carries a ``mesh`` field —
@@ -112,7 +122,15 @@ SCHEMA_NOTE = {
         "us_per_decode_step_host_fixedk carries the best fixed-K sweep-3 "
         "baseline for comparison, refills counts on-device lane swaps from "
         "the staged ring, and itl_ms_p50/p99 are host-side inter-token "
-        "latencies."
+        "latencies. from the speculative-decoding PR onward, speculative "
+        "rows record a drafter/verifier pairing (variant self | cross): "
+        "host_syncs counts draft+verify round trips, "
+        "host_syncs_per_accepted_token amortizes them over committed "
+        "tokens next to the K=8 fused baseline "
+        "(host_syncs_per_token_fixedk), acceptance_rate / "
+        "accepted_per_verify / bytes_per_accepted_token carry the "
+        "speculative economics, and greedy_parity_with_verifier marks "
+        "losslessness against a plain engine serving the verifier tree."
     ),
 }
 
@@ -757,6 +775,90 @@ def run(
     )
     records.extend(prefix_records)
 
+    # -- sweep 6: self-speculative decoding vs fused K-step decode -------------
+    # Same paged workload as sweep 3.  Two drafter/verifier pairings:
+    # "self" (drafter == verifier == compressed: acceptance is 1.0 by
+    # construction, so gamma+1 tokens commit per host sync — the
+    # apples-to-apples sync-amortization comparison against the K=8 fused
+    # baseline, asserted below) and "cross" (compressed drafter,
+    # masked-dense verifier — the honest two-fidelity pairing; its
+    # acceptance rate on *untrained* weights is recorded, not asserted).
+    # Greedy streams must match a plain engine serving the verifier tree
+    # (the losslessness guarantee), both pairings.
+    # gamma = 2K: with full acceptance one draft+verify round commits a
+    # whole request's remaining budget, so syncs/accepted-token lands
+    # strictly under the fused baseline (gamma = K would only *tie* it —
+    # the budget-truncated last round gives back the +1 bonus advantage)
+    spec_g = 2 * max(steps_sweep)
+    fixedk_syncs_per_tok = (
+        fixedk_st["host_syncs"] / fixedk_st["decode_tokens"]
+        if fixedk_st["decode_tokens"] else float("inf")
+    )
+    _, sparse_streams = _drain_streams(
+        DecodeEngine(
+            model, sparse, max_batch=k_batch, max_len=k_max_len,
+            num_pages=k_pages, page_size=k_page_size, donate=False,
+        ),
+        k_prompts, gen,
+    )
+    spec_failures: list[str] = []
+    for variant, draft_tree, verify_tree, verify_streams in (
+        ("self", comp, comp, base_streams),
+        ("cross", comp, sparse, sparse_streams),
+    ):
+        engine = DecodeEngine(
+            model, draft_tree, max_batch=k_batch, max_len=k_max_len,
+            num_pages=k_pages, page_size=k_page_size, donate=True,
+            spec_gamma=spec_g, verify_params=verify_tree,
+        )
+        st, streams = _drain_streams(engine, k_prompts, gen)
+        parity = streams == verify_streams
+        if not parity:
+            spec_failures.append(f"{variant}:parity")
+        syncs_per_acc = (
+            st["host_syncs"] / st["spec_emitted_tokens"]
+            if st["spec_emitted_tokens"] else float("inf")
+        )
+        emit(
+            f"serve/{arch}/{n}:{m}/speculative/{variant}",
+            st["ms_per_decode_step"] * 1e3,
+            f"gamma={spec_g} accept={st['acceptance_rate']:.3f} "
+            f"acc/verify={st['accepted_per_verify']:.2f} "
+            f"syncs/tok={syncs_per_acc:.4f} "
+            f"(k8={fixedk_syncs_per_tok:.4f}) parity={parity}",
+        )
+        records.append(
+            {
+                "suite": "serve",
+                "sweep": "speculative",
+                "variant": variant,
+                "mesh": MESH_SINGLE,
+                "arch": arch,
+                "nm": f"{n}:{m}",
+                "layout": "paged",
+                "batch": k_batch,
+                "spec_gamma": spec_g,
+                "spec_rounds": st["spec_rounds"],
+                "draft_tokens": st["draft_tokens"],
+                "verify_tokens": st["verify_tokens"],
+                "accepted_draft_tokens": st["accepted_draft_tokens"],
+                "acceptance_rate": st["acceptance_rate"],
+                "accepted_per_verify": st["accepted_per_verify"],
+                "bytes_per_accepted_token": st["bytes_per_accepted_token"],
+                "host_syncs": st["host_syncs"],
+                "host_syncs_per_accepted_token": syncs_per_acc,
+                "host_syncs_per_token_fixedk": fixedk_syncs_per_tok,
+                "greedy_parity_with_verifier": parity,
+                "tokens_per_s": st["tokens_per_s"],
+            }
+        )
+        if variant == "self" and not syncs_per_acc < fixedk_syncs_per_tok:
+            spec_failures.append(
+                f"self: {syncs_per_acc:.4f} syncs/accepted-token not "
+                f"under the K={max(steps_sweep)} baseline "
+                f"{fixedk_syncs_per_tok:.4f}"
+            )
+
     if out_json:
         # schema note: documents the mesh field + per-shard / prefix-cache
         # columns; upserted so the note tracks the current schema exactly
@@ -774,5 +876,8 @@ def run(
     )
     assert not prefix_failures, (
         f"prefix-cache/int8 sweep regressions: {prefix_failures}"
+    )
+    assert not spec_failures, (
+        f"speculative sweep regressions: {spec_failures}"
     )
     return records

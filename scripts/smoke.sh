@@ -68,6 +68,24 @@ assert s["kv_quant"], s
 print("prefix_hit_rate:", s["prefix_hit_rate"])
 '
 
+echo "== serve smoke (self-speculative: draft+verify, acceptance > 0) =="
+# --dense makes the serving tree the masked-dense verifier itself, so
+# every draft must be accepted — a sub-1 acceptance rate (or zero
+# speculative rounds) means the draft/verify/rollback seam regressed
+python -m repro.launch.serve --arch gpt2-paper --batch 2 --requests 3 \
+    --prompt-len 8 --gen 10 --paged --page-size 4 --num-pages 32 \
+    --dense --spec-gamma 4 \
+  | tail -1 | python -c '
+import json, sys
+s = json.loads(sys.stdin.read())["summary"]
+assert s["spec_rounds"] > 0, s
+assert s["acceptance_rate"] > 0, s
+assert s["accepted_per_verify"] > 1, s
+assert s["host_syncs"] == s["spec_rounds"], s
+print("acceptance_rate:", s["acceptance_rate"],
+      "accepted_per_verify:", round(s["accepted_per_verify"], 2))
+'
+
 echo "== serve smoke (mesh-native engine, degenerate 1x1 mesh) =="
 python -m repro.launch.serve --arch gpt2-paper --batch 2 --requests 2 \
     --prompt-len 6 --gen 6 --paged --page-size 4 --num-pages 16 --mesh 1,1

@@ -256,6 +256,29 @@ def serving_param_shardings(
     )
 
 
+def verifier_param_shardings(
+    mesh: Mesh, params_like: Any, *, cfg=None
+) -> Any:
+    """NamedSharding tree for a speculative-decoding *verifier* tree.
+
+    The verifier is the higher-fidelity twin of the served artifact — the
+    dense source weights, or a looser N:M pattern (4:8 next to a 2:4
+    drafter).  Its leaves take exactly the serving placement rules with
+    FSDP off (the verify pass, like decode, reads every weight it touches
+    in one dispatch, so there is no gather to amortize): dense leaves
+    follow the dense TP rules, compressed leaves the ``compressed_pspec``
+    derivation.  Kept as its own entry point so the engine's two parameter
+    pytrees (drafter + verifier) visibly share one placement seam — the
+    verify dispatch is mesh-native on the same ``("data", "model")`` mesh
+    and under the shard_map kernel route, with no resharding between the
+    draft scan and the verify pass.
+
+    ``CompressedTensor`` verifier leaves must be ``annotate_reduction_tp``
+    -stamped first, same as the serving tree (the engine does both).
+    """
+    return serving_param_shardings(mesh, params_like, cfg=cfg, fsdp=False)
+
+
 def serving_cache_pspecs(
     mesh: Mesh, cache_like: Any, layout=None, *, kv_shard: str = "seq"
 ) -> Any:

@@ -44,6 +44,16 @@ pspec seam, KV caches sequence/pages-sharded per ``--kv-shard``), and the
 summary grows per-shard HBM bytes and the decode executable's collective
 counts.  On CPU, emulate a mesh with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8 ... --mesh 2,4``.
+
+Self-speculative decoding: ``--spec-gamma N`` (or ``auto``) drafts N
+tokens per lane with the *serving tree* (the compressed N:M artifact, or
+the masked-dense tree under ``--dense``) and verifies them in one chunked
+pass through the masked-dense weights — both trees fall out of the same
+STEP run, no separately trained drafter.  Output streams are exactly the
+dense verifier's (longest-prefix accept under greedy, rejection sampling
+otherwise); the summary gains ``acceptance_rate``, ``spec_gamma``, and
+draft/verify token counts next to ``kernel_route``.  ``auto`` picks γ
+from the drafter/verifier byte ratio via the engine's roofline model.
 """
 from __future__ import annotations
 
@@ -62,7 +72,9 @@ from repro.sparse_infer import compress_params, compression_report
 
 
 def build_serving_state(args) -> tuple:
-    """(model, serving_tree, compression_report) from CLI args."""
+    """(model, serving_tree, compression_report, sparse_tree) from CLI
+    args.  ``sparse_tree`` (the masked-dense Π_T ⊙ w_T weights) doubles
+    as the speculative verifier — the two fidelities of one STEP run."""
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.frontend != "none":
         raise SystemExit("serve demo targets token-input archs")
@@ -86,7 +98,7 @@ def build_serving_state(args) -> tuple:
     comp = compress_params(sparse, recipe.sparsity)
     rep = compression_report(sparse, comp)
     serving_tree = sparse if args.dense else comp
-    return model, serving_tree, rep
+    return model, serving_tree, rep, sparse
 
 
 def main(argv=None) -> dict:
@@ -158,7 +170,18 @@ def main(argv=None) -> dict:
                     help="give every request the same leading N prompt "
                          "tokens (exercises --prefix-cache; the tail stays "
                          "per-request random)")
+    ap.add_argument("--spec-gamma", default=None,
+                    help="self-speculative decoding: draft this many tokens "
+                         "per lane with the serving tree, verify in one "
+                         "chunked pass through the masked-dense weights "
+                         "('auto' picks gamma from the byte-ratio roofline; "
+                         "attention-family archs, sync scheduler only)")
     args = ap.parse_args(argv)
+    spec_gamma = None
+    if args.spec_gamma is not None:
+        spec_gamma = (
+            "auto" if args.spec_gamma == "auto" else int(args.spec_gamma)
+        )
     if (args.prefix_cache or args.kv_int8) and not args.paged:
         raise SystemExit("--prefix-cache/--kv-int8 require --paged")
 
@@ -169,7 +192,7 @@ def main(argv=None) -> dict:
         d, m = (int(v) for v in args.mesh.split(","))
         mesh = make_local_mesh(m, data=d)
 
-    model, serving_tree, rep = build_serving_state(args)
+    model, serving_tree, rep, sparse = build_serving_state(args)
     cfg = model.cfg
     print(json.dumps({"compression": rep}))
 
@@ -201,6 +224,10 @@ def main(argv=None) -> dict:
         kv_shard=args.kv_shard,
         prefix_cache=args.prefix_cache,
         kv_quant=args.kv_int8,
+        spec_gamma=spec_gamma,
+        # masked-dense verifier: with --dense the drafter IS the verifier
+        # (acceptance is then 1.0 by construction — a plumbing check)
+        verify_params=sparse if spec_gamma is not None else None,
     )
     n_requests = args.batch if args.requests is None else args.requests
     sampling = SamplingParams(
@@ -253,6 +280,16 @@ def main(argv=None) -> dict:
         # sharded sweep compares xla vs shard_map streams on this field
         "kernel_route": engine.kernel_route(),
     }
+    if spec_gamma is not None:
+        # speculative health next to the route: how long the drafts ran,
+        # how many survived the dense verifier, and the amortized weight
+        # stream each committed token paid for
+        for key in (
+            "spec_gamma", "spec_rounds", "draft_tokens", "verify_tokens",
+            "accepted_draft_tokens", "acceptance_rate",
+            "accepted_per_verify", "bytes_per_accepted_token",
+        ):
+            summary[key] = st[key]
     if args.paged:
         # pool/page-sharing health next to the route: sync costs, window
         # reclamation, and the prefix-cache / copy-on-write counters

@@ -236,6 +236,18 @@ class PagedLayout:
     is ``num_pages`` pages shared by all lanes — one page id is backed in
     every paged layer's pool, so "allocating a page" reserves a token block
     across the whole model at once.
+
+    **Truncate-aware views.**  Every read path — the decode views
+    (``attn_rw`` / the ``paged_attn`` kernel's length operand), the chunk
+    views (``attn_chunk_view`` and the MLA analogues) — masks by the
+    lane's live length (``cache["len"]`` / the attention length mask),
+    never by what a page physically holds.  Rewinding ``cache["len"]``
+    therefore *is* a truncation: stale KV past the new length (e.g. a
+    speculative draft tail the verifier rejected) is unreachable, and the
+    host pool can release the over-reserved pages
+    (``PagedKVPool.rollback``) — their table slots return to the
+    out-of-bounds sentinel, which scatters drop and gathers clip to a
+    masked row.  No page contents are ever scrubbed on rollback.
     """
 
     page_size: int

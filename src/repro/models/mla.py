@@ -133,7 +133,14 @@ def mla_chunk(
     attends its queries over that lane's whole cached prefix (the per-row
     ``q_offset`` supplies the causal offsets).  Pad rows produce garbage
     that the caller discards — only position ``lengths[r]-1``'s logits are
-    consumed, and only on a lane's final chunk."""
+    consumed, and only on a lane's final chunk.
+
+    This same seam scores speculative drafts: the verify pass feeds the
+    last committed token plus the ``gamma`` drafts as one ``gamma+1``-wide
+    chunk, so every draft position's latents are (re)written at verifier
+    fidelity and attended causally in a single dispatch —
+    ``model.prefill_chunk(all_logits=True)`` then unembeds every slot
+    instead of only ``lengths[r]-1``."""
     if layout is None:
         layout = SlabLayout()
     b, csz, _ = x.shape

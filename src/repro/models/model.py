@@ -682,6 +682,7 @@ def _block_chunk(x, p, kind: str, cfg: ArchConfig, c, lanes, starts, lengths,
 def prefill_chunk(
     params: dict, cfg: ArchConfig, tokens: jnp.ndarray, cache: dict,
     lanes, starts, lengths, layout=None, *, chunk: int = 512,
+    all_logits: bool = False,
 ) -> tuple[jnp.ndarray, dict]:
     """Process one fixed-size prompt chunk of every chunking lane against
     the live serving cache: tokens (L, C) int32 (row ``r`` valid below
@@ -699,6 +700,12 @@ def prefill_chunk(
     logits matter only on each lane's final chunk (they seed its first
     sampled token).  Attention-family archs only; the cache's ``len`` for
     ``lanes[r]`` advances to ``starts[r] + lengths[r]``.
+
+    ``all_logits=True`` is the speculative-verify seam: the unembed runs
+    over the *whole* chunk and logits come back as ``(L, C, V)`` — row
+    ``r`` slot ``j`` scores position ``starts[r] + j``, i.e. the verifier
+    distribution for the token *after* ``tokens[r, j]``.  Pad slots
+    (``j >= lengths[r]``) are garbage and must be masked by the caller.
     """
     if layout is None:
         layout = C.SlabLayout()
@@ -742,6 +749,15 @@ def prefill_chunk(
         )
         new_cache[f"tail_{i}"] = c
 
+    if all_logits:
+        # speculative verify: score every chunk slot in one unembed —
+        # slot j of row r is the verifier distribution at starts[r] + j
+        xn = _apply_norm(cfg, params["final"], x)
+        if cfg.tie_embeddings:
+            logits_all = xn @ params["embed"]["tok_embed"].T
+        else:
+            logits_all = L.matmul(xn, params["unembed"]["out_embed"])
+        return logits_all, new_cache
     # logits only at each row's last valid position — the unembed matmul
     # runs on one token per row, not the whole chunk
     idx = jnp.clip(lengths - 1, 0, tokens.shape[1] - 1)

@@ -181,10 +181,23 @@ from repro.serving.kv_pool import PagedKVPool
 from repro.serving.sampling import (
     SamplingParams,
     advance_stops,
+    filtered_probs,
     request_keys,
     sample_tokens,
+    spec_accept,
 )
 from repro.sparse_infer.compress import CompressedTensor
+
+
+def _tree_stored_bytes(tree) -> int:
+    """HBM bytes of a parameter tree as stored: ``CompressedTensor``
+    leaves at their compressed (values + indices) size."""
+    return sum(
+        int(leaf.nbytes)
+        for leaf in jax.tree_util.tree_leaves(
+            tree, is_leaf=lambda x: isinstance(x, CompressedTensor)
+        )
+    )
 
 
 @contextlib.contextmanager
@@ -311,6 +324,27 @@ class DecodeEngine:
         (``models.cache.PagedLayout.quant``) — ~4x smaller pool at equal
         page count, dequantized inside the attention kernels.  Greedy
         streams may differ from fp pools within quantization tolerance.
+    spec_gamma: enable self-speculative decoding — ``params`` becomes the
+        *drafter* (the N:M-compressed artifact) and each scheduling step
+        runs one speculative round: a gamma-step drafter scan proposes
+        tokens per lane, then ONE chunked verify pass through
+        ``verify_params`` scores all gamma+1 positions, accepts the
+        longest valid draft prefix (greedy: argmax match; sampled: the
+        standard rejection rule) and emits one trailing verifier token —
+        so output distributions are *exactly* the verifier's, and greedy
+        streams are bit-identical to plain decoding under
+        ``verify_params``.  Pass an int >= 1 or ``"auto"`` (roofline pick,
+        :meth:`pick_spec_gamma`).  Prefill / chunked prefill also run the
+        verifier, so every committed KV entry is verifier-fidelity; the
+        drafter's transient in-round KV writes are rewritten by the verify
+        pass, and rejected tails are rolled back (``cache["len"]`` rewind
+        on device + ``PagedKVPool.rollback`` host-side).  Sync scheduler
+        + attention-family, non-windowed archs only.
+    verify_params: the verifier tree for ``spec_gamma`` — the dense
+        source weights, or a higher-fidelity N:M artifact (e.g. 4:8
+        verifying a 2:4 drafter).  Mesh-native like ``params`` (its
+        leaves take the serving pspec rules via
+        ``verifier_param_shardings``).
     """
 
     def __init__(
@@ -336,6 +370,8 @@ class DecodeEngine:
         kv_shard: str = "seq",
         prefix_cache: bool = False,
         kv_quant: bool = False,
+        spec_gamma=None,
+        verify_params: Any = None,
     ):
         self.model = model
         self.params = params
@@ -390,6 +426,67 @@ class DecodeEngine:
             and not self._exact_prefill
             and (not windowed_arch or kv_pool is not None or num_pages is not None)
         )
+        # -- speculative decoding: sparse drafter, higher-fidelity verifier --
+        self._spec = spec_gamma is not None
+        self._draft_params = None
+        self.spec_gamma = 0
+        if self._spec:
+            if verify_params is None:
+                raise ValueError(
+                    "spec_gamma needs verify_params= — the dense (or "
+                    "higher-fidelity N:M) tree the drafts are verified "
+                    "against"
+                )
+            if windowed_arch:
+                raise ValueError(
+                    "spec_gamma is not supported on sliding-window archs: "
+                    "a rejected draft cannot be rolled back out of the "
+                    "window ring (slid-past pages are already evicted); "
+                    "drop spec_gamma for this architecture"
+                )
+            if self._exact_prefill:
+                raise ValueError(
+                    "spec_gamma is not supported on SSM/RG-LRU archs: "
+                    "recurrent state advanced by a rejected draft cannot "
+                    "be rolled back; drop spec_gamma for this architecture"
+                )
+            if self._device:
+                raise ValueError(
+                    "spec_gamma needs the sync scheduler: drop "
+                    "max_steps_per_dispatch/staged_lanes/async_stream "
+                    "(a speculative round is already one host sync per "
+                    "gamma+1 tokens)"
+                )
+            w_d = _tree_stored_bytes(params)
+            w_v = _tree_stored_bytes(verify_params)
+            if spec_gamma == "auto":
+                spec_gamma = self.pick_spec_gamma(w_d, w_v)
+            spec_gamma = int(spec_gamma)
+            if spec_gamma < 1:
+                raise ValueError(
+                    f"spec_gamma must be >= 1 or 'auto', got {spec_gamma}"
+                )
+            if spec_gamma >= max_len:
+                raise ValueError(
+                    f"spec_gamma {spec_gamma} >= max_len {max_len}"
+                )
+            self.spec_gamma = spec_gamma
+            self._spec_draft_bytes = w_d
+            self._spec_verify_bytes = w_v
+            # one round writes gamma+1 positions past the committed length
+            # (gamma draft slots + the verify bonus slot): size the page
+            # reservation horizon to cover the whole round, so
+            # _ensure_capacity's per-lane clamp reserves exactly the pages
+            # the round can touch and rollback releases the rejected tail
+            self._horizon = max(self._horizon, spec_gamma + 1)
+            # prefill, chunked prefill, and the verify pass all run the
+            # *verifier* tree — every committed KV entry and every emitted
+            # distribution is the verifier's; the drafter only steers
+            # which tokens get proposed.  From here on self.params IS the
+            # verifier and the drafter rides in _draft_params.
+            self._draft_params = params
+            params = verify_params
+            self.params = params
         if kv_pool is None and num_pages is not None:
             lookahead = max(steps_per_dispatch, self._horizon)
             if self._chunk_ok and windowed_arch:
@@ -463,6 +560,7 @@ class DecodeEngine:
                 replicated,
                 serving_cache_shardings,
                 serving_param_shardings,
+                verifier_param_shardings,
             )
 
             check_kv_shard(mesh, kv_shard)
@@ -472,7 +570,13 @@ class DecodeEngine:
             # tree to match leaf-for-leaf under device_put / in_shardings
             params = annotate_reduction_tp(params, mesh, cfg=model.cfg)
             self._shardings = {
-                "params": serving_param_shardings(mesh, params, cfg=model.cfg),
+                # in spec mode params is the *verifier*; its (dense or
+                # compressed) leaves take the same serving placement seam
+                "params": (
+                    verifier_param_shardings(mesh, params, cfg=model.cfg)
+                    if self._spec
+                    else serving_param_shardings(mesh, params, cfg=model.cfg)
+                ),
                 # a mesh-native pool already derived (and applied) the
                 # cache sharding tree — reuse it rather than re-walking
                 "cache": (
@@ -487,6 +591,19 @@ class DecodeEngine:
                 "repl": replicated(mesh),
             }
             self.params = jax.device_put(params, self._shardings["params"])
+            if self._spec:
+                # the drafter tree is mesh-native too: same pspec seam, so
+                # the draft scan and the verify pass run on one mesh with
+                # no resharding between them
+                dtree = annotate_reduction_tp(
+                    self._draft_params, mesh, cfg=model.cfg
+                )
+                self._shardings["draft_params"] = serving_param_shardings(
+                    mesh, dtree, cfg=model.cfg
+                )
+                self._draft_params = jax.device_put(
+                    dtree, self._shardings["draft_params"]
+                )
             if self.pool is None:
                 self.cache = jax.device_put(self.cache, self._shardings["cache"])
 
@@ -521,6 +638,13 @@ class DecodeEngine:
         self.preemptions = 0
         self.prefix_hits = 0  # admissions that reused cached prefix pages
         self.prefix_hit_tokens = 0  # prompt tokens skipped via the index
+        # speculative-decoding accounting (spec_gamma only)
+        self.spec_rounds = 0  # draft-scan + verify-pass round trips
+        self.draft_tokens = 0  # tokens the drafter proposed
+        self.verify_tokens = 0  # positions the verifier scored
+        self.accepted_draft_tokens = 0  # proposals that survived verify
+        self.spec_emitted_tokens = 0  # tokens actually absorbed via spec
+        self._spec_req: dict[int, list[int]] = {}  # uid -> [drafted, accepted]
         self.max_concurrency = 0
         self.prefill_batches = 0
         self.prefill_chunks = 0  # chunked-prefill dispatches
@@ -789,13 +913,106 @@ class DecodeEngine:
                 params, tokens, cache, lanes, starts, lengths, layout
             )
 
+        def _sdraft(dparams, tok, cache, temps, topks, gi, keep, key, uids,
+                    counts, g, need_sample, need_topk):
+            # speculative draft scan: the fused-decode body re-run under
+            # the drafter tree with per-lane step masks — lane i proposes
+            # only its first gi[i] steps (gi = 0 freezes it; it still gets
+            # the verify pass's bonus token).  Proposals are NOT
+            # commitments: cache["len"] rewinds to the round's start so
+            # the verify chunk rescores (and rewrites at verifier
+            # fidelity) every drafted position.  Draft keys live on their
+            # own fold_in stream, independent of the verify pass's
+            # accept/residual draws.
+            len0 = cache["len"]
+            dkey = jax.random.fold_in(key, 1)
+
+            def body(carry, t):
+                tok, cache, counts = carry
+                len_prev = cache["len"]
+                drafting = t < gi
+                logits, cache = model.decode_step(dparams, tok, cache, layout)
+                cache["len"] = jnp.where(
+                    drafting, cache["len"], jnp.where(keep, len_prev, 0)
+                )
+                keys = request_keys(dkey, uids, counts)
+                nxt = sample_tokens(
+                    logits, temps, topks, keys,
+                    need_sample=need_sample, need_topk=need_topk,
+                    rowwise=True,
+                )
+                nxt = jnp.where(drafting, nxt, 0)
+                if need_sample:
+                    # the drafter's post-filter distribution at each
+                    # proposal, for the rejection rule; zeroed past gi so
+                    # the residual at the bonus slot is the verifier's
+                    # own distribution
+                    probs = filtered_probs(
+                        logits, temps, topks, need_topk=need_topk
+                    )
+                    probs = jnp.where(drafting[:, None], probs, 0.0)
+                else:
+                    probs = jnp.zeros((n_lanes, 1), jnp.float32)
+                counts = counts + drafting.astype(counts.dtype)
+                tok = jnp.where(drafting, nxt, tok)
+                return (tok, cache, counts), (nxt, probs)
+
+            (_, cache, _), (drafts, dprobs) = jax.lax.scan(
+                body, (tok, cache, counts), jnp.arange(g)
+            )
+            cache["len"] = jnp.where(keep, len0, 0)
+            return drafts, dprobs, cache
+
+        def _sverify(vparams, tok, drafts, dprobs, cache, temps, topks,
+                     active, key, uids, counts, gi, g, need_sample,
+                     need_topk):
+            # speculative verify: ONE chunked-prefill dispatch through the
+            # verifier scores all gamma+1 positions — row i feeds its last
+            # committed token plus its drafts at starts = the committed
+            # length, (re)writing verifier-fidelity KV over every draft
+            # slot while all_logits=True unembeds the whole chunk.  Slot j
+            # of the logits is the verifier distribution for the token
+            # AFTER input j, so the accept rule, the trailing
+            # correction/bonus token, and the committed-length rewind all
+            # resolve on device; the host fetches only (block, n_acc).
+            b = n_lanes
+            len0 = cache["len"]
+            rows = jnp.concatenate([tok[:, None], drafts.T], axis=1)
+            lanes = jnp.where(active, jnp.arange(b), b).astype(jnp.int32)
+            lengths = jnp.where(active, gi + 1, 0).astype(jnp.int32)
+            logits_all, cache = model.prefill_chunk(
+                vparams, rows, cache, lanes, len0.astype(jnp.int32),
+                lengths, layout, all_logits=True,
+            )
+            tb = jnp.broadcast_to(temps[:, None], (b, g + 1))
+            kb = jnp.broadcast_to(topks[:, None], (b, g + 1))
+            p_ver = filtered_probs(logits_all, tb, kb, need_topk=need_topk)
+            akeys = request_keys(jax.random.fold_in(key, 2), uids, counts)
+            rkeys = request_keys(jax.random.fold_in(key, 3), uids, counts)
+            block, n_acc = spec_accept(
+                drafts.T, jnp.moveaxis(dprobs, 0, 1), p_ver, gi,
+                akeys, rkeys, need_sample=need_sample,
+            )
+            block = jnp.where(active[:, None], block, 0)
+            n_acc = jnp.where(active, n_acc, 0)
+            # device half of the rollback: committed length = accepted
+            # prefix + the trailing emitted token (whose KV is written
+            # next round, like any freshly sampled token); stale draft KV
+            # past it is dead under the length masks.  prefill_chunk
+            # advanced active lanes to len0 + gi + 1 — rewind them.
+            cache["len"] = jnp.where(active, len0 + n_acc + 1, cache["len"])
+            last = jnp.take_along_axis(block, n_acc[:, None], axis=1)[:, 0]
+            tok = jnp.where(active, last, tok)
+            return block, n_acc, tok, cache
+
         # the need_* flags are static so all-greedy batches compile to a
         # bare argmax (no vocab sort / categorical in the decode hot path);
         # at most 4 _decode variants exist, warmed untimed on first use.
         # donate_argnums hands the cache (and the decode's token buffer) to
         # XLA for in-place update — without it every dispatch copies the
         # whole pool because the engine reuses the input cache.
-        jit_kw: dict = {"decode": {}, "prefill": {}, "chunk": {}, "dloop": {}}
+        jit_kw: dict = {"decode": {}, "prefill": {}, "chunk": {},
+                        "dloop": {}, "sdraft": {}, "sverify": {}}
         if self._shardings is not None:
             # pin explicit in/out shardings on every executable: params TP,
             # cache seq/pages-sharded, per-lane vectors over DP, prefill /
@@ -828,6 +1045,23 @@ class DecodeEngine:
                 in_shardings=(psh, csh, repl, repl),
                 out_shardings=(repl, repl, repl, repl, repl, csh),
             )
+            if self._spec:
+                # drafter params live under their own sharding map; the
+                # per-step draft probs carry a trailing vocab axis (kept
+                # unsharded — only read back through the verify pass)
+                prb = NamedSharding(mesh, _P(None, *tuple(lane.spec), None))
+                rowsh = NamedSharding(mesh, _P(*tuple(lane.spec), None))
+                psh_d = self._shardings["draft_params"]
+                jit_kw["sdraft"] = dict(
+                    in_shardings=(psh_d, lane, csh, lane, lane, lane, lane,
+                                  repl, lane, lane),
+                    out_shardings=(blk, prb, csh),
+                )
+                jit_kw["sverify"] = dict(
+                    in_shardings=(psh, lane, blk, prb, csh, lane, lane,
+                                  lane, repl, lane, lane, lane),
+                    out_shardings=(rowsh, lane, lane, csh),
+                )
         # statics are passed *positionally* (static_argnums): pjit rejects
         # kwargs outright once in_shardings is specified
         self._decode = jax.jit(
@@ -851,6 +1085,22 @@ class DecodeEngine:
             donate_argnums=(1, 2) if donate else (),
             **jit_kw["dloop"],
         )
+        if self._spec:
+            # _sdraft keeps tok alive (the verify pass needs it as the
+            # chunk's first row), so only the cache is donated; _sverify
+            # consumes both tok and the drafted cache.
+            self._sdraft = jax.jit(
+                _sdraft,
+                static_argnums=(10, 11, 12),  # g, need_sample, need_topk
+                donate_argnums=(2,) if donate else (),
+                **jit_kw["sdraft"],
+            )
+            self._sverify = jax.jit(
+                _sverify,
+                static_argnums=(12, 13, 14),  # g, need_sample, need_topk
+                donate_argnums=(1, 4) if donate else (),
+                **jit_kw["sverify"],
+            )
         self._warmed: set[tuple] = set()
 
     # -- request intake ------------------------------------------------------
@@ -1305,6 +1555,8 @@ class DecodeEngine:
         """One scheduling step: admit what fits, advance chunked prefills,
         run one decode dispatch (fixed-K scan) or one device-scheduler
         cycle (run-until-stop while-loops); return finished requests."""
+        if self._spec:
+            return self._step_spec()
         if self._device:
             return self._step_device()
         out: list[GenerationResult] = []
@@ -1378,6 +1630,144 @@ class DecodeEngine:
                 self._absorb(i, int(host_block[t, i]), out, from_decode=True)
                 if self.slots[i] is None:
                     live.remove(i)
+        t_end = time.perf_counter()
+        self.sched_host_s += (t_sched - t_prefill_done) + (t_end - t1)
+        return out
+
+    # -- speculative decoding ------------------------------------------------
+
+    @staticmethod
+    def pick_spec_gamma(draft_bytes: int, verify_bytes: int, *,
+                        alpha: float = 0.75, g_max: int = 16) -> int:
+        """Roofline choice of the draft length for ``spec_gamma="auto"``.
+
+        A round moves ``g * draft_bytes`` (one drafter sweep per proposed
+        token) plus ``verify_bytes`` (one verifier sweep scores all g+1
+        positions) and commits ``E[gain] = (1 - alpha^(g+1)) / (1 - alpha)``
+        tokens under an i.i.d. per-token acceptance rate ``alpha`` (the
+        standard speculative-decoding progress model).  Minimising bytes
+        per accepted token balances drafter cheapness against wasted work
+        on rejection; alpha defaults to 0.75, a typical magnitude-pruned
+        drafter's agreement with its dense parent.
+        """
+        best_g, best_cost = 1, float("inf")
+        for g in range(1, g_max + 1):
+            if alpha >= 1.0:
+                exp_tok = float(g + 1)
+            else:
+                exp_tok = (1.0 - alpha ** (g + 1)) / (1.0 - alpha)
+            cost = (g * draft_bytes + verify_bytes) / exp_tok
+            if cost < best_cost:
+                best_g, best_cost = g, cost
+        return best_g
+
+    def _step_spec(self) -> list[GenerationResult]:
+        """One speculative round: gamma drafter decode steps (one fused
+        scan dispatch) chained device-side into one verifier chunk
+        dispatch; the host syncs ONCE per round, on the accepted block.
+        Emits between 1 and gamma+1 tokens per live lane — output
+        distributions are exactly the verifier's (longest-prefix accept
+        under greedy, rejection sampling otherwise)."""
+        out: list[GenerationResult] = []
+        self._admit(out)
+        if self.prefill_chunk is not None or self._prefix is not None:
+            self._advance_chunks(out)
+        t_prefill_done = time.perf_counter()
+        self._ensure_capacity(out)  # horizon covers gamma+1 writes
+        consts = self._slot_consts()
+        active = consts["active_np"]
+        self.max_concurrency = max(self.max_concurrency, int(active.sum()))
+        if not active.any():
+            return out
+        self._util_sum += self._cache_utilization()
+        self._util_n += 1
+        self._kv_bytes_sum += self._live_kv_bytes()
+        if self.pool is not None:
+            if self.pool.pending_copies:
+                self.cache = self.pool.apply_pending(self.cache)
+            dt = self.pool.device_tables()
+            if dt:
+                self.cache["tables"] = dt
+        g = self.spec_gamma
+        counts = np.zeros((self.max_batch,), np.int32)
+        gi = np.zeros((self.max_batch,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is not None and not s.pending and active[i]:
+                counts[i] = len(s.generated)
+                rem = s.sampling.max_new_tokens - len(s.generated)
+                # leave room for the verify pass's guaranteed token: a
+                # lane with 1 token of budget or cache left drafts nothing
+                # and still finishes via the bonus
+                gi[i] = max(0, min(g, self.max_len - 1 - s.pos, rem - 1))
+        gi_j = jnp.asarray(gi)
+        counts_j = jnp.asarray(counts)
+        sig = (g, consts["need_sample"], consts["need_topk"])
+        draft_args = (
+            self._draft_params, self.tokens, self.cache, consts["temps"],
+            consts["topks"], gi_j, consts["keep"], self.key,
+            consts["uids"], counts_j,
+        )
+        t_sched = time.perf_counter()
+        if ("spec",) + sig not in self._warmed:
+            # untimed warmup of both executables, on copies of the donated
+            # operands (tok is donated by _sverify, cache by both)
+            wargs = draft_args
+            if self.donate:
+                cache_c = jax.tree_util.tree_map(jnp.copy, draft_args[2])
+                wargs = draft_args[:2] + (cache_c,) + draft_args[3:]
+            with self._kernel_ctx(), _quiet_donation():
+                dts, dps, cc = self._sdraft(*wargs, *sig)
+                jax.block_until_ready(self._sverify(
+                    self.params, jnp.copy(self.tokens), dts, dps, cc,
+                    consts["temps"], consts["topks"], consts["active"],
+                    self.key, consts["uids"], counts_j, gi_j, *sig,
+                ))
+            self._warmed.add(("spec",) + sig)
+        t0 = time.perf_counter()
+        with self._kernel_ctx(), _quiet_donation():
+            drafts, dprobs, cache = self._sdraft(*draft_args, *sig)
+            rows, n_acc, tok, self.cache = self._sverify(
+                self.params, self.tokens, drafts, dprobs, cache,
+                consts["temps"], consts["topks"], consts["active"],
+                self.key, consts["uids"], counts_j, gi_j, *sig,
+            )
+            tok.block_until_ready()
+        t1 = time.perf_counter()
+        self.decode_wall_s += t1 - t0
+        self.decode_steps += g + 1
+        self.dispatches += 2  # draft scan + verify chunk
+        self.spec_rounds += 1
+        self.tokens = tok
+        if self.pool is not None:
+            self.pool.adopt_tables(self.cache.get("tables"))
+        host_rows = self._fetch_block(rows)  # (B, G+1) — the round's sync
+        n_np = np.asarray(n_acc)
+        self.block_fetches += 1
+        live = [i for i in range(self.max_batch) if active[i]]
+        for i in live:
+            n = int(n_np[i])
+            gii = int(gi[i])
+            self.draft_tokens += gii
+            self.verify_tokens += gii + 1
+            self.accepted_draft_tokens += n
+            s = self.slots[i]
+            rec = self._spec_req.setdefault(s.uid, [0, 0])
+            rec[0] += gii
+            rec[1] += n
+            for t in range(n + 1):
+                if self.slots[i] is None:
+                    break  # stop rule fired mid-block: drop the tail
+                self.slots[i].pos += 1  # mirror cache["len"] advancing
+                self.spec_emitted_tokens += 1
+                self._absorb(i, int(host_rows[i, t]), out, from_decode=True)
+        if self.pool is not None:
+            # host half of the rollback: lanes that stopped early (or
+            # rejected drafts) release full-table pages past their
+            # committed length; freed lanes were already released whole
+            # by _absorb
+            for i in live:
+                if self.slots[i] is not None:
+                    self.pool.rollback(i, self.slots[i].pos)
         t_end = time.perf_counter()
         self.sched_host_s += (t_sched - t_prefill_done) + (t_end - t1)
         return out
@@ -1940,9 +2330,13 @@ class DecodeEngine:
             "dispatches": self.dispatches,
             "steps_per_dispatch": self.steps_per_dispatch,
             # a host sync is where scheduling can happen: every dispatch
-            # in sync mode, only each full-drain cycle boundary under the
-            # device scheduler
-            "host_syncs": self.cycles if self._device else self.dispatches,
+            # in sync mode, one per round under speculation (draft+verify
+            # chain device-side), only each full-drain cycle boundary
+            # under the device scheduler
+            "host_syncs": (
+                self.cycles if self._device
+                else (self.spec_rounds if self._spec else self.dispatches)
+            ),
             "cycles": self.cycles,
             "block_fetches": self.block_fetches,
             "refills": self.refills,
@@ -2023,4 +2417,37 @@ class DecodeEngine:
             st["prefix_hit_rate"] = (
                 self.prefix_hits / self.admitted if self.admitted else 0.0
             )
+        if self._spec:
+            w_d, w_v = self._spec_draft_bytes, self._spec_verify_bytes
+            st["spec_gamma"] = self.spec_gamma
+            st["spec_rounds"] = self.spec_rounds
+            st["draft_tokens"] = self.draft_tokens
+            st["verify_tokens"] = self.verify_tokens
+            st["accepted_draft_tokens"] = self.accepted_draft_tokens
+            st["spec_emitted_tokens"] = self.spec_emitted_tokens
+            st["acceptance_rate"] = (
+                self.accepted_draft_tokens / self.draft_tokens
+                if self.draft_tokens else 0.0
+            )
+            st["accepted_per_verify"] = (
+                self.spec_emitted_tokens / self.spec_rounds
+                if self.spec_rounds else 0.0
+            )
+            st["draft_weight_bytes_per_step"] = w_d
+            st["verify_weight_bytes_per_step"] = w_v
+            # amortized weight stream per committed token: each round pays
+            # gamma drafter sweeps + one verifier sweep
+            st["bytes_per_accepted_token"] = (
+                self.spec_rounds * (self.spec_gamma * w_d + w_v)
+                / self.spec_emitted_tokens
+                if self.spec_emitted_tokens else 0.0
+            )
+            st["spec_per_request"] = {
+                uid: {
+                    "drafted": d,
+                    "accepted": a,
+                    "acceptance_rate": a / d if d else 0.0,
+                }
+                for uid, (d, a) in sorted(self._spec_req.items())
+            }
         return st

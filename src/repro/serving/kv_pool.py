@@ -392,6 +392,43 @@ class PagedKVPool:
                 self._pt_win[lane, pg % lo.pages_win] = lo.sentinel
             self._dirty_lanes.add(lane)
 
+    def rollback(self, lane: int, new_len: int) -> None:
+        """Truncate a lane's committed length to ``new_len`` after a
+        speculative round: full-table pages past the one backing the next
+        write (logical page ``new_len // page_size`` — kept, exactly the
+        page ``alloc_prefill``/``ensure_steps`` keep mapped ahead of the
+        write cursor) are *dereferenced*, not force-freed, so a shared
+        prefix-cache page (or a COW fork another lane still reads) is
+        never clobbered by rejected drafts — its other holders keep it
+        resident and only this lane's claim drops.
+
+        The speculative reservation this unwinds is a plain
+        ``ensure_steps(lane, pos, gamma + 1)``: all-or-nothing, so a
+        rejected tail can always be rolled back without the pool ever
+        having been over-committed mid-round.  The device-side half of the
+        truncation is the verify dispatch rewriting ``cache["len"]`` —
+        stale KV past it is dead under the length masks every layout view
+        applies, so no page contents need scrubbing.  Pages with a pending
+        COW copy *into* them are skipped defensively (the engine drains
+        ``pending_copies`` before any speculative dispatch, so none should
+        exist here).  Windowed tables have no speculative seam (the engine
+        gates ``spec_gamma`` off windowed archs) and are left untouched.
+        """
+        lo, ps = self.layout, self.layout.page_size
+        if not lo.has_full:
+            return
+        keep = new_len // ps  # page of the next decode write stays mapped
+        pend_dst = {d for _, d in self.pending_copies}
+        for pg in [p for p in self._full_pages[lane] if p > keep]:
+            pid = self._full_pages[lane][pg]
+            if pid in pend_dst:
+                continue
+            del self._full_pages[lane][pg]
+            self.decref(pid)
+            if self._pt_full[lane, pg] == pid:
+                self._pt_full[lane, pg] = lo.sentinel
+            self._dirty_lanes.add(lane)
+
     def release(self, lane: int) -> None:
         """Drop the lane's reference on every page it holds (request
         finished or preempted).  Pages the prefix index (or a forked lane)

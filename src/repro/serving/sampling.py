@@ -99,6 +99,118 @@ def sample_tokens(
     return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
 
 
+def filtered_probs(
+    logits: jnp.ndarray,  # (..., V)
+    temperature: jnp.ndarray,  # (...,) f32; 0 = greedy
+    top_k: jnp.ndarray,  # (...,) int32; 0 = disabled
+    *,
+    need_topk: bool = True,  # static: False = no row filters by top-k
+) -> jnp.ndarray:
+    """Post-filter sampling distribution per row, in lockstep with
+    :func:`sample_tokens`: the same top-k cutoff, the same temperature
+    scaling, then a softmax — exactly the distribution the categorical in
+    ``sample_tokens`` draws from.  ``temperature == 0`` rows return the
+    one-hot argmax distribution, which makes the speculative
+    rejection-sampling rule (:func:`spec_accept`) degenerate *exactly* to
+    greedy longest-prefix acceptance: the accept probability
+    ``min(1, p_v(d)/p_d(d))`` is 1 on an argmax match and 0 otherwise, and
+    the residual ``max(p_v - p_d, 0)`` renormalizes to the verifier's
+    one-hot argmax.
+    """
+    lf = logits.astype(jnp.float32)
+    v = lf.shape[-1]
+    if need_topk:
+        sorted_desc = jnp.sort(lf, axis=-1)[..., ::-1]
+        kidx = jnp.clip(top_k - 1, 0, v - 1)
+        kth = jnp.take_along_axis(sorted_desc, kidx[..., None], axis=-1)
+        cut = (top_k[..., None] > 0) & (lf < kth)
+        lf = jnp.where(cut, -jnp.inf, lf)
+    one_hot = jax.nn.one_hot(jnp.argmax(lf, axis=-1), v, dtype=jnp.float32)
+    safe_t = jnp.where(temperature > 0, temperature, 1.0)
+    probs = jax.nn.softmax(lf / safe_t[..., None], axis=-1)
+    return jnp.where((temperature > 0)[..., None], probs, one_hot)
+
+
+def spec_accept(
+    drafts: jnp.ndarray,  # (B, G) int32 drafter proposals
+    p_draft: jnp.ndarray,  # (B, G, V) drafter filtered probs (zero rows
+    #     at slots >= gi; ignored when need_sample=False)
+    p_verify: jnp.ndarray,  # (B, G+1, V) verifier filtered probs; slot j
+    #     scores the token *after* input j, slot G the bonus position
+    gi: jnp.ndarray,  # (B,) int32 drafts actually proposed per lane
+    accept_key: jax.Array,  # (B,) stacked per-row keys (accept draws)
+    resid_key: jax.Array,  # (B,) stacked per-row keys (residual draw)
+    *,
+    need_sample: bool = True,  # static: False = every row is greedy
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The speculative accept/reject rule, vectorized over the batch.
+
+    Returns ``(tokens, n_acc)`` where row ``i`` of ``tokens`` (shape
+    ``(B, G+1)``) holds the ``n_acc[i] + 1`` tokens the lane emits this
+    round — the accepted draft prefix followed by one verifier token (the
+    correction on a rejection, the bonus on full acceptance) — and slots
+    past that are zero.
+
+    Greedy (``need_sample=False``): longest prefix of drafts matching the
+    verifier argmax; the trailing token is the verifier argmax at the
+    first mismatch (or the bonus slot).  The emitted stream is therefore
+    bit-identical to plain greedy decoding under the verifier.
+
+    Sampled: draft ``j`` is accepted with probability
+    ``min(1, p_v(d_j) / p_d(d_j))``; on the first rejection the trailing
+    token draws from the residual ``normalize(max(p_v - p_d, 0))``, on
+    full acceptance from ``p_v`` at the bonus slot (``p_draft`` is
+    zero-padded there, so the residual *is* ``p_v``).  This is the
+    standard speculative-sampling identity: the emitted distribution is
+    exactly the verifier's, whatever the drafter proposed.  Rows with
+    ``temperature == 0`` carry one-hot distributions (see
+    :func:`filtered_probs`) and reduce to the greedy rule exactly.
+    """
+    b, g = drafts.shape
+    slots = jnp.arange(g)[None, :]
+    proposed = slots < gi[:, None]
+    if not need_sample:
+        v_top = jnp.argmax(p_verify, axis=-1).astype(jnp.int32)  # (B, G+1)
+        acc = proposed & (drafts == v_top[:, :g])
+        prefix = jnp.cumprod(acc.astype(jnp.int32), axis=1)
+        n = prefix.sum(axis=1).astype(jnp.int32)
+        fix = jnp.take_along_axis(v_top, n[:, None], axis=1)[:, 0]
+    else:
+        u = jax.vmap(lambda k: jax.random.uniform(k, (g,)))(accept_key)
+        p_d_at = jnp.take_along_axis(p_draft, drafts[..., None], axis=-1)[..., 0]
+        p_v_at = jnp.take_along_axis(
+            p_verify[:, :g], drafts[..., None], axis=-1
+        )[..., 0]
+        ratio = p_v_at / jnp.maximum(p_d_at, 1e-20)
+        acc = proposed & (u < jnp.minimum(ratio, 1.0))
+        prefix = jnp.cumprod(acc.astype(jnp.int32), axis=1)
+        n = prefix.sum(axis=1).astype(jnp.int32)
+        # zero-pad the drafter at the bonus slot: n == gi (full accept)
+        # then draws the trailing token from p_v itself
+        p_d_pad = jnp.concatenate(
+            [p_draft, jnp.zeros_like(p_draft[:, :1])], axis=1
+        )
+        p_v_n = jnp.take_along_axis(p_verify, n[:, None, None], axis=1)[:, 0]
+        p_d_n = jnp.take_along_axis(p_d_pad, n[:, None, None], axis=1)[:, 0]
+        resid = jnp.maximum(p_v_n - p_d_n, 0.0)
+        rs = resid.sum(axis=-1, keepdims=True)
+        # p_d == p_v makes the residual vanish — but then the accept
+        # probability was 1, so the guard only shields numeric dust
+        resid = jnp.where(rs > 1e-9, resid / rs, p_v_n)
+        fix = jax.vmap(
+            lambda k, p: jax.random.categorical(k, jnp.log(p))
+        )(resid_key, resid).astype(jnp.int32)
+    j = jnp.arange(g + 1)[None, :]
+    drafts_pad = jnp.concatenate(
+        [drafts, jnp.zeros((b, 1), drafts.dtype)], axis=1
+    )
+    tokens = jnp.where(
+        j < n[:, None], drafts_pad,
+        jnp.where(j == n[:, None], fix[:, None], 0),
+    )
+    return tokens.astype(jnp.int32), n
+
+
 def advance_stops(
     tokens: jnp.ndarray,  # (B,) int32: freshly sampled, pre-masking
     active: jnp.ndarray,  # (B,) bool: lanes decoding this iteration

@@ -1,0 +1,541 @@
+"""Self-speculative decoding: sparse drafter, dense verifier, lossless
+accept/rollback.
+
+The load-bearing guarantees:
+
+1. **Losslessness** — greedy token streams from a speculative engine are
+   bit-identical to a plain engine serving the *verifier* tree, for any
+   drafter (even a completely disagreeing one), across {slab, paged} ×
+   {single-device, (2,4) mesh}.  The drafter only steers which tokens
+   get proposed; every emitted distribution is the verifier's.
+2. **Distributional exactness** (temperature > 0) — the rejection rule
+   emits tokens whose marginal matches the verifier's filtered
+   distribution exactly, and the greedy branch is the rejection rule
+   specialized to one-hot distributions.
+3. **Rollback conservation** — speculative page reservation + rollback
+   under randomized churn (admissions, COW prefix forks, preemptions)
+   never leaks a page or a refcount: ``free + used == num_pages`` at
+   every step, all-zero refcounts at the end.
+4. **Gating** — windowed / SSM archs and the device scheduler reject
+   ``spec_gamma`` with actionable errors (their state cannot roll back /
+   their sync model conflicts), and ``spec_gamma="auto"`` resolves via
+   the byte-ratio roofline.
+"""
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.configs import get_config
+from repro.models.model import TransformerLM
+from repro.serving import DecodeEngine, SamplingParams
+from repro.serving.kv_pool import PagedKVPool
+from repro.serving.sampling import filtered_probs, spec_accept
+from repro.sparse_infer import compress_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+N_DEV = len(jax.devices())
+needs8 = pytest.mark.skipif(
+    N_DEV < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+CFG = get_config("gpt2-paper", smoke=True)
+MODEL = TransformerLM(CFG)
+
+
+def _trees(seed=0, cfg=CFG, model=MODEL):
+    params = model.init(jax.random.PRNGKey(seed))
+    recipe = core.make_recipe(
+        "step", core.SparsityConfig(default=core.NMSparsity(2, 4))
+    )
+    sparse = recipe.export_sparse(params)
+    return sparse, compress_params(sparse, recipe.sparsity)
+
+
+def _prompts(cfg, lens, seed=100):
+    return [
+        [
+            int(t)
+            for t in jax.random.randint(
+                jax.random.PRNGKey(seed + i), (n,), 0, cfg.vocab
+            )
+        ]
+        for i, n in enumerate(lens)
+    ]
+
+
+def _stream(eng, prompts, sps):
+    uids = [eng.submit(p, sp) for p, sp in zip(prompts, sps)]
+    res = eng.run()
+    return [res[u].tokens for u in uids], [res[u].finish_reason for u in uids]
+
+
+# ---------------------------------------------------------------------------
+# losslessness: spec streams == plain verifier streams
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [dict(), dict(num_pages=48, page_size=4)],
+                         ids=["slab", "paged"])
+@pytest.mark.parametrize("gamma", [1, 3])
+def test_greedy_parity_disagreeing_drafter(kw, gamma):
+    """A drafter with *different weights* (seed-1 init) cannot change the
+    greedy stream — rejected drafts roll back, every emitted token is the
+    verifier's argmax.  Low acceptance just means more rounds."""
+    verify, _ = _trees(seed=0)
+    draft, _ = _trees(seed=1)
+    prompts = _prompts(CFG, [7, 4, 9])
+    sps = [SamplingParams(max_new_tokens=10)] * 3
+    base = _stream(
+        DecodeEngine(MODEL, verify, max_batch=3, max_len=32, donate=False,
+                     **kw),
+        prompts, sps,
+    )
+    eng = DecodeEngine(
+        MODEL, draft, max_batch=3, max_len=32, spec_gamma=gamma,
+        verify_params=verify, **kw,
+    )
+    got = _stream(eng, prompts, sps)
+    assert got == base
+    st = eng.stats()
+    assert st["spec_rounds"] > 0
+    assert st["host_syncs"] == st["spec_rounds"]
+    # two weight inits rarely agree: some drafts must have been rejected
+    # (and rolled back) for the parity above to be meaningful
+    assert st["acceptance_rate"] < 1.0
+
+
+@pytest.mark.parametrize("kw", [dict(), dict(num_pages=48, page_size=4)],
+                         ids=["slab", "paged"])
+def test_greedy_parity_self_drafter(kw):
+    """drafter == verifier: acceptance is 1.0 by construction and each
+    round commits gamma+1 tokens (modulo budget truncation)."""
+    verify, comp = _trees(seed=0)
+    prompts = _prompts(CFG, [6, 3])
+    sps = [SamplingParams(max_new_tokens=12)] * 2
+    base = _stream(
+        DecodeEngine(MODEL, verify, max_batch=2, max_len=32, donate=False,
+                     **kw),
+        prompts, sps,
+    )
+    eng = DecodeEngine(
+        MODEL, verify, max_batch=2, max_len=32, spec_gamma=4,
+        verify_params=verify, **kw,
+    )
+    got = _stream(eng, prompts, sps)
+    assert got == base
+    st = eng.stats()
+    assert st["acceptance_rate"] == 1.0
+    assert st["accepted_per_verify"] > 1.0
+    # strictly fewer host syncs than one-per-token decode
+    assert st["host_syncs"] < st["spec_emitted_tokens"]
+
+
+def test_parity_with_chunked_prefill_and_prefix_cache():
+    """spec composes with the chunked-prefill and prefix-cache admission
+    paths: both feed the engine committed verifier KV, which is exactly
+    what a speculative round expects to extend."""
+    verify, _ = _trees(seed=0)
+    draft, _ = _trees(seed=1)
+    prompts = _prompts(CFG, [9, 9], seed=40)
+    prompts[1] = prompts[0][:6] + prompts[1][6:]  # shared head for the radix hit
+    sps = [SamplingParams(max_new_tokens=8)] * 2
+    kw = dict(num_pages=48, page_size=4, prefill_chunk=4, prefix_cache=True)
+    base = _stream(
+        DecodeEngine(MODEL, verify, max_batch=2, max_len=32, donate=False,
+                     **kw),
+        prompts, sps,
+    )
+    got = _stream(
+        DecodeEngine(MODEL, draft, max_batch=2, max_len=32, spec_gamma=3,
+                     verify_params=verify, **kw),
+        prompts, sps,
+    )
+    assert got == base
+
+
+def test_budget_edges_and_eos_mid_block():
+    """gamma past the remaining budget truncates (a 1-token request goes
+    straight to the verify bonus), and an EOS inside an accepted block
+    drops the tail exactly like the plain engine's stop rule."""
+    verify, _ = _trees(seed=0)
+    prompts = _prompts(CFG, [5, 5, 5])
+    # find the eos the plain engine would hit so the stop actually fires
+    probe = DecodeEngine(MODEL, verify, max_batch=3, max_len=32, donate=False)
+    ptoks, _ = _stream(probe, prompts,
+                       [SamplingParams(max_new_tokens=8)] * 3)
+    eos = ptoks[0][3]  # 4th emitted token of request 0
+    sps = [
+        SamplingParams(max_new_tokens=1),
+        SamplingParams(max_new_tokens=8, eos_id=eos),
+        SamplingParams(max_new_tokens=8),
+    ]
+    base = _stream(
+        DecodeEngine(MODEL, verify, max_batch=3, max_len=32, donate=False),
+        prompts, sps,
+    )
+    got = _stream(
+        DecodeEngine(MODEL, verify, max_batch=3, max_len=32, spec_gamma=6,
+                     verify_params=verify),
+        prompts, sps,
+    )
+    assert got == base
+
+
+# ---------------------------------------------------------------------------
+# (2,4) mesh: spec executables carry their own shardings
+# ---------------------------------------------------------------------------
+
+
+def _mesh_trees():
+    # f32 pins the streams: untrained bf16 logits have near-tie argmax
+    # margins that psum reassociation can flip (see test_sharded_serving)
+    cfg = dataclasses.replace(CFG, param_dtype="float32")
+    model = TransformerLM(cfg)
+    sparse, comp = _trees(cfg=cfg, model=model)
+    return cfg, model, sparse, comp
+
+
+@needs8
+@pytest.mark.parametrize("kw", [dict(), dict(num_pages=48, page_size=4)],
+                         ids=["slab", "paged"])
+def test_mesh_greedy_parity(kw):
+    """(data=2, model=4) speculative engine == plain verifier engine on
+    the same mesh, compressed drafter against the masked-dense verifier
+    (the two-fidelity pairing serve.py ships)."""
+    from repro.launch.mesh import make_local_mesh
+
+    cfg, model, sparse, comp = _mesh_trees()
+    mesh = make_local_mesh(4, data=2)
+    prompts = _prompts(cfg, [7, 4, 9])
+    sps = [SamplingParams(max_new_tokens=8)] * 3
+    base = _stream(
+        DecodeEngine(model, sparse, max_batch=3, max_len=32, mesh=mesh,
+                     donate=False, **kw),
+        prompts, sps,
+    )
+    got = _stream(
+        DecodeEngine(model, comp, max_batch=3, max_len=32, mesh=mesh,
+                     spec_gamma=3, verify_params=sparse, **kw),
+        prompts, sps,
+    )
+    assert got == base
+
+
+@needs8
+def test_mesh_matches_single_device():
+    """The same speculative workload on the (2,4) mesh and on one device
+    produces identical streams (f32 — see _mesh_trees)."""
+    from repro.launch.mesh import make_local_mesh
+
+    cfg, model, sparse, comp = _mesh_trees()
+    prompts = _prompts(cfg, [6, 5])
+    sps = [SamplingParams(max_new_tokens=8)] * 2
+    single = _stream(
+        DecodeEngine(model, comp, max_batch=2, max_len=32, spec_gamma=2,
+                     verify_params=sparse, donate=False),
+        prompts, sps,
+    )
+    meshed = _stream(
+        DecodeEngine(model, comp, max_batch=2, max_len=32, spec_gamma=2,
+                     verify_params=sparse, mesh=make_local_mesh(4, data=2)),
+        prompts, sps,
+    )
+    assert meshed == single
+
+
+# ---------------------------------------------------------------------------
+# the rejection rule: distributionally exact, greedy as a special case
+# ---------------------------------------------------------------------------
+
+
+def _accept_batch(p_d_row, p_v_rows, g, n_rows, seed):
+    """Run spec_accept over n_rows i.i.d. rows of the same (p_draft,
+    p_verify) pair; drafts are sampled from p_draft per slot."""
+    v = p_d_row.shape[-1]
+    key = jax.random.PRNGKey(seed)
+    kd, ka, kr = jax.random.split(key, 3)
+    drafts = jax.random.categorical(
+        kd, jnp.log(jnp.broadcast_to(p_d_row, (n_rows, g, v)))
+    )
+    p_d = jnp.broadcast_to(p_d_row, (n_rows, g, v))
+    p_v = jnp.broadcast_to(p_v_rows, (n_rows, g + 1, v))
+    gi = jnp.full((n_rows,), g, jnp.int32)
+    toks, n_acc = spec_accept(
+        drafts, p_d, p_v, gi,
+        jax.random.split(ka, n_rows), jax.random.split(kr, n_rows),
+        need_sample=True,
+    )
+    return np.asarray(toks), np.asarray(n_acc)
+
+
+def test_rejection_rule_marginal_is_verifier():
+    """The first emitted token's empirical distribution matches p_verify
+    exactly (the standard speculative-sampling correctness property),
+    even though drafts come from a very different p_draft."""
+    p_d = jnp.asarray([0.7, 0.1, 0.1, 0.1])
+    p_v = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+    n = 40000
+    toks, _ = _accept_batch(p_d, jnp.stack([p_v, p_v]), 1, n, seed=0)
+    emp = np.bincount(toks[:, 0], minlength=4) / n
+    np.testing.assert_allclose(emp, np.asarray(p_v), atol=0.01)
+
+
+def test_identical_distributions_always_accept():
+    p = jnp.asarray([0.25, 0.25, 0.25, 0.25])
+    _, n_acc = _accept_batch(p, jnp.stack([p, p, p]), 2, 2000, seed=1)
+    assert (n_acc == 2).all()
+    # and the bonus slot then samples from the verifier's own p (residual
+    # with a zero draft distribution)
+    toks, _ = _accept_batch(p, jnp.stack([p, p, p]), 2, 2000, seed=2)
+    assert ((toks >= 0) & (toks < 4)).all()
+
+
+def test_disjoint_supports_always_reject():
+    p_d = jnp.asarray([1.0, 0.0, 0.0, 0.0])
+    p_v = jnp.asarray([0.0, 0.5, 0.5, 0.0])
+    toks, n_acc = _accept_batch(p_d, jnp.stack([p_v, p_v]), 1, 500, seed=3)
+    assert (n_acc == 0).all()
+    # the correction token comes from the residual = p_verify itself
+    assert set(np.unique(toks[:, 0])) <= {1, 2}
+
+
+def test_greedy_is_rejection_rule_with_onehot():
+    """temperature == 0 rows: filtered_probs returns one-hot argmax and
+    the sampled branch reduces to longest-prefix accept — both branches
+    of spec_accept agree token for token."""
+    b, g, v = 8, 3, 16
+    key = jax.random.PRNGKey(4)
+    logits_d = jax.random.normal(key, (b, g, v))
+    logits_v = jax.random.normal(jax.random.fold_in(key, 1), (b, g + 1, v))
+    p_d = filtered_probs(logits_d, jnp.zeros((b, g)),
+                         jnp.zeros((b, g), jnp.int32))
+    p_v = filtered_probs(logits_v, jnp.zeros((b, g + 1)),
+                         jnp.zeros((b, g + 1), jnp.int32))
+    drafts = jnp.argmax(logits_d, -1)  # what a greedy drafter proposes
+    gi = jnp.full((b,), g, jnp.int32)
+    ka = jax.random.split(jax.random.PRNGKey(5), b)
+    kr = jax.random.split(jax.random.PRNGKey(6), b)
+    t_greedy, n_greedy = spec_accept(drafts, p_d, p_v, gi, ka, kr,
+                                     need_sample=False)
+    t_samp, n_samp = spec_accept(drafts, p_d, p_v, gi, ka, kr,
+                                 need_sample=True)
+    np.testing.assert_array_equal(np.asarray(n_greedy), np.asarray(n_samp))
+    np.testing.assert_array_equal(np.asarray(t_greedy), np.asarray(t_samp))
+
+
+def test_per_lane_draft_lengths():
+    """gi varies per row: slots past a row's gi are ignored no matter
+    what garbage they hold."""
+    b, g, v = 3, 4, 8
+    p = jnp.full((b, g, v), 1.0 / v)
+    p_v = jnp.full((b, g + 1, v), 1.0 / v)
+    drafts = jnp.zeros((b, g), jnp.int32)
+    gi = jnp.asarray([0, 2, 4], jnp.int32)
+    ka = jax.random.split(jax.random.PRNGKey(7), b)
+    kr = jax.random.split(jax.random.PRNGKey(8), b)
+    toks, n_acc = spec_accept(drafts, p, p_v, gi, ka, kr, need_sample=True)
+    assert (np.asarray(n_acc) <= np.asarray(gi)).all()
+    assert int(n_acc[0]) == 0  # nothing proposed, only the bonus
+
+
+def test_sampled_engine_run():
+    """End-to-end sampled run: drafter == verifier accepts every proposal
+    (the min(1, p_v/p_d) ratio is 1), requests finish on budget, and
+    mixed greedy/sampled batches coexist.  Sampled streams are exact in
+    *distribution*, not bitwise — accepted draws consume the drafter's
+    fold_in RNG stream, so only the rejection-rule unit tests (above) and
+    the greedy parity tests lock token-level behavior."""
+    verify, _ = _trees(seed=0)
+    prompts = _prompts(CFG, [6, 4])
+    sps = [
+        SamplingParams(max_new_tokens=10, temperature=0.9, top_k=16),
+        SamplingParams(max_new_tokens=10),  # greedy rides in the same batch
+    ]
+    greedy_base = _stream(
+        DecodeEngine(MODEL, verify, max_batch=2, max_len=32, seed=11,
+                     donate=False),
+        prompts, [SamplingParams(max_new_tokens=10)] * 2,
+    )
+    eng = DecodeEngine(MODEL, verify, max_batch=2, max_len=32, seed=11,
+                       spec_gamma=3, verify_params=verify)
+    (toks, reasons) = _stream(eng, prompts, sps)
+    assert eng.stats()["acceptance_rate"] == 1.0
+    assert [len(t) for t in toks] == [10, 10]
+    assert reasons == ["length", "length"]
+    assert all(0 <= t < CFG.vocab for t in toks[0])
+    # the greedy lane is unaffected by its sampled neighbor
+    assert toks[1] == greedy_base[0][1]
+
+
+# ---------------------------------------------------------------------------
+# rollback: page-conservation under speculative churn
+# ---------------------------------------------------------------------------
+
+
+def _check_conserved(pool):
+    assert pool.free_pages + pool.used_pages == pool.layout.num_pages
+    assert pool.used_pages == int((pool._ref > 0).sum())
+    for lane_map in pool._full_pages:
+        for pid in lane_map.values():
+            assert pool._ref[pid] > 0, f"mapped page {pid} has no reference"
+
+
+def test_rollback_conservation_random_churn():
+    """400 random ops — admissions (some forking a live lane's prefix),
+    speculative reservations (``ensure_steps`` over a gamma+1 horizon)
+    followed by *partial rollback* to a random accepted length, COW
+    drains, preemptions — never break ``free + used == num_pages``; at
+    the end every refcount is zero."""
+    pool = PagedKVPool(MODEL, max_batch=4, max_len=32, num_pages=24,
+                       page_size=4)
+    rng = random.Random(11)
+    gamma = 6
+    lens: dict[int, int] = {}  # lane -> committed length
+
+    for _ in range(400):
+        op = rng.random()
+        idle = [l for l in range(pool.max_batch) if l not in lens]
+        live = sorted(lens)
+        if op < 0.35 and idle:
+            lane = rng.choice(idle)
+            plen = rng.randint(2, 16)
+            shared, shared_len = (), 0
+            donors = [l for l in live if lens[l] >= 2]
+            if donors and rng.random() < 0.5:
+                d = rng.choice(donors)
+                shared_len = rng.randint(1, min(lens[d], plen) - 1)
+                full, tail = pool.prompt_pages(d, shared_len)
+                shared = tuple(full + ([tail] if tail is not None else []))
+            if pool.alloc_prefill(lane, plen, shared_full=shared,
+                                  shared_len=shared_len):
+                lens[lane] = plen
+        elif op < 0.80 and live:
+            # one speculative round: reserve the full horizon, then
+            # commit a random prefix (0..gamma accepted drafts + bonus)
+            lane = rng.choice(live)
+            horizon = min(gamma + 1, pool.max_len - lens[lane])
+            if horizon < 1 or not pool.ensure_steps(lane, lens[lane],
+                                                    horizon):
+                pool.release(lane)
+                del lens[lane]
+            else:
+                accepted = rng.randint(1, horizon)
+                lens[lane] += accepted
+                pool.rollback(lane, lens[lane])
+        elif op < 0.9 and live:
+            lane = rng.choice(live)
+            pool.release(lane)
+            del lens[lane]
+        elif pool.pending_copies:
+            pool.cache = pool.apply_pending(pool.cache)
+            assert not pool.pending_copies
+        _check_conserved(pool)
+
+    for lane in list(lens):
+        pool.release(lane)
+    pool.cache = pool.apply_pending(pool.cache)
+    assert pool.free_pages == pool.layout.num_pages
+    assert pool.used_pages == 0
+    assert (pool._ref == 0).all()
+
+
+def test_rollback_keeps_shared_prefix_pages():
+    """Rolling a fork back through shared territory decrefs — the donor's
+    prefix pages must survive with their own reference intact."""
+    pool = PagedKVPool(MODEL, max_batch=2, max_len=32, num_pages=16,
+                       page_size=4)
+    assert pool.alloc_prefill(0, 12)  # 3 full pages
+    full, _ = pool.prompt_pages(0, 12)
+    assert pool.alloc_prefill(1, 13, shared_full=tuple(full), shared_len=12)
+    assert all(pool._ref[p] == 2 for p in full)
+    # lane 1 speculates past the shared prefix, then rejects everything
+    assert pool.ensure_steps(1, 13, 7)
+    pool.rollback(1, 14)
+    _check_conserved(pool)
+    # shared pages keep the donor's ref; only lane 1's over-reservation
+    # came back
+    assert all(pool._ref[p] >= 1 for p in full)
+    pool.release(0)
+    pool.release(1)
+    pool.cache = pool.apply_pending(pool.cache)
+    assert (pool._ref == 0).all()
+
+
+def test_rollback_keeps_next_write_page():
+    """The page holding position new_len stays mapped (the next decode
+    token writes there), pages strictly past it free."""
+    pool = PagedKVPool(MODEL, max_batch=1, max_len=32, num_pages=16,
+                       page_size=4)
+    assert pool.alloc_prefill(0, 4)
+    assert pool.ensure_steps(0, 4, 8)  # pages for positions 4..11
+    used_before = pool.used_pages
+    pool.rollback(0, 5)  # keep page 1 (position 5 writes page 1)
+    assert pool.used_pages < used_before
+    assert 1 in pool._full_pages[0]
+    assert 2 not in pool._full_pages[0]
+    _check_conserved(pool)
+
+
+# ---------------------------------------------------------------------------
+# gating + gamma selection
+# ---------------------------------------------------------------------------
+
+
+def test_gating_errors():
+    verify, comp = _trees(seed=0)
+    with pytest.raises(ValueError, match="verify_params"):
+        DecodeEngine(MODEL, comp, max_batch=1, max_len=16, spec_gamma=2)
+    with pytest.raises(ValueError, match="sync scheduler"):
+        DecodeEngine(MODEL, comp, max_batch=1, max_len=16, spec_gamma=2,
+                     verify_params=verify, max_steps_per_dispatch=4)
+    with pytest.raises(ValueError, match=">= 1"):
+        DecodeEngine(MODEL, comp, max_batch=1, max_len=16, spec_gamma=0,
+                     verify_params=verify)
+    with pytest.raises(ValueError, match="max_len"):
+        DecodeEngine(MODEL, comp, max_batch=1, max_len=16, spec_gamma=16,
+                     verify_params=verify)
+
+
+def test_gating_windowed_arch():
+    cfg = get_config("recurrentgemma-9b", smoke=True)
+    model = TransformerLM(cfg)
+    sparse, comp = _trees(cfg=cfg, model=model)
+    with pytest.raises(ValueError, match="window"):
+        DecodeEngine(model, comp, max_batch=1, max_len=16, spec_gamma=2,
+                     verify_params=sparse)
+
+
+def test_gating_ssm_arch():
+    cfg = get_config("mamba2-2.7b", smoke=True)
+    model = TransformerLM(cfg)
+    sparse, comp = _trees(cfg=cfg, model=model)
+    with pytest.raises(ValueError, match="SSM"):
+        DecodeEngine(model, comp, max_batch=1, max_len=16, spec_gamma=2,
+                     verify_params=sparse)
+
+
+def test_pick_spec_gamma_roofline():
+    # cheaper drafter -> longer drafts pay off
+    cheap = DecodeEngine.pick_spec_gamma(10, 1000)
+    parity = DecodeEngine.pick_spec_gamma(1000, 1000)
+    assert cheap > parity >= 1
+    # a worthless drafter (alpha ~ 0) never drafts more than the minimum
+    assert DecodeEngine.pick_spec_gamma(500, 1000, alpha=0.01) == 1
+
+
+def test_spec_gamma_auto_resolves():
+    verify, comp = _trees(seed=0)
+    eng = DecodeEngine(MODEL, comp, max_batch=1, max_len=32,
+                       spec_gamma="auto", verify_params=verify)
+    assert 1 <= eng.spec_gamma < 32
+    st_keys = {"spec_gamma", "acceptance_rate", "accepted_per_verify",
+               "draft_tokens", "verify_tokens", "bytes_per_accepted_token",
+               "spec_per_request"}
+    assert st_keys <= set(eng.stats())
